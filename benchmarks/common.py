@@ -1,0 +1,70 @@
+"""Shared benchmark harness utilities.
+
+Metrics reported per paper experiment:
+  * FPR           — paper's quality metric (identical definitions).
+  * page-miss     — LRU cache model at 4-KiB fetch granularity (the unit of
+                    the paper's locality mechanism; see DESIGN.md §2).
+  * line-miss     — same model at 64-B lines (the paper's Valgrind setting).
+  * block DMAs    — TPU metric: HBM→VMEM tile fetches the Pallas probe
+                    kernel would issue for the trace (1 resident tile/rep).
+  * wall time     — wall-clock of the jitted JAX implementation on this CPU
+                    (reported for completeness; the locality effect on real
+                    hardware is captured by the miss/DMA columns, which is
+                    what Valgrind measured in the paper too).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import cache_model
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def locality_metrics(locs: np.ndarray, L: int,
+                     l1_bytes: int = 2 << 20) -> dict[str, float]:
+    trace = cache_model.probe_trace_from_locations(locs)
+    page_miss, _ = cache_model.two_level_miss_rates(
+        trace, l1_bytes=l1_bytes, line_bytes=4096)
+    line_miss, _ = cache_model.two_level_miss_rates(
+        trace, l1_bytes=l1_bytes, line_bytes=64)
+    dmas = cache_model.count_block_dmas_partitioned(locs, L)
+    return {
+        "page_miss": page_miss,
+        "line_miss": line_miss,
+        "dma_switches": dmas["switches"],
+        "dma_per_probe": dmas["switches"] / max(dmas["accesses"], 1),
+    }
+
+
+class Csv:
+    def __init__(self, name: str, cols: list[str]):
+        self.name = name
+        self.cols = cols
+        print(f"\n== {name} ==")
+        print(",".join(cols))
+
+    def row(self, *vals):
+        out = []
+        for v in vals:
+            if isinstance(v, float):
+                out.append(f"{v:.6g}")
+            else:
+                out.append(str(v))
+        print(",".join(out))

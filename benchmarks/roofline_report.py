@@ -1,0 +1,47 @@
+"""Roofline report: reads runs/dryrun/*.json and prints the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline import analysis
+
+
+def load_rows(dirpath: str = "runs/dryrun") -> list[analysis.Roofline]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        rows.append(analysis.Roofline(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            chips=r["chips"], flops_per_chip=r["flops_per_chip"],
+            bytes_per_chip=r["bytes_per_chip"],
+            coll_bytes_per_chip=r["coll_bytes_per_chip"],
+            coll_breakdown=r.get("coll_breakdown", {}),
+            model_flops=r.get("model_flops"),
+            memory_stats=r.get("memory_stats"),
+            matmul_flops_f32=r.get("matmul_flops_f32", 0.0),
+            matmul_flops_lp=r.get("matmul_flops_lp", 0.0),
+        ))
+    return rows
+
+
+def report(dirpath: str = "runs/dryrun") -> None:
+    rows = load_rows(dirpath)
+    if not rows:
+        print(f"(no dry-run records in {dirpath} — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return
+    for mesh in ("single", "multi"):
+        sel = [r for r in rows if r.mesh == mesh]
+        if not sel:
+            continue
+        print(f"\n== roofline ({mesh}-pod, {sel[0].chips} chips) ==")
+        print(analysis.format_table(sel))
+
+
+if __name__ == "__main__":
+    report()

@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-param granite-style LM for a few hundred
+steps on the host devices, with the IDL-BF dedup pipeline, checkpointing and
+fault-tolerance hooks — the full production loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+
+import jax
+
+from repro.data import lm_pipeline
+from repro.models import transformer as tf
+from repro.train import loop, optimizer as opt_mod
+
+
+def build_config() -> tf.LMConfig:
+    # ~100M params: 12L x 512d x 8H, vocab 8192
+    return tf.LMConfig(
+        name="granite-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=2048, vocab=8192, act="silu", gated_mlp=True,
+        remat=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="runs/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = build_config()
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params / 1e6:.0f}M params)")
+
+    pipe = lm_pipeline.LMPipeline(lm_pipeline.LMPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        dedup=True, dedup_scheme="idl"))
+
+    params = tf.lm_init(jax.random.PRNGKey(0), cfg)
+    lcfg = loop.LoopConfig(
+        total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir,
+        log_every=10, grad_clip=1.0)
+
+    result = loop.run(
+        lambda p, b: tf.lm_loss(p, b, cfg, loss_chunks=8),
+        params, opt_mod.adamw(3e-4),
+        lambda: {k: jax.numpy.asarray(v) for k, v in pipe.next_batch().items()},
+        lcfg,
+        pipeline_state=pipe.state_dict,
+        restore_pipeline=pipe.load_state_dict,
+    )
+
+    first = result.history[0]["loss"]
+    last = result.history[-1]["loss"]
+    print(f"\nstep {result.history[-1]['step']}: loss {first:.3f} -> {last:.3f}"
+          f" (dedup dropped {pipe.dropped} docs)")
+    if result.resumed_from:
+        print(f"(resumed from checkpoint step {result.resumed_from})")
+    assert last < first, "loss must decrease"
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro — IDL-hash gene-search framework on JAX (multi-pod).
+
+x64 note: packed 31-mers need 62 bits, so the CPU reference path enables
+jax_enable_x64. TPU has no native 64-bit integer lanes, so everything that
+must lower for the TPU target (kernels, serving, model code) is strictly
+32-bit — kmers travel as (hi, lo) uint32 pairs there (see
+``repro.core.hashing.hash_pair32`` and DESIGN.md §2). Model code pins dtypes
+explicitly, so the flag does not change training numerics.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""Architecture registry — one module per assigned architecture.
+
+    from repro.configs import get, all_archs
+    spec = get("arctic-480b")
+    cfg = spec.make_config()
+"""
+
+from repro.configs.base import ArchSpec, ShapeCell, all_archs, get  # noqa: F401

@@ -1,0 +1,170 @@
+"""Arch registry: every assigned architecture is a selectable config.
+
+An :class:`ArchSpec` bundles, per architecture:
+  * the FULL published config (exact numbers from the assignment),
+  * a REDUCED smoke config (same family, tiny sizes) for CPU tests,
+  * ``shapes``: the architecture's own input-shape set,
+  * ``input_specs(shape)`` — ShapeDtypeStruct stand-ins for every input
+    (weak-type-correct, shardable, no device allocation),
+  * ``abstract_state(shape)`` — ShapeDtypeStructs of the lowered function's
+    carried state (params / TrainState / KV cache / index),
+  * ``step_fn(shape)`` — the function the dry-run lowers (train_step or
+    serve_step, as the shape's kind dictates),
+  * ``sharding_rules(mesh)`` + per-leaf partition specs for state and batch.
+
+The dry-run (launch/dryrun.py) iterates the registry × shapes × meshes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture × input-shape) dry-run cell."""
+
+    name: str
+    kind: str                 # "train" | "serve"
+    meta: dict[str, Any]
+    skip_reason: str | None = None
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    name: str
+    family: str               # "lm" | "gnn" | "recsys" | "genesearch"
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    shapes: dict[str, ShapeCell]
+    # fns taking (config, shape_cell) — family modules fill these in
+    input_specs: Callable[[Any, ShapeCell], dict]
+    abstract_state: Callable[[Any, ShapeCell], Any]
+    step_fn: Callable[[Any, ShapeCell], Callable]
+    state_spec_fn: Callable[[Any, str, tuple], P]   # (cfg, path, shape) -> spec
+    batch_spec_fn: Callable[[Any, str, tuple], P]
+    model_flops_fn: Callable[[Any, ShapeCell], float] | None = None
+
+    def cells(self) -> list[tuple[str, ShapeCell]]:
+        return [(n, c) for n, c in self.shapes.items()]
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"duplicate arch {spec.name}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    # import side-effect registration, deferred to avoid cycles
+    from repro.configs import (  # noqa: F401
+        arctic_480b, equiformer_v2, fm, granite_20b, granite_moe_1b_a400m,
+        idl_genesearch, internlm2_20b, mind, nemotron_4_340b, sasrec,
+        two_tower_retrieval,
+    )
+
+
+# --------------------------------------------------------------------------
+# sharding helpers shared by family modules
+# --------------------------------------------------------------------------
+
+DP_AXES = ("pod", "data")
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def valid_spec(mesh: Mesh, shape: tuple, spec: P) -> P:
+    """Drop mesh axes absent from this mesh (e.g. 'pod' on single-pod) and
+    sharded dims the axis size doesn't divide (GSPMD-safe fallback)."""
+    fixed = []
+    for i, ax in enumerate(spec):
+        if i >= len(shape):
+            break
+        if ax is not None:
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+            ax = None if not axes else (axes[0] if len(axes) == 1 else axes)
+        if ax is None:
+            fixed.append(None)
+            continue
+        if shape[i] % axis_size(mesh, ax):
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    return P(*fixed)
+
+
+def tree_shardings(
+    mesh: Mesh, tree, spec_fn: Callable[[str, tuple], P]
+):
+    """Build a NamedSharding pytree for ``tree`` of ShapeDtypeStructs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(_pp(p) for p in path)
+        spec = spec_fn(pstr, tuple(leaf.shape))
+        out.append(NamedSharding(mesh, valid_spec(mesh, tuple(leaf.shape), spec)))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), out
+    )
+
+
+def _pp(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "name"):
+        return str(p.name)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def generic_state_spec(path: str, shape: tuple) -> P:
+    """Fallback FSDP heuristic: biggest dim over (pod,data), next over model.
+
+    Used by families without bespoke rules; exact-name rules in the family
+    modules take precedence.
+    """
+    if len(shape) == 0 or max(shape) == 1 or len(shape) == 1:
+        return P()
+    order = np.argsort(shape)[::-1]
+    spec: list = [None] * len(shape)
+    spec[int(order[0])] = DP_AXES
+    if len(shape) >= 2 and shape[int(order[1])] > 1:
+        spec[int(order[1])] = "model"
+    return P(*spec)

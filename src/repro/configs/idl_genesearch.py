@@ -1,0 +1,92 @@
+"""idl-genesearch — the paper's own system as a first-class architecture.
+
+Bit-sliced COBS-style index over 1024 files, queried with batched MSMT
+(serve_step). The hashing scheme is selectable "idl" | "rh" — the dry-run
+lowers the IDL variant; benchmarks compare both. This is the cell most
+representative of the paper's technique (perf-hillclimbed in §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.serving import genesearch as gs
+
+DP = base.DP_AXES
+
+
+def full_config() -> gs.GeneSearchConfig:
+    return gs.GeneSearchConfig(
+        name="idl-genesearch", n_files=1024, m=1 << 26,
+        k=31, t=16, L=1 << 17, eta=4, read_len=230, scheme="idl",
+    )
+
+
+def smoke_config() -> gs.GeneSearchConfig:
+    return gs.GeneSearchConfig(
+        name="idl-genesearch-smoke", n_files=64, m=1 << 18,
+        k=31, t=12, L=1 << 10, eta=2, read_len=100, scheme="idl",
+    )
+
+
+def shapes() -> dict[str, base.ShapeCell]:
+    return {
+        "serve_p99": base.ShapeCell(
+            "serve_p99", "serve", {"batch": 256}),
+        "serve_bulk": base.ShapeCell(
+            "serve_bulk", "serve", {"batch": 16384}),
+    }
+
+
+def input_specs(cfg: gs.GeneSearchConfig, cell: base.ShapeCell) -> dict:
+    b = cell.meta["batch"]
+    return {"queries": jax.ShapeDtypeStruct((b, cfg.read_len), jnp.uint8)}
+
+
+def abstract_state(cfg: gs.GeneSearchConfig, cell: base.ShapeCell):
+    return jax.eval_shape(lambda: gs.empty_index(cfg))
+
+
+def step_fn(cfg: gs.GeneSearchConfig, cell: base.ShapeCell):
+    def serve(index, batch):
+        return gs.serve_step(index, batch["queries"], cfg)
+    return serve
+
+
+def state_spec(cfg, path: str, shape: tuple) -> P:
+    # index (m, n_files/32): rows replicated, file slice over 'model' — the
+    # per-query row gather is then device-local (see serving/genesearch.py)
+    return P(None, "model")
+
+
+def batch_spec(cfg, path: str, shape: tuple) -> P:
+    return P(DP, None)
+
+
+def model_flops(cfg: gs.GeneSearchConfig, cell: base.ShapeCell) -> float:
+    b = cell.meta["batch"]
+    n_k = cfg.n_kmers
+    # per kmer: ~w hash rounds of a few ALU ops + η gathers of F/32 words
+    hash_ops = b * n_k * (cfg.k - cfg.t + 1) * 16
+    and_ops = b * n_k * cfg.eta * cfg.file_words
+    return float(hash_ops + and_ops)
+
+
+SPEC = base.register(base.ArchSpec(
+    name="idl-genesearch",
+    family="genesearch",
+    make_config=full_config,
+    make_smoke_config=smoke_config,
+    shapes=shapes(),
+    input_specs=input_specs,
+    abstract_state=abstract_state,
+    step_fn=step_fn,
+    state_spec_fn=state_spec,
+    batch_spec_fn=batch_spec,
+    model_flops_fn=model_flops,
+))

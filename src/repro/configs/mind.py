@@ -1,0 +1,93 @@
+"""mind [recsys] — multi-interest dynamic-routing capsule network.
+
+embed_dim=64 n_interests=4 capsule_iters=3. [arXiv:1904.08030; unverified]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import recsys_common
+from repro.models import recsys
+
+
+def full_config() -> recsys.MINDConfig:
+    return recsys.MINDConfig(
+        name="mind", embed_dim=64, n_interests=4, capsule_iters=3,
+        seq_len=50, n_items=1 << 20,
+    )
+
+
+def smoke_config() -> recsys.MINDConfig:
+    return recsys.MINDConfig(
+        name="mind-smoke", embed_dim=16, n_interests=2, capsule_iters=2,
+        seq_len=12, n_items=1 << 10,
+    )
+
+
+def score(params, batch, cfg):
+    """Max-over-interests dot against per-request candidates."""
+    v = recsys.mind_interests(params, batch["seq"], batch["mask"], cfg)
+    rows = recsys.hash_rows(batch["cands"], cfg.n_items, cfg.hash_scheme)
+    ce = jnp.take(params["item_table"], rows, axis=0)          # (B, C, d)
+    s = jnp.einsum("bkd,bcd->bkc", v, ce)
+    return jnp.max(s, axis=1).astype(jnp.float32)
+
+
+def retrieval(params, batch, cfg):
+    v = recsys.mind_interests(params, batch["seq"], batch["mask"], cfg)[0]
+    rows = recsys.hash_rows(batch["cands"], cfg.n_items, cfg.hash_scheme)
+    ce = jnp.take(params["item_table"], rows, axis=0)          # (N, d)
+    return jnp.max(ce @ v.T, axis=-1).astype(jnp.float32)
+
+
+def train_inputs(cfg, cell):
+    b, s = cell.meta["batch"], cfg.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    return {
+        "seq": jax.ShapeDtypeStruct((b, s), i32),
+        "mask": jax.ShapeDtypeStruct((b, s), f32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+        "negs": jax.ShapeDtypeStruct((b, 10), i32),
+    }
+
+
+def score_inputs(cfg, cell):
+    b = cell.meta["batch"]
+    return {
+        "seq": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.float32),
+        "cands": jax.ShapeDtypeStruct((b, 100), jnp.int32),
+    }
+
+
+def retrieval_inputs(cfg, cell):
+    return {
+        "seq": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.float32),
+        "cands": jax.ShapeDtypeStruct((cell.meta["candidates"],), jnp.int32),
+    }
+
+
+def model_flops(cfg: recsys.MINDConfig, cell) -> float:
+    b = cell.meta["batch"]
+    s, d, k = cfg.seq_len, cfg.embed_dim, cfg.n_interests
+    routing = cfg.capsule_iters * (2 * k * s * d * 2)
+    fwd = b * (s * 2 * d * d + routing)
+    if cell.kind == "train":
+        return 3.0 * fwd
+    if cell.meta.get("mode") == "retrieval":
+        return fwd + 2.0 * cell.meta["candidates"] * d * k
+    return fwd + 2.0 * b * 100 * d * k
+
+
+SPEC = recsys_common.make_recsys_spec(
+    "mind", full_config, smoke_config,
+    init_fn=recsys.mind_init,
+    loss_fn=recsys.mind_loss,
+    score_fn=score, retrieval_fn=retrieval,
+    train_inputs=train_inputs, score_inputs=score_inputs,
+    retrieval_inputs=retrieval_inputs,
+    model_flops_fn=model_flops,
+)

@@ -1,0 +1,110 @@
+"""RecSys-family plumbing: shared shapes + sharding rules.
+
+Shapes (assignment):
+  train_batch     batch=65,536     -> train_step
+  serve_p99       batch=512        -> forward scoring (online)
+  serve_bulk      batch=262,144    -> forward scoring (offline)
+  retrieval_cand  batch=1 x 1M candidates -> batched-dot retrieval scoring
+
+Embedding tables are row-sharded over 'model' (the assignment's hot path);
+batches over ('pod','data'); tower/MLP weights FSDP over ('pod','data').
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base
+from repro.train import optimizer as opt_mod, train_state as ts
+
+DP = base.DP_AXES
+
+
+def recsys_shapes() -> dict[str, base.ShapeCell]:
+    return {
+        "train_batch": base.ShapeCell(
+            "train_batch", "train", {"batch": 65536}),
+        "serve_p99": base.ShapeCell(
+            "serve_p99", "serve", {"batch": 512, "mode": "score"}),
+        "serve_bulk": base.ShapeCell(
+            "serve_bulk", "serve", {"batch": 262144, "mode": "score"}),
+        "retrieval_cand": base.ShapeCell(
+            "retrieval_cand", "serve",
+            {"batch": 1, "candidates": 1_000_000, "mode": "retrieval"}),
+    }
+
+
+def state_spec(cfg, path: str, shape: tuple) -> P:
+    parts = [p for p in path.split("/") if p]
+    if parts and parts[-1] == "step" or len(shape) == 0:
+        return P()
+    name = parts[-1]
+    if name == "m" and len(parts) >= 2:
+        name = parts[-2]
+    if ("table" in name or name == "linear" or name == "pos") and len(shape) >= 2:
+        return P("model", *([None] * (len(shape) - 1)))   # row-sharded tables
+    if len(shape) >= 2:
+        return P(*((None,) * (len(shape) - 2) + (DP, "model")))
+    return P()
+
+
+def batch_spec(cfg, path: str, shape: tuple) -> P:
+    if len(shape) == 0:
+        return P()
+    return P(DP, *([None] * (len(shape) - 1)))
+
+
+def make_recsys_spec(
+    name: str, full_cfg, smoke_cfg, *,
+    init_fn: Callable, loss_fn: Callable,
+    score_fn: Callable, retrieval_fn: Callable,
+    train_inputs: Callable, score_inputs: Callable, retrieval_inputs: Callable,
+    model_flops_fn=None,
+) -> base.ArchSpec:
+    """Assemble an ArchSpec from the per-arch fns.
+
+    All fns take (cfg, ...): init_fn(key, cfg); loss_fn(params, batch, cfg);
+    score_fn(params, batch, cfg) -> scores; retrieval_fn(params, batch, cfg).
+    *_inputs(cfg, cell) -> dict of ShapeDtypeStructs.
+    """
+
+    def input_specs(cfg, cell):
+        if cell.kind == "train":
+            return train_inputs(cfg, cell)
+        if cell.meta["mode"] == "score":
+            return score_inputs(cfg, cell)
+        return retrieval_inputs(cfg, cell)
+
+    def abstract_state(cfg, cell):
+        params = jax.eval_shape(
+            lambda k: init_fn(k, cfg), jax.random.PRNGKey(0)
+        )
+        if cell.kind == "train":
+            return jax.eval_shape(
+                lambda p: ts.TrainState.create(p, opt_mod.adamw(1e-3)), params
+            )
+        return params
+
+    def step_fn(cfg, cell):
+        if cell.kind == "train":
+            return ts.make_train_step(
+                lambda p, b: loss_fn(p, b, cfg), opt_mod.adamw(1e-3)
+            )
+        if cell.meta["mode"] == "score":
+            return lambda params, batch: score_fn(params, batch, cfg)
+        return lambda params, batch: retrieval_fn(params, batch, cfg)
+
+    return base.register(base.ArchSpec(
+        name=name, family="recsys",
+        make_config=full_cfg, make_smoke_config=smoke_cfg,
+        shapes=recsys_shapes(),
+        input_specs=input_specs,
+        abstract_state=abstract_state,
+        step_fn=step_fn,
+        state_spec_fn=state_spec,
+        batch_spec_fn=batch_spec,
+        model_flops_fn=model_flops_fn,
+    ))

@@ -1,0 +1,6 @@
+"""Core library: the paper's IDL hash family + BF/COBS/RAMBO indices."""
+
+from repro.core.idl import IDLConfig  # noqa: F401
+from repro.core.bloom import BloomFilter  # noqa: F401
+from repro.core.cobs import Cobs  # noqa: F401
+from repro.core.rambo import Rambo  # noqa: F401

@@ -1,0 +1,135 @@
+"""Partitioned Bloom filters over IDL / RH / LSH location streams.
+
+Canonical in-JAX representation: ``uint8`` array of m entries in {0,1}
+("bit-per-byte") — scatter-set and gather are native XLA ops and dedup-safe.
+``pack_bits`` / ``unpack_bits`` convert to the 32-bit-word packed layout used
+by the Pallas kernels (`repro.kernels.idl_probe` / `idl_insert`) and by the
+serving engine, where memory-realism matters.
+
+The Blocked Bloom filter (Putze et al.) is provided as the orthogonal
+baseline the paper discusses in §3.3: all η probes of one key confined to a
+single cache-line-sized block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, idl as idl_mod
+
+
+def empty_filter(m: int) -> jax.Array:
+    return jnp.zeros((m,), dtype=jnp.uint8)
+
+
+def insert_locations(bf: jax.Array, locs: jax.Array) -> jax.Array:
+    """Set bits at (η, n) or flat locations. Donates nothing; pure."""
+    return bf.at[locs.reshape(-1)].set(np.uint8(1))
+
+
+def query_locations(bf: jax.Array, locs: jax.Array) -> jax.Array:
+    """AND over the η axis → (n,) bool membership."""
+    bits = bf[locs]  # (η, n) gather
+    return jnp.all(bits == np.uint8(1), axis=0)
+
+
+@dataclasses.dataclass
+class BloomFilter:
+    """A partitioned BF bound to a hashing scheme ("idl" | "rh" | "lsh")."""
+
+    cfg: idl_mod.IDLConfig
+    scheme: str = "idl"
+    bits: jax.Array | None = None
+
+    def __post_init__(self):
+        if self.bits is None:
+            self.bits = empty_filter(self.cfg.m)
+
+    # --- sequence (read / genome chunk) API: the paper's Alg. 1 / Alg. 2 ---
+    def insert_sequence(self, codes: jax.Array) -> "BloomFilter":
+        locs = idl_mod.locations(self.cfg, codes, self.scheme)
+        return dataclasses.replace(self, bits=insert_locations(self.bits, locs))
+
+    def query_sequence(self, codes: jax.Array) -> jax.Array:
+        """Per-kmer membership bits for all stride-1 kmers of the read."""
+        locs = idl_mod.locations(self.cfg, codes, self.scheme)
+        return query_locations(self.bits, locs)
+
+    def membership(self, codes: jax.Array) -> jax.Array:
+        """MT(Q, G): True iff every kmer of Q passes (Definition 2)."""
+        return jnp.all(self.query_sequence(codes))
+
+    # --- arbitrary kmer-batch API ---
+    def insert_kmers(self, kmer_arr: jax.Array) -> "BloomFilter":
+        locs = self._kmer_locs(kmer_arr)
+        return dataclasses.replace(self, bits=insert_locations(self.bits, locs))
+
+    def query_kmers(self, kmer_arr: jax.Array) -> jax.Array:
+        return query_locations(self.bits, self._kmer_locs(kmer_arr))
+
+    def _kmer_locs(self, kmer_arr: jax.Array) -> jax.Array:
+        if self.scheme == "idl":
+            return idl_mod.idl_locations_kmer_batch(self.cfg, kmer_arr)
+        if self.scheme == "rh":
+            return idl_mod.rh_locations(self.cfg, kmer_arr)
+        raise ValueError(f"kmer-batch API not defined for scheme {self.scheme!r}")
+
+    @property
+    def fill_fraction(self) -> jax.Array:
+        return jnp.mean(self.bits.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Blocked Bloom filter (Putze et al. 2007) — §3.3 orthogonal baseline.
+# ---------------------------------------------------------------------------
+
+def blocked_locations(
+    kmer_arr: jax.Array, m: int, eta: int, block_bits: int
+) -> jax.Array:
+    """All η probes inside one block of ``block_bits`` chosen by key hash."""
+    n_blocks = m // block_bits
+    blk = hashing.hash_to_range(kmer_arr, 0xB10C, n_blocks).astype(jnp.uint32)
+    base = blk * np.uint32(block_bits)
+    locs = [
+        base + hashing.hash_to_range(kmer_arr, 0xB10C + 31 * (j + 1), block_bits)
+        for j in range(eta)
+    ]
+    return jnp.stack(locs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Packed-word layout (used by kernels + serving; 32 bits/word).
+# ---------------------------------------------------------------------------
+
+def pack_bits(bf_u8: jax.Array) -> jax.Array:
+    """(m,) uint8 {0,1} -> (m/32,) uint32 little-bit-endian words."""
+    m = bf_u8.shape[0]
+    if m % 32:
+        raise ValueError(f"m={m} must be a multiple of 32")
+    w = bf_u8.reshape(-1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(w << shifts[None, :], axis=1).astype(jnp.uint32)
+
+
+def unpack_bits(words: jax.Array) -> jax.Array:
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & np.uint32(1)
+    return bits.reshape(-1).astype(jnp.uint8)
+
+
+def query_packed(words: jax.Array, locs: jax.Array) -> jax.Array:
+    """Membership test against the packed layout (pure-jnp oracle for kernels)."""
+    word_idx = (locs >> np.uint32(5)).astype(jnp.int32)
+    bit = locs & np.uint32(31)
+    got = (words[word_idx] >> bit) & np.uint32(1)
+    return jnp.all(got == np.uint32(1), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _jit_query_packed(words, locs):
+    return query_packed(words, locs)

@@ -1,0 +1,145 @@
+"""Cache / DMA traffic models for locality accounting.
+
+Two complementary metrics (see DESIGN.md §2):
+
+1. ``LRUCache`` — a software fully-associative LRU cache simulator, mirroring
+   the paper's Valgrind two-level experiment (L1 = 2 MB, L3 = 256 MB, 64 B
+   lines). Feed it the bit-address trace of BF probes; read miss rates.
+
+2. ``count_block_dmas`` — the TPU-native metric: number of HBM→VMEM block
+   DMAs an ideal block-caching kernel (``kernels/idl_probe``) issues for a
+   probe trace, i.e. the number of *changes* in the block-id stream (1-deep
+   cache = the currently-resident VMEM tile), plus the unique-block count
+   (infinite cache lower bound).
+
+Host-side (numpy + dict) — these are measurement tools, not model code.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheStats:
+    accesses: int = 0
+    misses: int = 0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.accesses if self.accesses else 0.0
+
+
+class LRUCache:
+    """Fully-associative LRU over fixed-size lines (addresses in *bits*)."""
+
+    def __init__(self, capacity_bytes: int, line_bytes: int = 64):
+        self.capacity_lines = max(1, capacity_bytes // line_bytes)
+        self.line_bits = line_bytes * 8
+        self._lines: collections.OrderedDict[int, None] = collections.OrderedDict()
+        self.stats = CacheStats()
+
+    def access(self, bit_addr: int) -> bool:
+        """Returns True on miss."""
+        line = bit_addr // self.line_bits
+        self.stats.accesses += 1
+        if line in self._lines:
+            self._lines.move_to_end(line)
+            return False
+        self.stats.misses += 1
+        self._lines[line] = None
+        if len(self._lines) > self.capacity_lines:
+            self._lines.popitem(last=False)
+        return True
+
+    def access_trace(self, bit_addrs: np.ndarray) -> CacheStats:
+        # line-id vectorization then python LRU walk (line ids are small ints)
+        lines = np.asarray(bit_addrs, dtype=np.int64) // self.line_bits
+        ln = self._lines
+        cap = self.capacity_lines
+        misses = 0
+        for line in lines.tolist():
+            if line in ln:
+                ln.move_to_end(line)
+            else:
+                misses += 1
+                ln[line] = None
+                if len(ln) > cap:
+                    ln.popitem(last=False)
+        self.stats.accesses += len(lines)
+        self.stats.misses += misses
+        return self.stats
+
+
+def two_level_miss_rates(
+    bit_addrs: np.ndarray,
+    l1_bytes: int = 2 * 1024 * 1024,
+    l3_bytes: int = 256 * 1024 * 1024,
+    line_bytes: int = 64,
+) -> tuple[float, float]:
+    """Paper's Valgrind setup: (L1 miss rate, L3 miss rate of L1 misses)."""
+    l1 = LRUCache(l1_bytes, line_bytes)
+    l3 = LRUCache(l3_bytes, line_bytes)
+    lines = np.asarray(bit_addrs, dtype=np.int64) // (line_bytes * 8)
+    l1_m = 0
+    l3_m = 0
+    for line in lines.tolist():
+        if l1.access(line * l1.line_bits):
+            l1_m += 1
+            if l3.access(line * l3.line_bits):
+                l3_m += 1
+    n = len(lines)
+    return (l1_m / n if n else 0.0, l3_m / n if n else 0.0)
+
+
+def count_block_dmas(bit_addrs: np.ndarray, block_bits: int) -> dict[str, int]:
+    """TPU model: DMAs issued by a 1-tile-resident VMEM cache + unique blocks.
+
+    ``switches``  — DMA count with a single resident tile (what the
+                    scalar-prefetch Pallas kernel actually issues);
+    ``unique``    — lower bound (infinite VMEM);
+    ``accesses``  — trace length.
+    """
+    blocks = np.asarray(bit_addrs, dtype=np.int64) // block_bits
+    if blocks.size == 0:
+        return {"switches": 0, "unique": 0, "accesses": 0}
+    switches = int(1 + np.count_nonzero(blocks[1:] != blocks[:-1]))
+    return {
+        "switches": switches,
+        "unique": int(len(np.unique(blocks))),
+        "accesses": int(blocks.size),
+    }
+
+
+def count_block_dmas_partitioned(locs: np.ndarray, block_bits: int) -> dict[str, int]:
+    """TPU model for the partitioned-BF probe kernel.
+
+    The kernel keeps one resident VMEM tile *per hash repetition* (η tiles),
+    so block switches are counted per row of the (η, n_kmers) location grid
+    and summed. ``unique`` likewise sums per-row unique blocks (each
+    repetition owns a disjoint sub-range anyway).
+    """
+    locs = np.asarray(locs)
+    if locs.ndim == 1:
+        locs = locs[None, :]
+    tot = {"switches": 0, "unique": 0, "accesses": 0}
+    for row in locs:
+        d = count_block_dmas(row, block_bits)
+        for k in tot:
+            tot[k] += d[k]
+    return tot
+
+
+def probe_trace_from_locations(locs: np.ndarray) -> np.ndarray:
+    """Flatten (η, n_kmers) location grid into the temporal access order.
+
+    The BF probe loop (Alg. 2) iterates kmers outer, η inner — so the trace
+    interleaves the η probes of each kmer: order = locs.T.reshape(-1).
+    """
+    locs = np.asarray(locs)
+    if locs.ndim == 1:
+        return locs
+    return locs.T.reshape(-1)

@@ -1,0 +1,175 @@
+"""Vectorized random-hash (RH) families.
+
+The paper uses MurmurHash3 as its 2-universal RH family. On TPU we need a
+hash that is a handful of integer VPU ops per lane, applied elementwise to
+2-bit-packed kmers held in ``uint32``/``uint64`` registers. We use the
+murmur3/xxhash *finalizer* (an avalanche permutation) combined with a
+per-seed odd multiplier — the standard "strongly universal enough" integer
+hash used by hash-table and sketching literature (Mitzenmacher–Vadhan: simple
+hashes work on entropy-rich data; genomic kmers are entropy-rich).
+
+All functions are pure jnp, shape-polymorphic, and jit/vmap/shard_map safe.
+Seeds are plain python ints or int32 scalars; a family is indexed by seed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Golden-ratio based odd constants (splitmix64 / murmur3 lineage).
+_M1_64 = np.uint64(0xFF51AFD7ED558CCD)
+_M2_64 = np.uint64(0xC4CEB9FE1A85EC53)
+_M1_32 = np.uint32(0x85EBCA6B)
+_M2_32 = np.uint32(0xC2B2AE35)
+_GOLDEN_64 = np.uint64(0x9E3779B97F4A7C15)
+_GOLDEN_32 = np.uint32(0x9E3779B9)
+
+
+def _to_u64(x: jax.Array) -> jax.Array:
+    return x.astype(jnp.uint64)
+
+
+def seed_const64(seed) -> jax.Array:
+    """Derive a well-mixed 64-bit constant from a small integer seed."""
+    s = jnp.asarray(seed, dtype=jnp.uint64)
+    s = (s + _GOLDEN_64) * _M1_64
+    s = s ^ (s >> np.uint64(29))
+    s = s * _M2_64
+    s = s ^ (s >> np.uint64(32))
+    return s | jnp.uint64(1)  # odd multiplier
+
+
+def mix64(x: jax.Array) -> jax.Array:
+    """murmur3 64-bit finalizer (bijective avalanche on uint64)."""
+    x = _to_u64(x)
+    x = x ^ (x >> np.uint64(33))
+    x = x * _M1_64
+    x = x ^ (x >> np.uint64(33))
+    x = x * _M2_64
+    x = x ^ (x >> np.uint64(33))
+    return x
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """murmur3 32-bit finalizer (bijective avalanche on uint32)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1_32
+    x = x ^ (x >> np.uint32(13))
+    x = x * _M2_32
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def hash64(x: jax.Array, seed) -> jax.Array:
+    """Seeded 64-bit hash: full-range uint64 values."""
+    c = seed_const64(seed)
+    return mix64(_to_u64(x) * c + (c >> np.uint64(17)))
+
+
+def hash_to_range(x: jax.Array, seed, m: int) -> jax.Array:
+    """Seeded hash of integer keys into ``[0, m)``.
+
+    Uses the multiply-shift (Lemire) reduction on the top 32 bits of a 64-bit
+    hash: unbiased-enough for any m (not just powers of two) and avoids the
+    modulo pipeline stall on real hardware.
+
+    Returns uint32 (m must fit in uint32).
+    """
+    if m <= 0:
+        raise ValueError(f"range m must be positive, got {m}")
+    if m > (1 << 32):
+        raise ValueError(f"range m={m} exceeds uint32")
+    h = hash64(x, seed)
+    hi = (h >> np.uint64(32)).astype(jnp.uint64)
+    return ((hi * jnp.uint64(m)) >> np.uint64(32)).astype(jnp.uint32)
+
+
+def hash_family_to_range(x: jax.Array, seeds: Sequence[int], m: int) -> jax.Array:
+    """Stack of ``len(seeds)`` independent hashes of x into [0, m).
+
+    Output shape ``(len(seeds),) + x.shape`` (uint32).
+    """
+    return jnp.stack([hash_to_range(x, s, m) for s in seeds], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _jit_hash_to_range(x, seed, m):
+    return hash_to_range(x, seed, m)
+
+
+# ---------------------------------------------------------------------------
+# 32-bit-lane path (TPU target: no native int64 — kmers travel as uint32
+# pairs; used by Pallas kernels and by everything that must lower for TPU).
+# ---------------------------------------------------------------------------
+
+def hash_pair32(hi: jax.Array, lo: jax.Array, seed) -> jax.Array:
+    """Seeded 32-bit hash of a 64-bit key given as (hi, lo) uint32 lanes.
+
+    Two murmur3 finalizer rounds with seed-derived odd multipliers; pure
+    uint32 ALU ops (TPU VPU friendly).
+    """
+    s = jnp.asarray(seed, dtype=jnp.uint32)
+    c1 = (s * _GOLDEN_32) | jnp.uint32(1)
+    c2 = ((s ^ jnp.uint32(0xDEADBEEF)) * _M1_32) | jnp.uint32(1)
+    h = mix32(lo.astype(jnp.uint32) * c1 + c2)
+    h = mix32(h ^ (hi.astype(jnp.uint32) * c2 + c1))
+    return h
+
+
+def hash32_to_range(h32: jax.Array, m: int) -> jax.Array:
+    """Lemire reduction of a uint32 hash into [0, m) without 64-bit mult.
+
+    Splits the 32x32->64 product into two 16-bit halves (TPU-safe)."""
+    if m <= 0 or m > (1 << 31):
+        raise ValueError(f"bad range {m}")
+    h = h32.astype(jnp.uint32)
+    mm = jnp.uint32(m)
+    hi16 = h >> jnp.uint32(16)
+    lo16 = h & jnp.uint32(0xFFFF)
+    # (h * m) >> 32 == (hi16*m + ((lo16*m) >> 16)) >> 16   (all fits uint32
+    # when m < 2^31 and we pre-shift) — compute in two uint32 chunks.
+    top = hi16 * mm                      # < 2^47 -> overflows uint32 if m big
+    # guard: for m < 2^15 the fast path is exact in uint32
+    if m < (1 << 15):
+        return (top + ((lo16 * mm) >> jnp.uint32(16))) >> jnp.uint32(16)
+    # general path: fall back to modulo-free masked reduction for 2^p ranges,
+    # else modulo (still one op per lane).
+    if m & (m - 1) == 0:
+        p = int(m).bit_length() - 1
+        return h >> jnp.uint32(32 - p) if p < 32 else h
+    return h % mm
+
+
+def hash_pair32_to_range(hi: jax.Array, lo: jax.Array, seed, m: int) -> jax.Array:
+    return hash32_to_range(hash_pair32(hi, lo, seed), m)
+
+
+def np_hash64(x: np.ndarray, seed: int) -> np.ndarray:
+    """Pure-numpy mirror of :func:`hash64` (for host-side data pipelines)."""
+    with np.errstate(over="ignore"):
+        s = np.uint64(seed)
+        s = (s + _GOLDEN_64) * _M1_64
+        s ^= s >> np.uint64(29)
+        s *= _M2_64
+        s ^= s >> np.uint64(32)
+        c = s | np.uint64(1)
+        x = x.astype(np.uint64) * c + (c >> np.uint64(17))
+        x ^= x >> np.uint64(33)
+        x *= _M1_64
+        x ^= x >> np.uint64(33)
+        x *= _M2_64
+        x ^= x >> np.uint64(33)
+    return x
+
+
+def np_hash_to_range(x: np.ndarray, seed: int, m: int) -> np.ndarray:
+    h = np_hash64(x, seed)
+    hi = h >> np.uint64(32)
+    with np.errstate(over="ignore"):
+        return ((hi * np.uint64(m)) >> np.uint64(32)).astype(np.uint32)

@@ -1,0 +1,272 @@
+"""IDentity-with-Locality (IDL) hash family — the paper's core contribution.
+
+General construction (Theorem 1):  ψ(x) = ρ₁(φ(x)) + ρ₂(x)
+  φ  : LSH on the input metric space (here: MinHash over t-sub-kmer sets,
+       collision probability = Jaccard similarity, eq. 13-14)
+  ρ₁ : RH of the LSH value into the anchor range [m' - L]
+  ρ₂ : RH of the key itself into the locality window [L]
+
+For a partitioned Bloom filter with η repetitions over total range m, each
+repetition j gets its own sub-range of size m' = m // η (exactly the setup of
+the paper's §6 analysis), its own MinHash (via densified one-permutation
+hashing), and its own ρ₁/ρ₂ seeds. Consecutive kmers of a read share a
+MinHash value with probability ≈ Jaccard ≈ (w-1)/(w+1) (w = k-t+1), hence
+share the ρ₁ anchor and land within the same L-window — one cache line /
+page / VMEM block serves a run of probes.
+
+Setting t = k degenerates ρ₁ to a plain RH of the kmer → IDL == RH.
+Setting L = 1 collapses the window → IDL == rehashed LSH. (Both tested.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, kmers, minhash
+
+# seed salts (keep ρ₁, ρ₂ and MinHash streams independent)
+_SALT_ANCHOR = 0xA17C
+_SALT_LOCAL = 0x10CA
+_SALT_MH = 0x0D0F
+_SALT_RH = 0x5EED
+
+
+@dataclasses.dataclass(frozen=True)
+class IDLConfig:
+    """Parameters of a gene-search IDL family (paper §5.1)."""
+
+    k: int = 31          # kmer size (paper standard)
+    t: int = 16          # sub-kmer size (paper recommends 16 for k=31)
+    L: int = 1 << 15     # locality window in bits (≈ page on CPU, DMA block on TPU)
+    eta: int = 4         # hash repetitions in the BF
+    m: int = 1 << 26     # total BF bits
+    minhash_mode: str = "doph"  # "doph" (paper §5.3.3) or "exact"
+    # TPU adaptation (beyond-paper, see DESIGN.md §2 + EXPERIMENTS.md §Perf):
+    # quantize the ρ₁ anchor to multiples of L so the locality window is
+    # exactly ONE DMA block instead of straddling two. Identical FPR theory
+    # (ψ stays uniform over the partition); ~3x fewer block switches under a
+    # single-resident-tile kernel. align=False is the paper-faithful layout.
+    align: bool = True
+
+    def __post_init__(self):
+        if not 1 <= self.t <= self.k <= 31:
+            raise ValueError(f"need 1 <= t <= k <= 31, got t={self.t} k={self.k}")
+        if self.m // self.eta <= self.L:
+            raise ValueError(
+                f"partition size m/η = {self.m // self.eta} must exceed L={self.L}"
+            )
+    @property
+    def w(self) -> int:  # sub-kmers per kmer
+        return self.k - self.t + 1
+
+    @property
+    def m_part(self) -> int:
+        """Per-repetition sub-range; block-aligned mode rounds down to L."""
+        part = self.m // self.eta
+        if self.align:
+            part = (part // self.L) * self.L
+        return part
+
+    @property
+    def anchor_range(self) -> int:
+        return self.m_part - self.L
+
+    def exact_seeds(self) -> list[int]:
+        return [_SALT_MH + 7919 * j for j in range(self.eta)]
+
+
+def _minhash_rolling(cfg: IDLConfig, subk: jax.Array) -> jax.Array:
+    if cfg.minhash_mode == "exact":
+        return minhash.minhash_exact(subk, cfg.w, cfg.exact_seeds())
+    return minhash.doph_minhash(subk, cfg.w, cfg.eta, seed=_SALT_MH)
+
+
+def _combine(cfg: IDLConfig, mh: jax.Array, kmer_arr: jax.Array) -> jax.Array:
+    """ψ_j(x) = j·m' + ρ₁_j(mh_j(x)) + ρ₂_j(x); output (η, n) uint32.
+
+    align=True: ρ₁ picks a *block index* in [m'/L] and is scaled by L, so the
+    locality window coincides with one DMA block. align=False: paper layout,
+    ρ₁ uniform over [m' − L].
+    """
+    locs = []
+    for j in range(cfg.eta):
+        if cfg.align:
+            blk = hashing.hash_to_range(mh[j], _SALT_ANCHOR + 31 * j, cfg.m_part // cfg.L)
+            anchor = blk * np.uint32(cfg.L)
+        else:
+            anchor = hashing.hash_to_range(mh[j], _SALT_ANCHOR + 31 * j, cfg.anchor_range)
+        local = hashing.hash_to_range(kmer_arr, _SALT_LOCAL + 31 * j, cfg.L)
+        locs.append(anchor + local + np.uint32(j * cfg.m_part))
+    return jnp.stack(locs, axis=0)
+
+
+def idl_locations_rolling(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
+    """IDL bit locations for every stride-1 kmer of a code sequence.
+
+    The fast path for reads: rolling MinHash via sliding-window minimum.
+
+    Args:
+      codes: (n,) uint8 base codes of the read/genome chunk.
+    Returns:
+      (η, n - k + 1) uint32 global bit locations in [0, m).
+    """
+    subk = kmers.pack_kmers(codes, cfg.t)
+    mh = _minhash_rolling(cfg, subk)
+    kmer_arr = kmers.pack_kmers(codes, cfg.k)
+    return _combine(cfg, mh, kmer_arr)
+
+
+def idl_locations_kmer_batch(cfg: IDLConfig, kmer_arr: jax.Array) -> jax.Array:
+    """IDL bit locations for an arbitrary batch of packed kmers.
+
+    Agrees exactly with :func:`idl_locations_rolling` on sequential kmers.
+    """
+    mh = minhash.minhash_kmer_batch(
+        kmer_arr, cfg.k, cfg.t, cfg.eta,
+        mode=cfg.minhash_mode, seed=_SALT_MH,
+        seeds=cfg.exact_seeds() if cfg.minhash_mode == "exact" else None,
+    )
+    return _combine(cfg, mh, kmer_arr)
+
+
+# ---------------------------------------------------------------------------
+# 32-bit lane path (TPU target — no int64; see DESIGN.md §2). Semantically
+# the same pipeline with 32-bit hashes; used by the sharded serving step and
+# anything that must lower for the production mesh.
+# ---------------------------------------------------------------------------
+
+def idl_locations_rolling32(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
+    """(η, n_kmers) uint32 locations using only uint32 lanes."""
+    if cfg.t > 16:
+        raise ValueError("32-bit path needs t <= 16")
+    subk = kmers.pack_kmers_u32(codes, cfg.t)
+    h = hashing.mix32(subk * jnp.uint32(0x9E3779B9) + jnp.uint32(_SALT_MH))
+    if cfg.minhash_mode == "doph":
+        bins = ((h >> jnp.uint32(16)) * jnp.uint32(cfg.eta)) >> jnp.uint32(16)
+        per_bin = []
+        for j in range(cfg.eta):
+            masked = jnp.where(bins == jnp.uint32(j), h, jnp.uint32(0xFFFFFFFF))
+            per_bin.append(minhash.sliding_window_min(masked, cfg.w))
+        mh = jnp.stack(per_bin, axis=0)
+        for off in range(1, cfg.eta):
+            donor = jnp.roll(mh, -off, axis=0)
+            mh = jnp.where(
+                (mh == jnp.uint32(0xFFFFFFFF)) & (donor != jnp.uint32(0xFFFFFFFF)),
+                donor + jnp.uint32((0x9E3779B9 * off) & 0xFFFFFFFF),
+                mh,
+            )
+    else:
+        mh = jnp.stack(
+            [
+                minhash.sliding_window_min(
+                    hashing.mix32(subk * jnp.uint32(2 * s + 1) + jnp.uint32(s)), cfg.w
+                )
+                for s in cfg.exact_seeds()
+            ],
+            axis=0,
+        )
+    hi, lo = kmers.pack_kmers_pair32(codes, cfg.k)
+    locs = []
+    for j in range(cfg.eta):
+        if cfg.align:
+            blk = hashing.hash32_to_range(
+                hashing.mix32(mh[j] * jnp.uint32(2 * j + 3)), cfg.m_part // cfg.L
+            )
+            anchor = blk * jnp.uint32(cfg.L)
+        else:
+            anchor = hashing.hash32_to_range(
+                hashing.mix32(mh[j] * jnp.uint32(2 * j + 3)), cfg.anchor_range
+            )
+        local = hashing.hash_pair32_to_range(hi, lo, _SALT_LOCAL + 31 * j, cfg.L)
+        locs.append(anchor + local + jnp.uint32(j * cfg.m_part))
+    return jnp.stack(locs, axis=0)
+
+
+def rh_locations_rolling32(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
+    """Baseline RH locations on the 32-bit lane path."""
+    hi, lo = kmers.pack_kmers_pair32(codes, cfg.k)
+    locs = []
+    for j in range(cfg.eta):
+        locs.append(
+            hashing.hash_pair32_to_range(hi, lo, _SALT_RH + 31 * j, cfg.m_part)
+            + jnp.uint32(j * cfg.m_part)
+        )
+    return jnp.stack(locs, axis=0)
+
+
+def idl_bbf_locations_rolling(
+    cfg: IDLConfig, codes: jax.Array, block_bits: int = 512
+) -> jax.Array:
+    """IDL × Blocked-Bloom-filter composition (paper §3.3: "orthogonal
+    approaches that can easily be integrated").
+
+    Two levels of locality: the MinHash anchor picks the L-window (IDL —
+    consecutive kmers share it), a per-KEY hash picks ONE cache-line-sized
+    block inside the window, and all η probes land inside that block (BBF —
+    one line fetch per kmer instead of η). Costs the BBF's slightly higher
+    FPR (block-level collisions), exactly the trade the paper describes.
+
+    Returns (η, n_kmers) uint32 locations; all η rows of a column share a
+    block of ``block_bits``.
+    """
+    subk = kmers.pack_kmers(codes, cfg.t)
+    mh = _minhash_rolling(cfg, subk)
+    kmer_arr = kmers.pack_kmers(codes, cfg.k)
+    n_blocks_in_window = max(cfg.L // block_bits, 1)
+    # single anchor (repetition 0's MinHash) — all probes share the window
+    window = hashing.hash_to_range(
+        mh[0], _SALT_ANCHOR, cfg.m // cfg.L
+    ).astype(jnp.uint32) * np.uint32(cfg.L)
+    blk = hashing.hash_to_range(
+        kmer_arr, _SALT_LOCAL, n_blocks_in_window
+    ).astype(jnp.uint32) * np.uint32(block_bits)
+    locs = []
+    for j in range(cfg.eta):
+        bit = hashing.hash_to_range(kmer_arr, _SALT_RH + 97 * j, block_bits)
+        locs.append(window + blk + bit.astype(jnp.uint32))
+    return jnp.stack(locs, axis=0)
+
+
+def rh_locations(cfg: IDLConfig, kmer_arr: jax.Array) -> jax.Array:
+    """Baseline partitioned-RH locations (MurmurHash-style), same BF layout.
+
+    Returns: (η, n) uint32 global bit locations.
+    """
+    locs = []
+    for j in range(cfg.eta):
+        locs.append(
+            hashing.hash_to_range(kmer_arr, _SALT_RH + 31 * j, cfg.m_part)
+            + np.uint32(j * cfg.m_part)
+        )
+    return jnp.stack(locs, axis=0)
+
+
+def rh_locations_rolling(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
+    return rh_locations(cfg, kmers.pack_kmers(codes, cfg.k))
+
+
+def locations(cfg: IDLConfig, codes: jax.Array, scheme: str) -> jax.Array:
+    """Dispatch: scheme in {"idl", "rh", "lsh"}.
+
+    "lsh" = rehashed MinHash only (Table 4's ablation: locality but identity
+    loss → FPR blowup).
+    """
+    if scheme == "idl":
+        return idl_locations_rolling(cfg, codes)
+    if scheme == "rh":
+        return rh_locations_rolling(cfg, codes)
+    if scheme == "lsh":
+        subk = kmers.pack_kmers(codes, cfg.t)
+        mh = _minhash_rolling(cfg, subk)
+        locs = [
+            hashing.hash_to_range(mh[j], _SALT_ANCHOR + 31 * j, cfg.m_part)
+            + np.uint32(j * cfg.m_part)
+            for j in range(cfg.eta)
+        ]
+        return jnp.stack(locs, axis=0)
+    raise ValueError(f"unknown scheme {scheme!r}")

@@ -1,0 +1,132 @@
+"""DNA tokenization: strings -> 2-bit codes -> packed kmers / sub-kmers.
+
+The paper's S(G, k) (eq. 6) produces |G|-k+1 kmers with a stride-1 sliding
+window. We pack each kmer into an integer: 2 bits per base (A=0 C=1 G=2 T=3),
+so k<=31 fits uint64 and t<=16 fits uint32. Packing is done with the rolling
+recurrence kmer[i+1] = ((kmer[i] << 2) | code[i+k]) & mask, vectorized as a
+shift-accumulate over k static slices (O(k) fused VPU ops, no scan
+serialization, no k x n memory blowup beyond one accumulator).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Base encoding used throughout ('N' and other chars are mapped to A by the
+# sanitizer in repro.data.genome — standard practice for BF indices).
+BASES = "ACGT"
+_LUT = np.zeros(256, dtype=np.uint8)
+for _i, _b in enumerate(BASES):
+    _LUT[ord(_b)] = _i
+    _LUT[ord(_b.lower())] = _i
+
+
+def encode_bases(s: str | bytes) -> np.ndarray:
+    """ASCII DNA string -> uint8 codes in {0,1,2,3} (host-side)."""
+    if isinstance(s, str):
+        s = s.encode("ascii", errors="replace")
+    arr = np.frombuffer(s, dtype=np.uint8)
+    return _LUT[arr]
+
+
+def decode_bases(codes: np.ndarray) -> str:
+    return "".join(BASES[int(c)] for c in codes)
+
+
+def pack_kmers(codes: jax.Array, k: int) -> jax.Array:
+    """All stride-1 kmers of a code sequence, packed.
+
+    Args:
+      codes: int array shape (n,), values in {0..3}.
+      k: kmer length, 1 <= k <= 31 (needs 2k bits < 64).
+
+    Returns:
+      uint64 array shape (n - k + 1,): kmer[i] = sum_j codes[i+j] << 2(k-1-j).
+    """
+    if not 1 <= k <= 31:
+        raise ValueError(f"k must be in [1, 31], got {k}")
+    n = codes.shape[0]
+    if n < k:
+        raise ValueError(f"sequence length {n} < k={k}")
+    out_len = n - k + 1
+    c64 = codes.astype(jnp.uint64)
+    acc = jnp.zeros((out_len,), dtype=jnp.uint64)
+    for j in range(k):  # static unroll: k fused shift-or ops
+        acc = (acc << np.uint64(2)) | jax.lax.dynamic_slice(c64, (j,), (out_len,))
+    return acc
+
+
+def pack_kmers_np(codes: np.ndarray, k: int) -> np.ndarray:
+    """numpy mirror of :func:`pack_kmers` (host-side pipelines)."""
+    n = codes.shape[0]
+    out_len = n - k + 1
+    acc = np.zeros((out_len,), dtype=np.uint64)
+    c64 = codes.astype(np.uint64)
+    for j in range(k):
+        acc = (acc << np.uint64(2)) | c64[j : j + out_len]
+    return acc
+
+
+def subkmers_of_kmers(codes: jax.Array, k: int, t: int) -> jax.Array:
+    """Sub-kmer sets S(x_i, t) for every kmer x_i of the sequence.
+
+    Because kmers come from a stride-1 window over one sequence, the sub-kmer
+    set of kmer i is exactly subk[i : i + (k - t + 1)] where subk are the
+    packed t-mers of the *whole* sequence. We exploit that and return the flat
+    t-mer array; callers index windows into it (this identity is what makes
+    rolling MinHash possible).
+
+    Returns:
+      uint64 array shape (n - t + 1,) of packed t-mers.
+    """
+    if not 1 <= t <= k:
+        raise ValueError(f"need 1 <= t <= k, got t={t}, k={k}")
+    return pack_kmers(codes, t)
+
+
+def pack_kmers_u32(codes: jax.Array, t: int) -> jax.Array:
+    """Packed t-mers in uint32 (t <= 16) — the TPU 32-bit lane path."""
+    if not 1 <= t <= 16:
+        raise ValueError(f"t must be in [1, 16] for uint32 packing, got {t}")
+    n = codes.shape[0]
+    out_len = n - t + 1
+    c32 = codes.astype(jnp.uint32)
+    acc = jnp.zeros((out_len,), dtype=jnp.uint32)
+    for j in range(t):
+        acc = (acc << np.uint32(2)) | jax.lax.dynamic_slice(c32, (j,), (out_len,))
+    return acc
+
+
+def pack_kmers_pair32(codes: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Packed kmers as (hi, lo) uint32 pairs (TPU path, k <= 31).
+
+    lo = last min(k,16) bases; hi = the remaining leading bases (0 if k<=16).
+    """
+    if not 1 <= k <= 31:
+        raise ValueError(f"k must be in [1, 31], got {k}")
+    n = codes.shape[0]
+    out_len = n - k + 1
+    c32 = codes.astype(jnp.uint32)
+    n_lo = min(k, 16)
+    n_hi = k - n_lo
+    hi = jnp.zeros((out_len,), dtype=jnp.uint32)
+    for j in range(n_hi):
+        hi = (hi << np.uint32(2)) | jax.lax.dynamic_slice(c32, (j,), (out_len,))
+    lo = jnp.zeros((out_len,), dtype=jnp.uint32)
+    for j in range(n_hi, k):
+        lo = (lo << np.uint32(2)) | jax.lax.dynamic_slice(c32, (j,), (out_len,))
+    return hi, lo
+
+
+def unpack_kmer(kmer: int, k: int) -> str:
+    out = []
+    for j in range(k - 1, -1, -1):
+        out.append(BASES[(int(kmer) >> (2 * j)) & 3])
+    return "".join(out)
+
+
+def kmer_subkmer_window(k: int, t: int) -> int:
+    """Number of t-sub-kmers per kmer: |S(x, t)| = k - t + 1."""
+    return k - t + 1

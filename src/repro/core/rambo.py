@@ -1,0 +1,97 @@
+"""RAMBO — Repeated And Merged Bloom filters (Gupta et al.), with IDL.
+
+N files are hashed into B buckets, independently R times. Bucket (r, b)
+holds ONE Bloom filter containing the union of kmers of all files mapped to
+it. A kmer query probes the R*B filters → a (R, B) hit grid; file i is a
+candidate iff its bucket hit in *every* repetition (intersection of unions).
+B = O(sqrt(N)), R = O(log N) gives sub-linear query time with linear memory.
+
+IDL-RAMBO (paper §5.2, Table 3): each bucket BF swaps RH → IDL locations;
+parameters (B, R, m, η) are unchanged — IDL is a drop-in.
+
+Implementation: the R*B filters are ONE stacked uint8 array (R*B, m_b) so a
+batched query is a single gather — this is also the layout the serving layer
+shards across the mesh (filter axis → 'model').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, idl as idl_mod
+
+
+@dataclasses.dataclass
+class Rambo:
+    cfg: idl_mod.IDLConfig            # cfg.m = bits per bucket BF (m_b)
+    scheme: str
+    n_files: int
+    B: int                            # buckets per repetition
+    R: int                            # repetitions
+    filters: jax.Array | None = None  # (R*B, m_b) uint8
+    assignment: np.ndarray | None = None  # (R, N) int32: file -> bucket
+
+    def __post_init__(self):
+        if self.filters is None:
+            self.filters = jnp.zeros((self.R * self.B, self.cfg.m), dtype=jnp.uint8)
+        if self.assignment is None:
+            files = np.arange(self.n_files, dtype=np.uint64)
+            self.assignment = np.stack(
+                [
+                    hashing.np_hash_to_range(files, 0xA3B0 + r, self.B).astype(np.int32)
+                    for r in range(self.R)
+                ],
+                axis=0,
+            )
+
+    @classmethod
+    def build(
+        cls, n_files: int, cfg: idl_mod.IDLConfig, scheme: str = "idl",
+        B: int | None = None, R: int | None = None,
+    ) -> "Rambo":
+        if B is None:
+            B = max(2, int(np.ceil(np.sqrt(n_files))))
+        if R is None:
+            R = max(2, int(np.ceil(np.log2(max(n_files, 2)))))
+        return cls(cfg=cfg, scheme=scheme, n_files=n_files, B=B, R=R)
+
+    # ------------------------------------------------------------------
+    def _locs(self, codes: jax.Array) -> jax.Array:
+        return idl_mod.locations(self.cfg, codes, self.scheme)  # (η, n_kmers)
+
+    def insert_sequence(self, file_id: int, codes: jax.Array) -> "Rambo":
+        locs = self._locs(codes).reshape(-1)
+        filt = self.filters
+        for r in range(self.R):
+            row = r * self.B + int(self.assignment[r, file_id])
+            filt = filt.at[row, locs].set(np.uint8(1))
+        return dataclasses.replace(self, filters=filt)
+
+    def query_kmer_grid(self, codes: jax.Array) -> jax.Array:
+        """(n_kmers, R, B) bool: bucket hits per kmer."""
+        locs = self._locs(codes)                    # (η, n_kmers)
+        bits = self.filters[:, locs]                # (R*B, η, n_kmers)
+        hit = jnp.all(bits == np.uint8(1), axis=1)  # (R*B, n_kmers)
+        return hit.T.reshape(-1, self.R, self.B)
+
+    def msmt(self, codes: jax.Array, theta: float = 1.0) -> jax.Array:
+        """Candidate files whose kmer-coverage >= theta (N-bool)."""
+        grid = self.query_kmer_grid(codes)          # (n_kmers, R, B)
+        assign = jnp.asarray(self.assignment)       # (R, N)
+        # file i present for a kmer iff all R of its buckets hit
+        per_rep = jnp.take_along_axis(
+            grid, assign.T[None, :, :].transpose(0, 2, 1), axis=2
+        )  # (n_kmers, R, N)
+        present = jnp.all(per_rep, axis=1)          # (n_kmers, N)
+        n_kmers = present.shape[0]
+        hits = jnp.sum(present.astype(jnp.int32), axis=0)
+        need = int(np.ceil(theta * n_kmers - 1e-9))  # exact at theta=1.0
+        return hits >= need
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.filters.shape[0]) * int(self.filters.shape[1])

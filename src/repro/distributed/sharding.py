@@ -1,0 +1,129 @@
+"""Logical-axis sharding: model code names axes, policies map them to the mesh.
+
+Model code calls ``shard(x, ("batch", None, "embed"))`` with *logical* axis
+names. A :class:`ShardingRules` maps logical names to mesh axes (or None =
+replicated). When no rules are active (CPU unit tests), ``shard`` is a no-op,
+so the same model code runs everywhere.
+
+Default production mapping (DESIGN.md §6):
+  batch    -> ("pod", "data")   activations' batch dim (DP)
+  fsdp     -> ("pod", "data")   params' largest dim (FSDP / ZeRO-3)
+  embed    -> None              d_model of activations stays replicated on TP
+  heads    -> "model"           attention heads (TP)
+  kv_heads -> "model" if divisible else None (MQA/GQA replication)
+  mlp      -> "model"           d_ff (TP)
+  experts  -> "model"           MoE expert dim (EP)
+  vocab    -> "model"           output logits dim
+  seq      -> None ("model" under sequence-parallel prefill)
+  nodes/edges -> ("pod", "data")  GNN graph partition
+  table_rows  -> "model"          recsys embedding-table rows
+  files       -> "model"          gene-search index file axis
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    mapping: dict[str, Any]
+
+    def spec(self, logical: Sequence[str | None] | str | None) -> P:
+        if logical is None:
+            return P()
+        if isinstance(logical, str):
+            logical = (logical,)
+        axes = []
+        used: set[str] = set()
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            mesh_axes = self.mapping.get(name)
+            if mesh_axes is None:
+                axes.append(None)
+                continue
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            free = tuple(a for a in mesh_axes if a not in used)
+            used.update(free)
+            axes.append(free if len(free) != 1 else free[0])
+        return P(*axes)
+
+    def named(self, logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def default_mapping(mesh: Mesh, *, seq_parallel: bool = False) -> dict[str, Any]:
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    m = {
+        "batch": dp, "fsdp": dp,
+        "embed": None,
+        "heads": tp, "kv_heads": tp, "mlp": tp, "experts": tp, "vocab": tp,
+        # Megatron-style sequence parallelism: the residual stream ("seq") is
+        # seq-sharded over the TP axis; inside attention/MLP the seq dim is
+        # unsharded ("act_seq") and the TP axis moves to heads/mlp — GSPMD
+        # derives the all-gather / reduce-scatter pair at the boundary.
+        "seq": tp if seq_parallel else None,
+        "act_seq": None,
+        # flattened (B·S) token dim (MoE dispatch/combine): batch part of
+        # the merged dim keeps the DP sharding
+        "tokens": dp,
+        "nodes": dp, "edges": dp,
+        "table_rows": tp, "files": tp,
+        "expert_cap": dp,
+    }
+    return m
+
+
+def make_rules(mesh: Mesh, **overrides) -> ShardingRules:
+    mapping = default_mapping(mesh)
+    mapping.update(overrides)
+    return ShardingRules(mesh=mesh, mapping=mapping)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def active_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+def shard(x: jax.Array, logical) -> jax.Array:
+    """Constrain x's sharding by logical axis names; no-op without rules."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.named(logical))
+
+
+def shard_if_divisible(x: jax.Array, logical, dim: int, axis_name: str = "model"):
+    """Shard unless the dim doesn't divide the mesh axis (KV-head replication)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    size = rules.mesh.shape.get(axis_name, 1)
+    if x.shape[dim] % max(size, 1):
+        logical = tuple(
+            None if i == dim else l for i, l in enumerate(logical)
+        )
+    return shard(x, logical)

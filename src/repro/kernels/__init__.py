@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper + host-side planning), ref.py (pure-jnp oracle).
+Validated in interpret=True mode on CPU; written for TPU as the target
+(32-bit lanes only, MXU-friendly gathers, scalar-prefetch DMA scheduling).
+"""

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: block-resident Bloom-filter insert (scatter-OR).
+
+Indexing-side twin of idl_probe. The host planner groups insert locations by
+BF block such that **each block appears at most once per call** (rounds, see
+ops.plan_insert_rounds) — no read-after-write hazards. Each grid step DMAs
+one resident tile, ORs in the bit-image of up to C insertions (built
+MXU-natively from two one-hot matmuls), and emits the updated tile; the
+wrapper block-scatters updated tiles back (conflict-free by construction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _insert_kernel(
+    block_ids_ref,   # scalar-prefetch (R,) int32
+    offsets_ref,     # (1, C) int32, -1 padded
+    bf_ref,          # (block_words,) uint32 resident tile
+    out_ref,         # (1, block_words) uint32 updated tile
+):
+    del block_ids_ref
+    offsets = offsets_ref[0, :]
+    valid = offsets >= 0
+    off = jnp.where(valid, offsets, 0)
+    word_idx = (off >> 5).astype(jnp.int32)
+    bit_idx = (off & 31).astype(jnp.int32)
+
+    words = bf_ref[:]
+    w = words.shape[0]
+    c = offsets.shape[0]
+    # bit image of the insertions: counts (W, 32) = rows^T @ cols, then clip
+    row_onehot = (
+        (word_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, w), 1))
+        & valid[:, None]
+    ).astype(jnp.float32)                            # (C, W)
+    col_onehot = (
+        bit_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, 32), 1)
+    ).astype(jnp.float32)                            # (C, 32)
+    counts = jnp.dot(
+        row_onehot.T, col_onehot, preferred_element_type=jnp.float32
+    )                                                # (W, 32)
+    add_bits = (counts > 0.5).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (w, 32), 1)
+    add_words = jnp.sum(add_bits << shifts, axis=1).astype(jnp.uint32)
+    out_ref[0, :] = words | add_words
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_words", "inserts_per_round", "interpret")
+)
+def insert_round(
+    bf_words: jax.Array,     # (n_words,) uint32
+    block_ids: jax.Array,    # (R,) int32 — unique per call (planner guarantee)
+    offsets: jax.Array,      # (R, C) int32, -1 padded
+    *,
+    block_words: int,
+    inserts_per_round: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (R, block_words) updated tiles for the given blocks."""
+    r = block_ids.shape[0]
+    c = inserts_per_round
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, bid: (i, 0)),
+            pl.BlockSpec((block_words,), lambda i, bid: (bid[i],)),
+        ],
+        out_specs=pl.BlockSpec((1, block_words), lambda i, bid: (i, 0)),
+    )
+    return pl.pallas_call(
+        _insert_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, block_words), jnp.uint32),
+        interpret=interpret,
+    )(block_ids, offsets, bf_words)

@@ -1,0 +1,91 @@
+"""Host-side planner + wrapper for block-resident BF insertion.
+
+plan_insert_rounds groups the (η, n) location grid by BF block and emits
+ROUNDS: within one round every block id is unique, so the kernel can process
+the whole round with zero write conflicts. IDL needs few blocks (locality!)
+→ few, densely-packed rounds; RH touches ~every block once → many sparse
+singleton tiles. The round structure is itself a locality measurement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.idl_insert import kernel, ref
+
+
+@dataclasses.dataclass
+class InsertPlan:
+    rounds: list[tuple[np.ndarray, np.ndarray]]  # [(block_ids (R,), offsets (R, C))]
+    block_bits: int
+    inserts_per_round: int
+    n_locs: int
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(int(b.shape[0]) for b, _ in self.rounds)
+
+    @property
+    def dma_bytes(self) -> int:
+        # read + write one tile per scheduled block
+        return 2 * self.n_tiles * (self.block_bits // 8)
+
+
+def plan_insert_rounds(
+    locs: np.ndarray, block_bits: int, inserts_per_round: int = 128
+) -> InsertPlan:
+    flat = np.asarray(locs, dtype=np.int64).reshape(-1)
+    c = inserts_per_round
+    blocks = flat // block_bits
+    offsets = (flat % block_bits).astype(np.int32)
+    order = np.argsort(blocks, kind="stable")
+    blocks_s = blocks[order]
+    offsets_s = offsets[order]
+    # segment boundaries per block
+    uniq, starts = np.unique(blocks_s, return_index=True)
+    ends = np.append(starts[1:], len(blocks_s))
+    counts = ends - starts
+    max_rounds = int(np.ceil(counts.max() / c)) if len(counts) else 0
+    rounds = []
+    for r in range(max_rounds):
+        sel = counts > r * c
+        bids = uniq[sel].astype(np.int32)
+        offs = np.full((len(bids), c), -1, dtype=np.int32)
+        for i, (s, e) in enumerate(zip(starts[sel], ends[sel])):
+            lo = s + r * c
+            hi = min(e, lo + c)
+            offs[i, : hi - lo] = offsets_s[lo:hi]
+        rounds.append((bids, offs))
+    return InsertPlan(
+        rounds=rounds, block_bits=block_bits,
+        inserts_per_round=c, n_locs=len(flat),
+    )
+
+
+def insert_with_plan(
+    bf_words: jax.Array, plan: InsertPlan, *, interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    block_words = plan.block_bits // 32
+    for bids_np, offs_np in plan.rounds:
+        bids = jnp.asarray(bids_np)
+        offs = jnp.asarray(offs_np)
+        if use_ref:
+            tiles = ref.insert_round_ref(
+                bf_words, bids, offs,
+                block_words=block_words,
+                inserts_per_round=plan.inserts_per_round,
+            )
+        else:
+            tiles = kernel.insert_round(
+                bf_words, bids, offs,
+                block_words=block_words,
+                inserts_per_round=plan.inserts_per_round,
+                interpret=interpret,
+            )
+        bf_words = ref.apply_insert_to_words(bf_words, bids, tiles, block_words)
+    return bf_words

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: block-resident Bloom-filter probe.
+
+The TPU translation of the paper's cache-locality argument (DESIGN.md §2):
+
+* The BF lives packed (uint32 words) in HBM — far too big for VMEM.
+* The host scheduler (ops.plan_probe_runs) run-length-encodes the probe
+  stream by BF *block* (block = the IDL locality window L). IDL makes runs
+  long (mean ≈ 1/(1−J) kmers); RH makes every probe its own run.
+* Grid = one step per run. A scalar-prefetch array holds each run's block
+  id; the BlockSpec index_map consumes it, so Pallas DMAs exactly ONE
+  L-sized BF tile from HBM per run and double-buffers the next tile while
+  the current one is probed. HBM traffic = n_runs × block_bytes — the
+  quantity IDL minimizes.
+* Within a resident tile the probe gather is done MXU-natively with two
+  one-hot matmuls (word-row pick, then bit-column pick) — no scalar loads,
+  no unsupported vector gathers.
+
+All lanes are uint32/int32/float32 (TPU has no 64-bit integer lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _probe_kernel(
+    block_ids_ref,   # scalar-prefetch: (R,) int32 — BF block id per run
+    offsets_ref,     # (1, C) int32 — bit offsets within the block (-1 = pad)
+    bf_ref,          # (block_words,) uint32 — the resident BF tile (VMEM)
+    out_ref,         # (1, C) int32 — probed bit per lane (pad lanes = 1)
+):
+    del block_ids_ref  # consumed by the index_map only
+    offsets = offsets_ref[0, :]                      # (C,)
+    valid = offsets >= 0
+    off = jnp.where(valid, offsets, 0)
+    word_idx = (off >> 5).astype(jnp.int32)          # word within block
+    bit_idx = (off & 31).astype(jnp.int32)
+
+    words = bf_ref[:]                                # (W,) uint32
+    w = words.shape[0]
+    # unpack words -> (W, 32) bit image {0,1} (vector shifts, no gather)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (w, 32), 1)
+    bits2d = ((words[:, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+
+    c = offsets.shape[0]
+    # gather via two one-hot matmuls (MXU-native)
+    row_onehot = (
+        word_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, w), 1)
+    ).astype(jnp.float32)                            # (C, W)
+    picked_rows = jnp.dot(
+        row_onehot, bits2d, preferred_element_type=jnp.float32
+    )                                                # (C, 32)
+    col_onehot = (
+        bit_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, 32), 1)
+    ).astype(jnp.float32)
+    bit = jnp.sum(picked_rows * col_onehot, axis=1)  # (C,)
+    out_ref[0, :] = jnp.where(valid, bit.astype(jnp.int32), 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_words", "probes_per_run", "interpret")
+)
+def probe_runs(
+    bf_words: jax.Array,     # (n_words,) uint32 packed BF
+    block_ids: jax.Array,    # (R,) int32
+    offsets: jax.Array,      # (R, C) int32, -1 padded
+    *,
+    block_words: int,
+    probes_per_run: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (R, C) int32 probed bits (pad lanes read as 1)."""
+    r = block_ids.shape[0]
+    c = probes_per_run
+    if offsets.shape != (r, c):
+        raise ValueError(f"offsets shape {offsets.shape} != {(r, c)}")
+    if bf_words.shape[0] % block_words:
+        raise ValueError("bf length must be a multiple of block_words")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, bid: (i, 0)),
+            pl.BlockSpec((block_words,), lambda i, bid: (bid[i],)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i, bid: (i, 0)),
+    )
+    return pl.pallas_call(
+        _probe_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=interpret,
+    )(block_ids, offsets, bf_words)

@@ -1,0 +1,129 @@
+"""jit wrapper + host-side probe planner for the IDL probe kernel.
+
+The planner is the "scheduler" half of the design (vLLM-style): it
+run-length-encodes the probe stream by BF block and emits fixed-shape,
+kernel-ready arrays. It runs on the host (numpy) exactly like a serving
+scheduler builds block tables — data-dependent sizing lives here, the device
+kernel sees static shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.idl_probe import kernel, ref
+
+
+@dataclasses.dataclass
+class ProbePlan:
+    block_ids: np.ndarray    # (R,) int32
+    offsets: np.ndarray      # (R, C) int32, -1 padded
+    probe_index: np.ndarray  # (R, C) int32 position in flattened (η·n) stream
+    n_probes: int
+    eta: int
+    n_keys: int
+    block_bits: int
+    probes_per_run: int
+
+    @property
+    def n_runs(self) -> int:
+        return int(self.block_ids.shape[0])
+
+    @property
+    def dma_bytes(self) -> int:
+        return self.n_runs * (self.block_bits // 8)
+
+
+def plan_probe_runs(
+    locs: np.ndarray, block_bits: int, probes_per_run: int = 128
+) -> ProbePlan:
+    """Run-length-encode (η, n) bit locations into block-resident runs.
+
+    Rows (hash repetitions) are planned independently and concatenated, so a
+    run never crosses repetitions. Runs longer than C are split.
+    """
+    locs = np.asarray(locs, dtype=np.int64)
+    if locs.ndim == 1:
+        locs = locs[None, :]
+    eta, n = locs.shape
+    c = probes_per_run
+
+    all_bids, all_offs, all_pidx = [], [], []
+    for j in range(eta):
+        row = locs[j]
+        blocks = row // block_bits
+        # run starts: first element or block change
+        start = np.empty(n, dtype=bool)
+        start[0] = True
+        np.not_equal(blocks[1:], blocks[:-1], out=start[1:])
+        run_id = np.cumsum(start) - 1
+        # split runs longer than C
+        pos_in_run = np.arange(n) - np.maximum.accumulate(
+            np.where(start, np.arange(n), 0)
+        )
+        sub = pos_in_run // c
+        key = run_id * (n // c + 2) + sub
+        _, seg = np.unique(key, return_inverse=True)
+        n_runs = seg.max() + 1 if n else 0
+        pos = pos_in_run % c
+        offs = np.full((n_runs, c), -1, dtype=np.int32)
+        pidx = np.full((n_runs, c), -1, dtype=np.int32)
+        offs[seg, pos] = (row % block_bits).astype(np.int32)
+        pidx[seg, pos] = (j * n + np.arange(n)).astype(np.int32)
+        bids = np.zeros(n_runs, dtype=np.int32)
+        bids[seg] = blocks.astype(np.int32)
+        all_bids.append(bids)
+        all_offs.append(offs)
+        all_pidx.append(pidx)
+
+    return ProbePlan(
+        block_ids=np.concatenate(all_bids),
+        offsets=np.concatenate(all_offs),
+        probe_index=np.concatenate(all_pidx),
+        n_probes=eta * n,
+        eta=eta,
+        n_keys=n,
+        block_bits=block_bits,
+        probes_per_run=c,
+    )
+
+
+def probe_membership(
+    bf_words: jax.Array, plan: ProbePlan, *, interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Execute the plan; return (n_keys,) bool membership (AND over η)."""
+    block_words = plan.block_bits // 32
+    args = (
+        bf_words,
+        jnp.asarray(plan.block_ids),
+        jnp.asarray(plan.offsets),
+    )
+    if use_ref:
+        bits = ref.probe_runs_ref(
+            *args, block_words=block_words, probes_per_run=plan.probes_per_run
+        )
+    else:
+        bits = kernel.probe_runs(
+            *args,
+            block_words=block_words,
+            probes_per_run=plan.probes_per_run,
+            interpret=interpret,
+        )
+    return scatter_and_reduce(bits, plan)
+
+
+def scatter_and_reduce(bits: jax.Array, plan: ProbePlan) -> jax.Array:
+    """(R, C) run bits -> (n_keys,) membership via the plan's probe_index."""
+    flat = jnp.ones((plan.n_probes,), dtype=jnp.int32)
+    idx = jnp.asarray(plan.probe_index.reshape(-1))
+    vals = bits.reshape(-1)
+    # pad lanes are routed out of range and dropped by the scatter
+    idx = jnp.where(idx >= 0, idx, plan.n_probes)
+    flat = flat.at[idx].set(vals, mode="drop")
+    per_rep = flat.reshape(plan.eta, plan.n_keys)
+    return jnp.all(per_rep == 1, axis=0)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for window_min: the Gil-Werman core + a naive check."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.minhash import sliding_window_min
+
+
+def window_min_ref(a: jax.Array, *, w: int) -> jax.Array:
+    return sliding_window_min(a, w)
+
+
+def window_min_naive(a: jax.Array, *, w: int) -> jax.Array:
+    n = a.shape[0]
+    return jnp.stack([a[i : i + w].min() for i in range(n - w + 1)])

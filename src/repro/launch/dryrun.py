@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay the first statements of this module — jax
+locks the device count at first initialization, and the production meshes
+need 512 placeholder host devices. Nothing else in the repo sets this flag
+(tests and benches see 1 device).
+
+Per cell:
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(state, **input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for §Roofline
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all           # every cell, both meshes
+                                                  # (subprocess per cell)
+Records land in --out (default runs/dryrun/) as one JSON per cell; the
+roofline report (benchmarks/roofline_report.py) and EXPERIMENTS.md read them.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+
+def _mesh(name: str):
+    from repro.launch.mesh import make_production_mesh
+    return make_production_mesh(multi_pod=(name == "multi"))
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
+             overrides: dict | None = None) -> dict:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import base as cfg_base, get
+    from repro.distributed import sharding as sh
+    from repro.roofline import analysis
+
+    # the lowered program must be TPU-lane-compatible: strictly 32-bit.
+    # (repro.__init__ enables x64 for the uint64 CPU reference paths only.)
+    jax.config.update("jax_enable_x64", False)
+
+    spec = get(arch)
+    cfg = spec.make_config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = spec.shapes[shape]
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "kind": cell.kind}
+    if cell.skip_reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cell.skip_reason
+        _write(out_dir, rec)
+        return rec
+
+    mesh = _mesh(mesh_name)
+    chips = mesh.devices.size
+    # sequence-parallel residual stream for LM training/prefill (the big
+    # activations); decode and the other families keep seq replicated.
+    seq_parallel = spec.family == "lm" and cell.meta.get("mode") != "decode"
+    rules = sh.ShardingRules(
+        mesh=mesh, mapping=sh.default_mapping(mesh, seq_parallel=seq_parallel)
+    )
+
+    state = spec.abstract_state(cfg, cell)
+    batch = spec.input_specs(cfg, cell)
+    state_sh = cfg_base.tree_shardings(
+        mesh, state, lambda p, s: spec.state_spec_fn(cfg, p, s))
+    batch_sh = cfg_base.tree_shardings(
+        mesh, batch, lambda p, s: spec.batch_spec_fn(cfg, p, s))
+    fn = spec.step_fn(cfg, cell)
+
+    t0 = time.time()
+    with mesh:
+        with sh.use_rules(rules):
+            lowered = jax.jit(
+                fn, in_shardings=(state_sh, batch_sh)
+            ).lower(state, batch)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = analysis.memory_stats(compiled)
+    print("memory_analysis:", mem)
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        print("cost_analysis: flops=%.3e bytes=%.3e" % (
+            float(cost.get("flops", 0)), float(cost.get("bytes accessed", 0))))
+    except Exception as e:
+        print("cost_analysis failed:", e)
+
+    mf = spec.model_flops_fn(cfg, cell) if spec.model_flops_fn else None
+    roof = analysis.from_compiled(arch, shape, mesh_name, chips, compiled,
+                                  model_flops=mf)
+    rec.update(roof.to_json())
+    rec["status"] = "ok"
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run_all(out_dir: str, meshes: list[str], jobs: int = 2,
+            archs: list[str] | None = None, timeout: int = 3600) -> int:
+    """Every cell in a fresh subprocess (isolated XLA state/memory)."""
+    from repro.configs import all_archs, get
+
+    cells = []
+    for arch in (archs or all_archs()):
+        for shape, cell in get(arch).cells():
+            for mesh_name in meshes:
+                cells.append((arch, shape, mesh_name))
+    procs: list[tuple] = []
+    failures = 0
+
+    def reap(block: bool) -> int:
+        nonlocal procs
+        fails, alive = 0, []
+        for p, meta, t0 in procs:
+            if p.poll() is None and not block:
+                alive.append((p, meta, t0))
+                continue
+            try:
+                p.wait(timeout=max(1, timeout - (time.time() - t0)))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                print(f"TIMEOUT {meta}")
+                fails += 1
+                continue
+            if p.returncode != 0:
+                print(f"FAIL {meta} rc={p.returncode}")
+                fails += 1
+            else:
+                print(f"ok   {meta}")
+        procs = alive
+        return fails
+
+    for arch, shape, mesh_name in cells:
+        done = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+        if os.path.exists(done):
+            print(f"skip {arch}/{shape}/{mesh_name} (cached)")
+            continue
+        while len(procs) >= jobs:
+            failures += reap(block=False)
+            if len(procs) >= jobs:
+                time.sleep(2)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh_name,
+               "--out", out_dir]
+        p = subprocess.Popen(cmd, stdout=subprocess.DEVNULL,
+                             stderr=subprocess.DEVNULL)
+        procs.append((p, f"{arch}/{shape}/{mesh_name}", time.time()))
+    failures += reap(block=True)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        fails = run_all(args.out, ["single", "multi"], jobs=args.jobs,
+                        archs=args.archs)
+        sys.exit(1 if fails else 0)
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.out)
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("coll_breakdown", "memory_stats")},
+                         indent=1))
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

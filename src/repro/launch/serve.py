@@ -1,0 +1,67 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch idl-genesearch``.
+
+Builds a gene-search index over a synthetic archive and serves batched MSMT
+queries — the runnable counterpart of the serve_step the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.data import genome
+from repro.serving import genesearch as gs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="idl-genesearch")
+    ap.add_argument("--files", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=5)
+    args = ap.parse_args()
+
+    spec = configs.get(args.arch)
+    if spec.family != "genesearch":
+        raise SystemExit("serve launcher currently drives idl-genesearch; "
+                         "LM decode is exercised via the dry-run cells")
+    cfg = spec.make_smoke_config()
+    import dataclasses
+    args.files = max(32, -(-args.files // 32) * 32)  # bit-sliced: 32/word
+    cfg = dataclasses.replace(cfg, n_files=args.files)
+
+    archive = genome.synth_archive(n_files=args.files, genome_len=2_000,
+                                   seed=11)
+    index = gs.empty_index(cfg)
+    for f in archive:
+        index = gs.insert_read(index, cfg, f.file_id, jnp.asarray(f.genome))
+    print(f"index: {args.files} files, {index.nbytes / 1e6:.1f} MB")
+
+    serve = jax.jit(lambda i, q: gs.serve_step(i, q, cfg))
+    rng = np.random.default_rng(0)
+    lat = []
+    correct = total = 0
+    for r in range(args.requests):
+        fids = rng.integers(0, args.files, size=args.batch)
+        reads = np.stack([
+            archive[int(f)].reads(cfg.read_len, 1)[0] for f in fids])
+        t0 = time.perf_counter()
+        out = serve(index, jnp.asarray(reads))
+        out.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+        for i, fid in enumerate(fids):
+            ids = gs.match_file_ids(np.asarray(out[i]))
+            correct += int(int(fid) in ids)
+            total += 1
+    print(f"recall {correct}/{total}; "
+          f"p50 latency {1e3 * float(np.median(lat)):.1f} ms "
+          f"(batch={args.batch})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""EquiformerV2-style SO(2)-eSCN equivariant graph attention network.
+
+Faithful mechanism (arXiv:2306.12059 / eSCN arXiv:2302.03655):
+  * node features are real-SH irrep coefficients up to l_max (flat K =
+    (l_max+1)^2 coeffs x C channels),
+  * per edge, features are rotated into the edge-aligned frame with EXACT
+    Wigner matrices (`so3.wigner_matrices`, Ivanic-Ruedenberg recursion),
+  * the tensor-product convolution becomes an SO(2) per-m linear mix,
+    truncated to |m| <= m_max (the O(L^6) -> O(L^3) eSCN trick),
+  * messages are weighted by scalar-channel graph attention
+    (segment-softmax over incoming edges), rotated back, aggregated.
+
+Documented simplifications vs the released model (DESIGN.md §5): the radial
+function modulates each (m-block, channel) pair of the static mixing weights
+(separable radial x channel), and the S2 pointwise activation is replaced by
+scalar-gated magnitude gating per l — both preserve exact equivariance
+(verified by the rotation-invariance property test).
+
+Non-geometric graph shapes (Cora / ogbn-products) carry synthetic 3D
+positions in input_specs — the backbone is unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models import gnn_common, layers, so3
+from repro.models.layers import Params
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_feat: int = 0            # input node feature dim (0 = atom-type embed)
+    n_node_types: int = 120
+    n_classes: int = 0         # >0 => node classification head
+    n_rbf: int = 32
+    cutoff: float = 6.0
+    remat: bool = True
+
+    @property
+    def n_coeff(self) -> int:
+        return (self.l_max + 1) ** 2
+
+    def degree_slices(self) -> list[tuple[int, int]]:
+        """[(offset, 2l+1)] per l into the flat coefficient axis."""
+        out, off = [], 0
+        for l in range(self.l_max + 1):
+            out.append((off, 2 * l + 1))
+            off += 2 * l + 1
+        return out
+
+    def m_blocks(self) -> list[tuple[int, list[int]]]:
+        """SO(2) blocks: for m=0 the flat indices of (l, m=0) coeffs; for
+        m>0 the indices of (l, +m) — (l, -m) pairs share the block."""
+        blocks = []
+        for m in range(0, self.m_max + 1):
+            idx_pos, idx_neg = [], []
+            off = 0
+            for l in range(self.l_max + 1):
+                width = 2 * l + 1
+                if m <= l:
+                    idx_pos.append(off + l + m)
+                    idx_neg.append(off + l - m)
+                off += width
+            blocks.append((m, idx_pos if m else idx_pos))
+            if m == 0:
+                continue
+            blocks[-1] = (m, idx_pos)
+            blocks.append((-m, idx_neg))
+        return blocks
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _so2_weights(key, cfg: EquiformerConfig, dtype) -> Params:
+    """Static mixing weights per |m|: real & imaginary parts.
+
+    For block m: maps (n_l_in(m) * C) -> (n_l_out(m) * C) where n_l(m) =
+    number of degrees with l >= m."""
+    p = {}
+    keys = jax.random.split(key, cfg.m_max + 1)
+    for m in range(cfg.m_max + 1):
+        n_l = cfg.l_max + 1 - m
+        d = n_l * cfg.d_hidden
+        kr, ki = jax.random.split(keys[m])
+        p[f"w{m}_r"] = layers.dense_init(kr, d, d, dtype)
+        if m > 0:
+            p[f"w{m}_i"] = layers.dense_init(ki, d, d, dtype)
+    return p
+
+
+def _layer_init(key, cfg: EquiformerConfig, dtype) -> Params:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    c = cfg.d_hidden
+    return {
+        "so2": _so2_weights(k1, cfg, dtype),
+        "radial": {
+            "w1": layers.dense_init(k2, cfg.n_rbf, c, dtype),
+            "w2": layers.dense_init(
+                k3, c, (cfg.m_max + 1) * c, dtype
+            ),
+        },
+        "attn": {
+            "w_alpha": layers.dense_init(k4, 3 * c, cfg.n_heads, dtype),
+        },
+        "ffn": {
+            # per-degree channel mixing (equivariant: shared over m within l)
+            "wl": (jax.random.normal(k5, (cfg.l_max + 1, c, c), jnp.float32)
+                   / math.sqrt(c)).astype(dtype),
+            "gate": layers.dense_init(k6, c, (cfg.l_max + 1) * c, dtype),
+        },
+        "ln_scale": jnp.ones((cfg.l_max + 1, c), dtype),
+    }
+
+
+def equiformer_init(key, cfg: EquiformerConfig, dtype=jnp.float32) -> Params:
+    ke, kl, kh = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(lkeys)
+    d_in = cfg.d_feat if cfg.d_feat else cfg.n_node_types
+    p: Params = {
+        "embed": layers.dense_init(ke, d_in, cfg.d_hidden, dtype),
+        "layers": stacked,
+        "head": layers.dense_init(
+            kh, cfg.d_hidden, cfg.n_classes if cfg.n_classes else 1, dtype
+        ),
+    }
+    return p
+
+
+# --------------------------------------------------------------------------
+# equivariant primitives
+# --------------------------------------------------------------------------
+
+def equiv_layernorm(x: jax.Array, scale: jax.Array, cfg: EquiformerConfig) -> jax.Array:
+    """Norm over each degree's (2l+1, C) block magnitude; scale per (l, C)."""
+    outs = []
+    for l, (off, w) in enumerate(cfg.degree_slices()):
+        blk = x[:, off : off + w, :]
+        norm = jnp.sqrt(jnp.mean(blk.astype(jnp.float32) ** 2,
+                                 axis=(1, 2), keepdims=True) + 1e-6)
+        outs.append((blk / norm.astype(blk.dtype)) * scale[l][None, None, :])
+    return jnp.concatenate(outs, axis=1)
+
+
+def _rbf(dist: jax.Array, cfg: EquiformerConfig) -> jax.Array:
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf, dtype=jnp.float32)
+    gamma = (cfg.n_rbf / cfg.cutoff) ** 2
+    return jnp.exp(-gamma * (dist[:, None] - centers[None, :]) ** 2).astype(dist.dtype)
+
+
+def so2_conv(
+    lp: Params, x_rot: jax.Array, radial: jax.Array, cfg: EquiformerConfig
+) -> jax.Array:
+    """SO(2) convolution in the edge frame, |m| <= m_max.
+
+    x_rot: (E, K, C) rotated coefficients; radial: (E, m_max+1, C).
+    Output: (E, K, C) with coefficients for |m| > m_max zeroed.
+    """
+    e = x_rot.shape[0]
+    c = cfg.d_hidden
+    dt = x_rot.dtype
+    out = jnp.zeros_like(x_rot)
+
+    # m = 0
+    idx0 = _m_indices(cfg, 0)
+    h0 = x_rot[:, idx0, :].reshape(e, -1)
+    y0 = h0 @ lp["so2"]["w0_r"].astype(dt)
+    y0 = y0.reshape(e, len(idx0), c) * radial[:, 0:1, :]
+    out = out.at[:, idx0, :].set(y0)
+
+    for m in range(1, cfg.m_max + 1):
+        ip = _m_indices(cfg, m)
+        im = _m_indices(cfg, -m)
+        xp = x_rot[:, ip, :].reshape(e, -1)
+        xm = x_rot[:, im, :].reshape(e, -1)
+        wr = lp["so2"][f"w{m}_r"].astype(dt)
+        wi = lp["so2"][f"w{m}_i"].astype(dt)
+        yp = xp @ wr - xm @ wi
+        ym = xp @ wi + xm @ wr
+        rad = radial[:, m : m + 1, :]
+        out = out.at[:, ip, :].set(yp.reshape(e, len(ip), c) * rad)
+        out = out.at[:, im, :].set(ym.reshape(e, len(im), c) * rad)
+    return out
+
+
+def _m_indices(cfg: EquiformerConfig, m: int) -> list[int]:
+    idx, off = [], 0
+    for l in range(cfg.l_max + 1):
+        w = 2 * l + 1
+        if abs(m) <= l:
+            idx.append(off + l + m)
+        off += w
+    return idx
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _edge_rotations(positions: jax.Array, src: jax.Array, dst: jax.Array,
+                    cfg: EquiformerConfig):
+    """Per-degree Wigner blocks [(E, 2l+1, 2l+1)] — NOT the dense (E, K, K)
+    block-diagonal, which is 81% zeros at l_max=6; rotating per degree cuts
+    both the rotation flops and the dmat memory traffic ~5.3×
+    (EXPERIMENTS.md §Perf, equiformer iteration)."""
+    vec = positions[dst] - positions[src]
+    dist = jnp.linalg.norm(vec.astype(jnp.float32), axis=-1) + 1e-9
+    m3 = so3.rotation_to_z(vec.astype(jnp.float32))
+    mats = so3.wigner_matrices(m3, cfg.l_max)     # [(E, 2l+1, 2l+1)]
+    return ([m.astype(positions.dtype) for m in mats],
+            dist.astype(positions.dtype))
+
+
+def _rotate(mats: list[jax.Array], x: jax.Array, cfg: EquiformerConfig,
+            transpose: bool = False) -> jax.Array:
+    """Apply the block-diagonal rotation degree-by-degree."""
+    outs = []
+    eq = "eji,ejc->eic" if transpose else "eij,ejc->eic"
+    for l, (off, w) in enumerate(cfg.degree_slices()):
+        outs.append(jnp.einsum(eq, mats[l], x[:, off : off + w, :]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _layer(lp: Params, x: jax.Array, dmat: jax.Array, dist: jax.Array,
+           src: jax.Array, dst: jax.Array, edge_mask: jax.Array,
+           n_nodes: int, cfg: EquiformerConfig) -> jax.Array:
+    dt = x.dtype
+    c = cfg.d_hidden
+    # gather + rotate into edge frame (per-degree blocks)
+    x_src = x[src]                                    # (E, K, C)
+    x_rot = _rotate(dmat, x_src, cfg)
+    x_rot = shard(x_rot, ("edges", None, None))
+    # radial modulation
+    rad = _rbf(dist, cfg)
+    h = jax.nn.silu(rad @ lp["radial"]["w1"].astype(dt))
+    radial = (h @ lp["radial"]["w2"].astype(dt)).reshape(-1, cfg.m_max + 1, c)
+    msg_rot = so2_conv(lp, x_rot, radial, cfg)
+    # rotate back (D^T = D^{-1}, per degree)
+    msg = _rotate(dmat, msg_rot, cfg, transpose=True)
+    msg = shard(msg, ("edges", None, None))
+    # scalar-channel attention over incoming edges
+    inv_t = x[dst][:, 0, :]
+    inv_s = x_src[:, 0, :]
+    inv_m = msg[:, 0, :]
+    alpha_in = jnp.concatenate([inv_t, inv_s, inv_m], axis=-1)
+    logits = (alpha_in @ lp["attn"]["w_alpha"].astype(dt)).astype(jnp.float32)
+    logits = jnp.where(edge_mask[:, None] > 0, logits, -1e30)
+    alpha = gnn_common.segment_softmax(logits, dst, n_nodes)      # (E, H)
+    alpha = (alpha * edge_mask[:, None]).astype(dt)
+    mh = msg.reshape(msg.shape[0], cfg.n_coeff, cfg.n_heads, c // cfg.n_heads)
+    mh = mh * alpha[:, None, :, None]
+    agg = jax.ops.segment_sum(
+        mh.reshape(msg.shape[0], cfg.n_coeff, c), dst, num_segments=n_nodes
+    )
+    x = x + agg
+    # equivariant FFN: scalar-gated per-degree channel mix
+    x = equiv_layernorm(x, lp["ln_scale"], cfg)
+    gates = jax.nn.sigmoid(
+        (x[:, 0, :] @ lp["ffn"]["gate"].astype(dt))
+    ).reshape(-1, cfg.l_max + 1, c)
+    outs = []
+    for l, (off, w) in enumerate(cfg.degree_slices()):
+        blk = x[:, off : off + w, :] @ lp["ffn"]["wl"][l].astype(dt)
+        outs.append(blk * gates[:, l : l + 1, :])
+    return x + jnp.concatenate(outs, axis=1)
+
+
+def equiformer_forward(params: Params, batch: dict, cfg: EquiformerConfig) -> jax.Array:
+    """batch: positions (N,3), node_feat (N,d) or node_type (N,), src/dst (E,),
+    edge_mask (E,), node_mask (N,). Returns per-node head output."""
+    dt = params["embed"].dtype
+    if cfg.d_feat:
+        feats = batch["node_feat"].astype(dt)
+    else:
+        feats = jax.nn.one_hot(batch["node_type"], cfg.n_node_types, dtype=dt)
+    n = feats.shape[0]
+    x0 = feats @ params["embed"].astype(dt)           # (N, C)
+    x = jnp.zeros((n, cfg.n_coeff, cfg.d_hidden), dt).at[:, 0, :].set(x0)
+    x = shard(x, ("nodes", None, None))
+    dmat, dist = _edge_rotations(
+        batch["positions"].astype(dt), batch["src"], batch["dst"], cfg
+    )
+
+    def body(x, lp):
+        return _layer(lp, x, dmat, dist, batch["src"], batch["dst"],
+                      batch["edge_mask"], n, cfg), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    return x[:, 0, :] @ params["head"].astype(dt)     # (N, n_classes or 1)
+
+
+def equiformer_loss(params: Params, batch: dict, cfg: EquiformerConfig):
+    out = equiformer_forward(params, batch, cfg).astype(jnp.float32)
+    mask = batch["node_mask"].astype(jnp.float32)
+    if cfg.n_classes:
+        labels = batch["labels"]
+        lm = mask * (labels >= 0)
+        logz = jax.nn.logsumexp(out, axis=-1)
+        ll = jnp.take_along_axis(out, jnp.clip(labels, 0)[:, None], axis=-1)[:, 0]
+        ce = -((ll - logz) * lm).sum() / jnp.clip(lm.sum(), 1.0)
+        return ce, {"ce": ce}
+    # graph energy regression: sum node scalars per graph
+    graph_id = batch["graph_id"]
+    n_graphs = batch["targets"].shape[0]
+    energy = jax.ops.segment_sum(out[:, 0] * mask, graph_id, num_segments=n_graphs)
+    mse = jnp.mean((energy - batch["targets"]) ** 2)
+    return mse, {"mse": mse}

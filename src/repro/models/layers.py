@@ -1,0 +1,275 @@
+"""Common neural building blocks — pure functions over param pytrees.
+
+Conventions: params are nested dicts of jnp arrays; every apply fn takes
+(params, inputs, cfg-ish kwargs) and is jit/vmap/scan-safe; compute dtype is
+pinned by the caller (bf16 for the TPU target, f32 for CPU tests); weights
+are stored f32 (or bf16 under ``param_dtype``) and cast on use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard, shard_if_divisible
+
+Params = dict
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu2":  # squared ReLU (Primer / Nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: broadcastable to (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))          # (d_head/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, D/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# grouped-query attention (full, causal) + KV-cache decode
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    # sliding-window attention (beyond-paper long-context option); 0 = full
+    window: int = 0
+
+
+def attn_init(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * cfg.d_head, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * cfg.d_head, dtype),
+        "wo": dense_init(k4, cfg.n_heads * cfg.d_head, cfg.d_model, dtype),
+    }
+
+
+def _qkv(params: Params, x: jax.Array, cfg: AttnConfig):
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = shard(q, ("batch", "act_seq", "heads", None))
+    k = shard_if_divisible(k, ("batch", "act_seq", "kv_heads", None), dim=2)
+    v = shard_if_divisible(v, ("batch", "act_seq", "kv_heads", None), dim=2)
+    return q, k, v
+
+
+def attention(params: Params, x: jax.Array, cfg: AttnConfig,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Full (optionally causal / sliding-window) GQA attention.
+
+    x: (B, S, d_model) -> (B, S, d_model).
+    """
+    b, s, _ = x.shape
+    dt = x.dtype
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, s, cfg.n_kv_heads, groups, cfg.d_head)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.d_head)
+    ii = jnp.arange(s)
+    mask = jnp.ones((s, s), dtype=bool)
+    if cfg.causal:
+        mask &= ii[:, None] >= ii[None, :]
+    if cfg.window:
+        mask &= ii[:, None] - ii[None, :] < cfg.window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v).reshape(b, s, -1)
+    out = shard(out, ("batch", "act_seq", "heads"))
+    return out @ params["wo"].astype(dt)
+
+
+def attention_chunked(params: Params, x: jax.Array, cfg: AttnConfig,
+                      positions: jax.Array | None = None,
+                      chunk: int = 1024) -> jax.Array:
+    """Query-chunked causal GQA (flash-attention outer loop).
+
+    Never materializes the (S, S) score matrix — per chunk the live buffer is
+    (B, H, chunk, S). This is the long-prefill path (32k+): full attention at
+    S=32k would need ~12 GB/device of f32 scores on the production mesh;
+    chunked needs S/chunk × less. Numerics identical to :func:`attention`
+    (tested).
+    """
+    b, s, _ = x.shape
+    dt = x.dtype
+    if s % chunk:
+        return attention(params, x, cfg, positions)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    n_chunks = s // chunk
+    qg = q.reshape(b, n_chunks, chunk, cfg.n_kv_heads, groups, cfg.d_head)
+    qg = jnp.moveaxis(qg, 1, 0)                      # (n_chunks, B, c, h, g, d)
+    kk = jnp.arange(s)
+
+    def one(args):
+        qi, i = args
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qi, k).astype(jnp.float32)
+        scores *= 1.0 / math.sqrt(cfg.d_head)
+        qq = i * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, s), dtype=bool)
+        if cfg.causal:
+            mask &= qq[:, None] >= kk[None, :]
+        if cfg.window:
+            mask &= qq[:, None] - kk[None, :] < cfg.window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+    out = jax.lax.map(one, (qg, jnp.arange(n_chunks)))   # (n_chunks, B, c, ...)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, -1)
+    out = shard(out, ("batch", "act_seq", "heads"))
+    return out @ params["wo"].astype(dt)
+
+
+def attention_decode(
+    params: Params, x: jax.Array, cfg: AttnConfig,
+    k_cache: jax.Array, v_cache: jax.Array, cache_len: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, d_model); caches: (B, S_max, n_kv, d_head); cache_len: (B,)
+    Returns (out (B,1,d_model), new_k, new_v).
+    """
+    b, _, _ = x.shape
+    s_max = k_cache.shape[1]
+    dt = x.dtype
+    positions = cache_len[:, None]                      # (B, 1)
+    q, k_new, v_new = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    # write the new token into the cache at cache_len (per-batch dynamic);
+    # the cache keeps ITS dtype (bf16 in production even under f32 params)
+    cdt = k_cache.dtype
+    onehot = (jnp.arange(s_max)[None, :] == cache_len[:, None]).astype(cdt)
+    k_cache = (k_cache * (1 - onehot)[..., None, None]
+               + onehot[..., None, None] * k_new.astype(cdt))
+    v_cache = (v_cache * (1 - onehot)[..., None, None]
+               + onehot[..., None, None] * v_new.astype(cdt))
+    groups = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, groups, cfg.d_head)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(cfg.d_head)
+    valid = jnp.arange(s_max)[None, :] <= cache_len[:, None]   # (B, S_max)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_cache).reshape(b, 1, -1)
+    return out @ params["wo"].astype(dt), k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLP (dense FFN)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_model: int
+    d_ff: int
+    act: str = "silu"     # "silu" => SwiGLU (gated); others => plain 2-layer
+    gated: bool = True
+
+
+def mlp_init(key, cfg: MlpConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, cfg.d_model, cfg.d_ff, dtype),
+        "wo": dense_init(k2, cfg.d_ff, cfg.d_model, dtype),
+    }
+    if cfg.gated:
+        p["wg"] = dense_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def mlp(params: Params, x: jax.Array, cfg: MlpConfig) -> jax.Array:
+    dt = x.dtype
+    h = x @ params["wi"].astype(dt)
+    h = shard(h, ("batch", "act_seq", "mlp"))
+    if cfg.gated:
+        g = x @ params["wg"].astype(dt)
+        h = activation(cfg.act, g) * h
+    else:
+        h = activation(cfg.act, h)
+    return h @ params["wo"].astype(dt)

@@ -1,0 +1,216 @@
+"""Top-k routed Mixture-of-Experts with capacity-based dense dispatch.
+
+Compile-friendly (static shapes) and EP-shardable: tokens are assigned
+top-k experts; each expert takes up to C = ceil(T·k·cf / E) tokens (overflow
+drops, standard GShard/Switch semantics); dispatch/combine are gather/
+scatter by index — the expert dim shards over the 'model' mesh axis (EP) and
+the capacity dim over 'data', so GSPMD emits the canonical all-to-all pair
+around the expert GEMMs. Load-balance aux loss per Switch Transformer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers
+from repro.models.layers import Params
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    gated: bool = True
+    aux_loss_weight: float = 0.01
+    # Arctic-style dense residual FFN running in parallel with the MoE path
+    residual_d_ff: int = 0
+    # group-local dispatch (beyond-paper §Perf optimization): tokens are
+    # dispatched within G groups aligned to the data-parallel shards, so the
+    # capacity gather/scatter never crosses devices; each device computes
+    # its (group × expert-shard) slot block. 0 = global dispatch (baseline).
+    dispatch_groups: int = 0
+
+
+def moe_init(key, cfg: MoeConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    def ed(k, a, b):
+        return (jax.random.normal(k, (e, a, b), dtype=jnp.float32) / jnp.sqrt(a)).astype(dtype)
+    p = {
+        "router": layers.dense_init(k1, d, e, jnp.float32),  # router stays f32
+        "wi": ed(k2, d, f),
+        "wo": ed(k3, f, d),
+    }
+    if cfg.gated:
+        p["wg"] = ed(k4, d, f)
+    if cfg.residual_d_ff:
+        p["residual"] = layers.mlp_init(
+            k5, layers.MlpConfig(d, cfg.residual_d_ff, cfg.act, cfg.gated), dtype
+        )
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoeConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe(params: Params, x: jax.Array, cfg: MoeConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    if cfg.dispatch_groups > 1 and (x.shape[0] * x.shape[1]) % cfg.dispatch_groups == 0:
+        return moe_grouped(params, x, cfg)
+    b, s, d = x.shape
+    dt = x.dtype
+    t = b * s
+    xt = shard(x.reshape(t, d), ("tokens", None))
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)         # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=0) - flat_oh          # (T·k, E)
+    pos = jnp.sum(pos_in_expert * flat_oh, axis=-1)                # (T·k,)
+    expert = gate_idx.reshape(t * k)
+    keep = pos < cap
+
+    # scatter token indices into the (E, C) dispatch table.
+    # NB: all (T,)-sized intermediates stay exactly T long — a pad row
+    # (T+1) makes the token dim odd and therefore UNSHARDABLE, which
+    # costs a full-size all-reduce per layer at mesh scale (found via the
+    # HLO byte profile; see EXPERIMENTS.md §Perf). OOB indices with
+    # mode="drop"/"fill" give the pad semantics without the pad row.
+    slot = expert * cap + pos                                      # (T·k,)
+    slot = jnp.where(keep, slot, e * cap)                          # dropped -> OOB
+    dispatch = jnp.full((e * cap,), t, dtype=jnp.int32)            # t = OOB id
+    token_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    dispatch = dispatch.at[slot].set(token_ids, mode="drop").reshape(e, cap)
+
+    # gather tokens (OOB dispatch ids read as 0), run expert FFNs over E
+    xe = xt.at[dispatch].get(mode="fill", fill_value=0)            # (E, C, d)
+    xe = shard(xe, ("experts", "expert_cap", None))
+    h = jnp.einsum("ecd,edf->ecf", xe, params["wi"].astype(dt))
+    if cfg.gated:
+        g = jnp.einsum("ecd,edf->ecf", xe, params["wg"].astype(dt))
+        h = layers.activation(cfg.act, g) * h
+    else:
+        h = layers.activation(cfg.act, h)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dt))    # (E, C, d)
+    ye = shard(ye, ("experts", "expert_cap", None))
+
+    # combine: weighted scatter-add back to tokens (OOB ids dropped; the
+    # output stays (T, d) so the token dim keeps its batch sharding)
+    gate_flat = jnp.where(keep, gate_vals.reshape(t * k), 0.0)
+    src_token = jnp.where(keep, token_ids, t)                      # t = OOB
+    ye_flat = ye.reshape(e * cap, d)
+    picked = ye_flat[jnp.where(keep, expert * cap + pos, 0)]       # (T·k, d)
+    out = jnp.zeros((t, d), dt).at[src_token].add(
+        picked * gate_flat[:, None].astype(dt), mode="drop"
+    )
+    out = shard(out, ("tokens", None))
+
+    # Switch aux loss: E * sum(frac_tokens_e * mean_prob_e)
+    frac = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac * mean_prob)
+    return _finish(params, x, out, aux, cfg)
+
+
+def _finish(params, x, out, aux, cfg):
+    b, s, d = x.shape
+    dt = x.dtype
+
+    out = out.reshape(b, s, d)
+    if cfg.residual_d_ff:
+        out = out + layers.mlp(
+            params["residual"], x,
+            layers.MlpConfig(cfg.d_model, cfg.residual_d_ff, cfg.act, cfg.gated),
+        )
+    return out, aux
+
+
+def moe_grouped(params: Params, x: jax.Array,
+                cfg: MoeConfig) -> tuple[jax.Array, jax.Array]:
+    """Group-local dispatch (§Perf): routing, capacity positions, gather and
+    combine all happen WITHIN G token groups aligned to the DP shards, so no
+    dispatch collective ever crosses devices. The expert einsum computes each
+    (group, expert) slot block on the device owning (data=g, model=e) — the
+    compute is identical to the global path up to per-group capacity
+    (standard local-dispatch EP semantics; equals the dense reference when
+    capacity is ample, tested)."""
+    b, s, d = x.shape
+    dt = x.dtype
+    t = b * s
+    G = cfg.dispatch_groups
+    tg = t // G
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(8, -(-int(tg * k * cfg.capacity_factor / e) // 8) * 8)
+
+    xg = shard(x.reshape(G, tg, d), ("tokens", None, None))
+    logits = (xg.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (G, tg, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # (G, tg, k, E)
+    flat_oh = onehot.reshape(G, tg * k, e)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=1) - flat_oh       # per-group!
+    pos = jnp.sum(pos_in_expert * flat_oh, axis=-1)             # (G, tg·k)
+    expert = gate_idx.reshape(G, tg * k)
+    keep = pos < cap
+
+    slot = jnp.where(keep, expert * cap + pos, e * cap)         # OOB drop
+    token_ids = jnp.tile(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None], (G, 1))
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None]
+    dispatch = jnp.full((G, e * cap), tg, dtype=jnp.int32)
+    dispatch = dispatch.at[gidx, slot].set(token_ids, mode="drop")
+
+    valid = dispatch < tg                                       # (G, E·C)
+    safe = jnp.minimum(dispatch, tg - 1)
+    xe = jnp.take_along_axis(xg, safe[..., None], axis=1)       # group-LOCAL
+    xe = jnp.where(valid[..., None], xe, 0).reshape(G, e, cap, d)
+    xe = shard(xe, ("tokens", "experts", None, None))           # (dp, model)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(dt))
+    if cfg.gated:
+        gg = jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(dt))
+        h = layers.activation(cfg.act, gg) * h
+    else:
+        h = layers.activation(cfg.act, h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+    ye = shard(ye, ("tokens", "experts", None, None))
+
+    # token-major combine: gather each token's k expert outputs, then a
+    # group-local scatter-add. NB a slot-major variant (scatter ye into the
+    # token buffer and all-reduce only (G, tg, d)) was napkin-math better
+    # (T×d ideal volume) but measured 2.2× WORSE under GSPMD (34 s → 76 s
+    # T_coll on arctic train_4k) — the cross-shard scatter lowers as
+    # all-gather + all-reduce; refutation logged in EXPERIMENTS.md §Perf.
+    gate_flat = jnp.where(keep, gate_vals.reshape(G, tg * k), 0.0)
+    src_token = jnp.where(keep, token_ids, tg)                  # OOB drop
+    ye_flat = ye.reshape(G, e * cap, d)
+    picked = jnp.take_along_axis(
+        ye_flat, jnp.where(keep, expert * cap + pos, 0)[..., None], axis=1)
+    out = jnp.zeros((G, tg, d), dt).at[gidx, src_token].add(
+        picked * gate_flat[..., None].astype(dt), mode="drop")
+    out = shard(out, ("tokens", None, None))
+
+    frac = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac * mean_prob)
+    return _finish(params, x, out.reshape(t, d), aux, cfg)

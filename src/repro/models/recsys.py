@@ -1,0 +1,343 @@
+"""RecSys model zoo: SASRec, FM, two-tower retrieval, MIND.
+
+The embedding LOOKUP is the hot path: JAX has no native EmbeddingBag, so it
+is built here from ``jnp.take`` + ``jax.ops.segment_sum`` (part of the
+system, per assignment). Tables are row-sharded over the 'model' mesh axis.
+
+Paper-technique integration (DESIGN.md §4): tables support the hashing
+trick, and the row-assignment hash is selectable between RH and **IDL** —
+temporally-correlated ids (session neighbors) then co-locate in the table so
+gathers touch fewer HBM pages; same locality argument as the BF probes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.distributed.sharding import shard
+from repro.models import layers
+from repro.models.layers import Params
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag with optional hashing-trick (RH or IDL row assignment)
+# --------------------------------------------------------------------------
+
+def hash_rows(ids: jax.Array, n_rows: int, scheme: str = "none",
+              L: int = 4096) -> jax.Array:
+    """Map raw ids -> table rows. "none": modulo; "rh": murmur-style;
+    "idl": anchor from id-bucket (locality) + local hash — session-adjacent
+    ids land in the same L-row window without colliding."""
+    if scheme == "none":
+        return (ids % n_rows).astype(jnp.int32)
+    if scheme == "rh":
+        return hashing.hash_to_range(ids.astype(jnp.uint64), 0x5EED, n_rows).astype(jnp.int32)
+    if scheme == "idl":
+        # ids are grouped L/16 per window of L rows (load factor 1/16) —
+        # identity preservation needs the window sparse, exactly like the
+        # paper's L >> expected probes-per-window
+        group = max(1, L // 16)
+        bucket = (ids // group).astype(jnp.uint64)  # locality proxy: id blocks
+        anchor = hashing.hash_to_range(bucket, 0xA17C, max(n_rows // L, 1))
+        local = hashing.hash_to_range(ids.astype(jnp.uint64), 0x10CA, L)
+        return (anchor.astype(jnp.int32) * np.int32(L) + local.astype(jnp.int32)) % n_rows
+    raise ValueError(scheme)
+
+
+def embedding_bag(
+    table: jax.Array, ids: jax.Array, offsets: jax.Array | None = None,
+    mode: str = "sum", hash_scheme: str = "none",
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent.
+
+    ids (n,) with offsets (bags+1,) => ragged bags; or ids (B, k) fixed bags.
+    """
+    n_rows = table.shape[0]
+    rows = hash_rows(ids, n_rows, hash_scheme)
+    vecs = jnp.take(table, rows, axis=0)
+    if offsets is None:
+        red = vecs.sum(axis=-2) if mode == "sum" else vecs.mean(axis=-2)
+        return red
+    n_bags = offsets.shape[0] - 1
+    seg = jnp.searchsorted(offsets[1:], jnp.arange(ids.shape[0]), side="right")
+    out = jax.ops.segment_sum(vecs, seg, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(seg, vecs.dtype), seg, n_bags)
+        out = out / jnp.clip(cnt, 1.0)[:, None]
+    return out
+
+
+# --------------------------------------------------------------------------
+# FM — factorization machine (Rendle ICDM'10): O(nk) sum-square trick
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    vocab_per_field: int = 1 << 20
+    hash_scheme: str = "none"
+
+
+def fm_init(key, cfg: FMConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "tables": layers.embed_init(
+            k1, cfg.n_sparse * cfg.vocab_per_field, cfg.embed_dim, dtype
+        ),
+        "linear": layers.embed_init(k2, cfg.n_sparse * cfg.vocab_per_field, 1, dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+
+
+def fm_forward(params: Params, feats: jax.Array, cfg: FMConfig) -> jax.Array:
+    """feats: (B, n_sparse) int32 raw categorical ids -> (B,) logit."""
+    b = feats.shape[0]
+    field_offset = jnp.arange(cfg.n_sparse, dtype=feats.dtype) * cfg.vocab_per_field
+    ids = feats + field_offset[None, :]
+    rows = hash_rows(ids, params["tables"].shape[0], cfg.hash_scheme)
+    v = jnp.take(params["tables"], rows, axis=0)        # (B, F, k)
+    v = shard(v, ("batch", None, None))
+    lin = jnp.take(params["linear"], rows, axis=0)[..., 0].sum(-1)
+    s = v.sum(axis=1)                                    # Σ v_i x_i
+    pair = 0.5 * ((s * s).sum(-1) - (v * v).sum(axis=(1, 2)))
+    return params["bias"].astype(jnp.float32) + lin.astype(jnp.float32) + pair.astype(jnp.float32)
+
+
+def fm_loss(params: Params, batch: dict, cfg: FMConfig):
+    logit = fm_forward(params, batch["feats"], cfg)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+    )
+    return loss, {"bce": loss}
+
+
+# --------------------------------------------------------------------------
+# two-tower retrieval (YouTube RecSys'19): in-batch sampled softmax
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    n_users: int = 1 << 23
+    n_items: int = 1 << 23
+    n_user_feats: int = 8
+    n_item_feats: int = 4
+    hash_scheme: str = "none"
+    temperature: float = 0.05
+
+
+def _tower_init(key, d_in: int, dims: tuple[int, ...], dtype) -> Params:
+    ks = jax.random.split(key, len(dims))
+    return {
+        f"w{i}": layers.dense_init(ks[i], d_in if i == 0 else dims[i - 1], d, dtype)
+        for i, d in enumerate(dims)
+    }
+
+
+def _tower(params: Params, x: jax.Array, dims: tuple[int, ...]) -> jax.Array:
+    for i in range(len(dims)):
+        x = x @ params[f"w{i}"].astype(x.dtype)
+        if i < len(dims) - 1:
+            x = jax.nn.relu(x)
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-6)
+
+
+def twotower_init(key, cfg: TwoTowerConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "user_table": layers.embed_init(k1, cfg.n_users, cfg.embed_dim, dtype),
+        "item_table": layers.embed_init(k2, cfg.n_items, cfg.embed_dim, dtype),
+        "user_tower": _tower_init(k3, cfg.n_user_feats * cfg.embed_dim, cfg.tower_dims, dtype),
+        "item_tower": _tower_init(k4, cfg.n_item_feats * cfg.embed_dim, cfg.tower_dims, dtype),
+    }
+
+
+def twotower_embed(params: Params, batch: dict, cfg: TwoTowerConfig):
+    ue = embedding_bag(params["user_table"], batch["user_feats"],
+                       hash_scheme=cfg.hash_scheme, mode="sum")
+    # (B, n_user_feats, d) -> flatten: keep per-feat vectors
+    uraw = jnp.take(
+        params["user_table"],
+        hash_rows(batch["user_feats"], cfg.n_users, cfg.hash_scheme), axis=0,
+    ).reshape(batch["user_feats"].shape[0], -1)
+    iraw = jnp.take(
+        params["item_table"],
+        hash_rows(batch["item_feats"], cfg.n_items, cfg.hash_scheme), axis=0,
+    ).reshape(batch["item_feats"].shape[0], -1)
+    del ue
+    u = _tower(params["user_tower"], shard(uraw, ("batch", None)), cfg.tower_dims)
+    it = _tower(params["item_tower"], shard(iraw, ("batch", None)), cfg.tower_dims)
+    return u, it
+
+
+def twotower_loss(params: Params, batch: dict, cfg: TwoTowerConfig):
+    u, it = twotower_embed(params, batch, cfg)
+    logits = (u @ it.T) / cfg.temperature          # (B, B) in-batch negatives
+    labels = jnp.arange(u.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0] - logz
+    loss = -ll.mean()
+    return loss, {"sampled_softmax": loss}
+
+
+def twotower_score_candidates(params: Params, batch: dict, cfg: TwoTowerConfig):
+    """retrieval_cand shape: one query vs n_candidates items (batched dot)."""
+    u, _ = twotower_embed(
+        params, {"user_feats": batch["user_feats"], "item_feats": batch["cand_feats"][:1]}, cfg
+    )
+    iraw = jnp.take(
+        params["item_table"],
+        hash_rows(batch["cand_feats"], cfg.n_items, cfg.hash_scheme), axis=0,
+    ).reshape(batch["cand_feats"].shape[0], -1)
+    it = _tower(params["item_tower"], shard(iraw, ("batch", None)), cfg.tower_dims)
+    return (it @ u[0]).astype(jnp.float32)          # (n_candidates,)
+
+
+# --------------------------------------------------------------------------
+# SASRec (arXiv:1808.09781): causal self-attention over item sequences
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_items: int = 1 << 20
+    hash_scheme: str = "none"
+
+    def attn_cfg(self) -> layers.AttnConfig:
+        return layers.AttnConfig(
+            d_model=self.embed_dim, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, d_head=self.embed_dim // self.n_heads,
+        )
+
+
+def sasrec_init(key, cfg: SASRecConfig, dtype=jnp.float32) -> Params:
+    ke, kp, kl = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_blocks)
+
+    def blk(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.embed_dim,), dtype),
+            "ln2": jnp.ones((cfg.embed_dim,), dtype),
+            "attn": layers.attn_init(k1, cfg.attn_cfg(), dtype),
+            "mlp": layers.mlp_init(
+                k2, layers.MlpConfig(cfg.embed_dim, 4 * cfg.embed_dim, "relu", False), dtype
+            ),
+        }
+
+    return {
+        "item_table": layers.embed_init(ke, cfg.n_items, cfg.embed_dim, dtype),
+        "pos": layers.embed_init(kp, cfg.seq_len, cfg.embed_dim, dtype),
+        "blocks": jax.vmap(blk)(lkeys),
+        "ln_f": jnp.ones((cfg.embed_dim,), dtype),
+    }
+
+
+def sasrec_forward(params: Params, seq: jax.Array, cfg: SASRecConfig) -> jax.Array:
+    """seq (B, S) item ids -> (B, S, d) sequence representations."""
+    rows = hash_rows(seq, cfg.n_items, cfg.hash_scheme)
+    x = jnp.take(params["item_table"], rows, axis=0)
+    x = x + params["pos"][None, : seq.shape[1], :].astype(x.dtype)
+    x = shard(x, ("batch", "seq", None))
+
+    def body(x, bp):
+        h = layers.rmsnorm(x, bp["ln1"])
+        x = x + layers.attention(bp["attn"], h, cfg.attn_cfg())
+        h = layers.rmsnorm(x, bp["ln2"])
+        return x + layers.mlp(bp["mlp"], h, layers.MlpConfig(cfg.embed_dim, 4 * cfg.embed_dim, "relu", False)), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return layers.rmsnorm(x, params["ln_f"])
+
+
+def sasrec_loss(params: Params, batch: dict, cfg: SASRecConfig):
+    """BCE on (positive next item, sampled negative) — the paper's objective."""
+    h = sasrec_forward(params, batch["seq"], cfg)            # (B, S, d)
+    pos_rows = hash_rows(batch["pos"], cfg.n_items, cfg.hash_scheme)
+    neg_rows = hash_rows(batch["neg"], cfg.n_items, cfg.hash_scheme)
+    pe = jnp.take(params["item_table"], pos_rows, axis=0)
+    ne = jnp.take(params["item_table"], neg_rows, axis=0)
+    pos_logit = (h * pe).sum(-1).astype(jnp.float32)
+    neg_logit = (h * ne).sum(-1).astype(jnp.float32)
+    mask = (batch["pos"] >= 0).astype(jnp.float32)
+    bce = (
+        jnp.log1p(jnp.exp(-pos_logit)) + jnp.log1p(jnp.exp(neg_logit))
+    )
+    loss = (bce * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    return loss, {"bce": loss}
+
+
+# --------------------------------------------------------------------------
+# MIND (arXiv:1904.08030): multi-interest dynamic-routing capsules
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    n_items: int = 1 << 20
+    hash_scheme: str = "none"
+
+
+def mind_init(key, cfg: MINDConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "item_table": layers.embed_init(k1, cfg.n_items, cfg.embed_dim, dtype),
+        "S": layers.dense_init(k2, cfg.embed_dim, cfg.embed_dim, dtype),  # bilinear map
+    }
+
+
+def _squash(v: jax.Array) -> jax.Array:
+    n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: Params, seq: jax.Array, mask: jax.Array,
+                   cfg: MINDConfig) -> jax.Array:
+    """Dynamic routing: (B, S) history -> (B, K, d) interest capsules."""
+    rows = hash_rows(seq, cfg.n_items, cfg.hash_scheme)
+    e = jnp.take(params["item_table"], rows, axis=0)         # (B, S, d)
+    e = shard(e, ("batch", "seq", None))
+    u = e @ params["S"].astype(e.dtype)                      # behavior caps
+    b = jnp.zeros((seq.shape[0], cfg.n_interests, seq.shape[1]), jnp.float32)
+    for _ in range(cfg.capsule_iters):                       # fixed 3 iters
+        w = jax.nn.softmax(b, axis=1)                        # over interests
+        w = w * mask[:, None, :].astype(w.dtype)
+        v = _squash(jnp.einsum("bks,bsd->bkd", w.astype(u.dtype), u))
+        b = b + jnp.einsum("bkd,bsd->bks", v, u).astype(jnp.float32)
+    return v
+
+
+def mind_loss(params: Params, batch: dict, cfg: MINDConfig):
+    """Label-aware attention: train with sampled softmax on argmax interest."""
+    v = mind_interests(params, batch["seq"], batch["mask"], cfg)   # (B,K,d)
+    pos_rows = hash_rows(batch["pos"], cfg.n_items, cfg.hash_scheme)
+    neg_rows = hash_rows(batch["negs"], cfg.n_items, cfg.hash_scheme)
+    pe = jnp.take(params["item_table"], pos_rows, axis=0)          # (B, d)
+    ne = jnp.take(params["item_table"], neg_rows, axis=0)          # (B, Nneg, d)
+    # label-aware attention: pick interest with max dot to positive
+    sim = jnp.einsum("bkd,bd->bk", v, pe)
+    best = jnp.take_along_axis(v, jnp.argmax(sim, axis=1)[:, None, None], axis=1)[:, 0]
+    pos_logit = (best * pe).sum(-1).astype(jnp.float32)
+    neg_logit = jnp.einsum("bd,bnd->bn", best, ne).astype(jnp.float32)
+    logits = jnp.concatenate([pos_logit[:, None], neg_logit], axis=1)
+    loss = -(pos_logit - jax.nn.logsumexp(logits, axis=1)).mean()
+    return loss, {"sampled_softmax": loss}

@@ -1,0 +1,154 @@
+"""Real spherical-harmonic rotation matrices (Wigner D for real SH).
+
+Ivanic & Ruedenberg recursion (J. Phys. Chem. 1996 + 1998 erratum): builds
+R^l (the (2l+1)x(2l+1) rotation acting on real SH coefficients of degree l)
+from R^{l-1} and the l=1 matrix. All loops are static Python over (l, m, n);
+every emitted op is vectorized over the edge batch — this is the
+irrep-rotation half of the eSCN trick (rotate each edge to the z-axis so the
+tensor-product convolution becomes a cheap SO(2) m-channel mix).
+
+Index convention: R^l[..., m + l, n + l], m,n in [-l, l]. The l=1 real-SH
+basis order is (y, z, x), i.e. m = (-1, 0, 1).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rotation_to_z(edge_vec: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """Per-edge 3x3 rotation M with M @ d_hat = z_hat.
+
+    edge_vec: (E, 3). Returns (E, 3, 3) with rows = new (x', y', z'=d_hat)
+    axes — branchless reference-vector selection avoids the polar singularity.
+    """
+    d = edge_vec / (jnp.linalg.norm(edge_vec, axis=-1, keepdims=True) + eps)
+    near_z = jnp.abs(d[..., 2:3]) > 0.9
+    ref = jnp.where(
+        near_z,
+        jnp.asarray([1.0, 0.0, 0.0], edge_vec.dtype),
+        jnp.asarray([0.0, 0.0, 1.0], edge_vec.dtype),
+    )
+    x_ax = jnp.cross(ref, d)
+    x_ax = x_ax / (jnp.linalg.norm(x_ax, axis=-1, keepdims=True) + eps)
+    y_ax = jnp.cross(d, x_ax)
+    return jnp.stack([x_ax, y_ax, d], axis=-2)  # rows
+
+
+def _r1_from_matrix(m3: jax.Array) -> jax.Array:
+    """3x3 rotation (xyz basis) -> R^1 in real-SH order (y, z, x)."""
+    perm = np.array([1, 2, 0])
+    return m3[..., perm[:, None], perm[None, :]]
+
+
+@lru_cache(maxsize=None)
+def _uvw(l: int, m: int, n: int) -> tuple[float, float, float]:
+    denom = (l + n) * (l - n) if abs(n) < l else (2 * l) * (2 * l - 1)
+    u = math.sqrt((l + m) * (l - m) / denom)
+    dm0 = 1.0 if m == 0 else 0.0
+    v = 0.5 * math.sqrt(
+        (1.0 + dm0) * (l + abs(m) - 1) * (l + abs(m)) / denom
+    ) * (1.0 - 2.0 * dm0)
+    w = -0.5 * math.sqrt((l - abs(m) - 1) * (l - abs(m)) / denom) * (1.0 - dm0)
+    return u, v, w
+
+
+def _p(i: int, l: int, a: int, b: int, r1, rlm1):
+    """Helper P_i^{a,b} of the recursion (vectorized over leading dims)."""
+    if b == l:
+        return (
+            r1[..., i + 1, 2] * rlm1[..., a + l - 1, 2 * l - 2]
+            - r1[..., i + 1, 0] * rlm1[..., a + l - 1, 0]
+        )
+    if b == -l:
+        return (
+            r1[..., i + 1, 2] * rlm1[..., a + l - 1, 0]
+            + r1[..., i + 1, 0] * rlm1[..., a + l - 1, 2 * l - 2]
+        )
+    return r1[..., i + 1, 1] * rlm1[..., a + l - 1, b + l - 1]
+
+
+def _u_fn(l, m, n, r1, rlm1):
+    return _p(0, l, m, n, r1, rlm1)
+
+
+def _v_fn(l, m, n, r1, rlm1):
+    if m == 0:
+        return _p(1, l, 1, n, r1, rlm1) + _p(-1, l, -1, n, r1, rlm1)
+    if m > 0:
+        s = math.sqrt(2.0) if m == 1 else 1.0
+        out = _p(1, l, m - 1, n, r1, rlm1) * s
+        if m != 1:
+            out = out - _p(-1, l, -m + 1, n, r1, rlm1)
+        return out
+    s = math.sqrt(2.0) if m == -1 else 1.0
+    out = _p(-1, l, -m - 1, n, r1, rlm1) * s
+    if m != -1:
+        out = out + _p(1, l, m + 1, n, r1, rlm1)
+    return out
+
+
+def _w_fn(l, m, n, r1, rlm1):
+    if m == 0:
+        raise AssertionError("w coefficient is zero for m == 0")
+    if m > 0:
+        return _p(1, l, m + 1, n, r1, rlm1) + _p(-1, l, -m - 1, n, r1, rlm1)
+    return _p(1, l, m - 1, n, r1, rlm1) - _p(-1, l, -m + 1, n, r1, rlm1)
+
+
+def wigner_matrices(m3: jax.Array, l_max: int) -> list[jax.Array]:
+    """Real-SH rotation matrices [R^0, R^1, ..., R^l_max].
+
+    m3: (..., 3, 3) xyz rotation matrices. R^l has shape (..., 2l+1, 2l+1).
+    """
+    batch = m3.shape[:-2]
+    mats: list[jax.Array] = [jnp.ones(batch + (1, 1), m3.dtype)]
+    if l_max == 0:
+        return mats
+    r1 = _r1_from_matrix(m3)
+    mats.append(r1)
+    for l in range(2, l_max + 1):
+        rlm1 = mats[-1]
+        rows = []
+        for m in range(-l, l + 1):
+            row = []
+            for n in range(-l, l + 1):
+                u, v, w = _uvw(l, m, n)
+                term = jnp.zeros(batch, m3.dtype)
+                if abs(u) > 1e-12:
+                    term = term + u * _u_fn(l, m, n, r1, rlm1)
+                if abs(v) > 1e-12:
+                    term = term + v * _v_fn(l, m, n, r1, rlm1)
+                if abs(w) > 1e-12:
+                    term = term + w * _w_fn(l, m, n, r1, rlm1)
+                row.append(term)
+            rows.append(jnp.stack(row, axis=-1))
+        mats.append(jnp.stack(rows, axis=-2))
+    return mats
+
+
+def block_diag_wigner(m3: jax.Array, l_max: int) -> jax.Array:
+    """Stacked block-diagonal rotation over all degrees: (..., K, K),
+    K = (l_max+1)^2 — convenient for a single einsum over flat coeffs."""
+    mats = wigner_matrices(m3, l_max)
+    k = (l_max + 1) ** 2
+    batch = m3.shape[:-2]
+    out = jnp.zeros(batch + (k, k), m3.dtype)
+    off = 0
+    for l, r in enumerate(mats):
+        n = 2 * l + 1
+        out = out.at[..., off : off + n, off : off + n].set(r)
+        off += n
+    return out
+
+
+# --- real spherical harmonics evaluation (for tests) ----------------------
+
+def sh_l1(d: jax.Array) -> jax.Array:
+    """l=1 real SH (unnormalized, basis order y,z,x) of unit vectors."""
+    return jnp.stack([d[..., 1], d[..., 2], d[..., 0]], axis=-1)

@@ -1,0 +1,356 @@
+"""Decoder-only transformer LM: dense or MoE, GQA, RoPE, scan-over-layers.
+
+Covers all five assigned LM archs (arctic-480b, granite-moe-1b, granite-20b,
+nemotron-4-340b, internlm2-20b) via config. Layers are stacked into one
+pytree and iterated with ``jax.lax.scan`` + remat — constant-size HLO
+regardless of depth (essential for 96-layer dry-run compiles) and the
+standard activation-memory policy at scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers, moe as moe_mod
+from repro.models.layers import Params
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    act: str = "silu"
+    gated_mlp: bool = True
+    moe: moe_mod.MoeConfig | None = None
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    remat: bool = True
+    # sliding-window attention (beyond-paper option for long context); 0=full
+    attn_window: int = 0
+    # query-chunked (flash-style) attention; 0 = full scores. Enabled for the
+    # 32k prefill shapes where full scores exceed device memory.
+    attn_chunk: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def attn_cfg(self, window: int | None = None) -> layers.AttnConfig:
+        return layers.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, d_head=self.head_dim,
+            rope_theta=self.rope_theta,
+            window=self.attn_window if window is None else window,
+        )
+
+    def mlp_cfg(self) -> layers.MlpConfig:
+        return layers.MlpConfig(self.d_model, self.d_ff, self.act, self.gated_mlp)
+
+    def param_count(self) -> int:
+        """Total parameters (N for MODEL_FLOPS = 6·N·D)."""
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe is not None:
+            f = self.moe.d_ff
+            per_e = d * f * (3 if self.moe.gated else 2)
+            ffn = self.moe.n_experts * per_e + d * self.moe.n_experts
+            if self.moe.residual_d_ff:
+                ffn += d * self.moe.residual_d_ff * (3 if self.gated_mlp else 2)
+        else:
+            ffn = d * self.d_ff * (3 if self.gated_mlp else 2)
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (N_active for MoE)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        f = self.moe.d_ff
+        per_e = d * f * (3 if self.moe.gated else 2)
+        dense_like = dataclasses.replace(self, moe=None, d_ff=0, gated_mlp=False)
+        base = dense_like.param_count()
+        act_ffn = self.moe.top_k * per_e + d * self.moe.n_experts
+        if self.moe.residual_d_ff:
+            act_ffn += d * self.moe.residual_d_ff * (3 if self.gated_mlp else 2)
+        return base + self.n_layers * act_ffn
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": layers.attn_init(k1, cfg.attn_cfg(), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(k2, cfg.moe, dtype)
+    else:
+        p["mlp"] = layers.mlp_init(k2, cfg.mlp_cfg(), dtype)
+    return p
+
+
+def lm_init(key, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    ke, kl, ko = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(lkeys)
+    p: Params = {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model, dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ko, cfg.d_model, cfg.vocab, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+# logical specs for layer weights ONCE GATHERED over the FSDP axis: only the
+# TP axis remains. Constraining the scan-carried slice to these specs inside
+# the body makes GSPMD emit one per-layer weight all-gather (ZeRO-3 /
+# FSDP-style) instead of contracting against dp-sharded dims and
+# all-reducing full activations — found via the dry-run HLO byte profile,
+# ~30x collective reduction on nemotron train_4k (EXPERIMENTS.md §Perf).
+_GATHERED_SPECS = {
+    "wq": (None, "heads"), "wk": (None, "heads"), "wv": (None, "heads"),
+    "wo": ("heads", None),
+    "wi": (None, "mlp"), "wg": (None, "mlp"),
+}
+
+
+def _gather_fsdp(lp: Params) -> Params:
+    """Constrain layer weights to their dp-gathered (TP-only) sharding."""
+    out = {}
+    for k, v in lp.items():
+        if isinstance(v, dict):
+            if k == "moe":
+                out[k] = _gather_moe(v)
+            else:
+                out[k] = {
+                    kk: shard(vv, _GATHERED_SPECS[kk])
+                    if kk in _GATHERED_SPECS and vv.ndim == 2 else vv
+                    for kk, vv in v.items()
+                }
+        else:
+            out[k] = v
+    return out
+
+
+def _gather_moe(mp: Params) -> Params:
+    out = {}
+    for k, v in mp.items():
+        if k in ("wi", "wg", "wo") and not isinstance(v, dict):
+            out[k] = shard(v, ("experts", None, None))  # EP stays; dp gathered
+        elif k == "residual" and isinstance(v, dict):
+            out[k] = {
+                kk: shard(vv, _GATHERED_SPECS[kk])
+                if kk in _GATHERED_SPECS and vv.ndim == 2 else vv
+                for kk, vv in v.items()
+            }
+        else:
+            out[k] = v
+    return out
+
+
+def _block(cfg: LMConfig, lp: Params, x: jax.Array,
+           positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    lp = _gather_fsdp(lp)
+    h = layers.rmsnorm(x, lp["ln1"])
+    if cfg.attn_chunk:
+        a = layers.attention_chunked(
+            lp["attn"], h, cfg.attn_cfg(), positions, chunk=cfg.attn_chunk
+        )
+    else:
+        a = layers.attention(lp["attn"], h, cfg.attn_cfg(), positions)
+    # constrain the residual sum back to the seq-sharded stream HERE so the
+    # wo-matmul partial sums lower as reduce-scatter, not all-reduce +
+    # re-shard (§Perf iteration 4)
+    x = shard(x + a, ("batch", "seq", "embed"))
+    h = layers.rmsnorm(x, lp["ln2"])
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe(lp["moe"], h, cfg.moe)
+    else:
+        y, aux = layers.mlp(lp["mlp"], h, cfg.mlp_cfg()), jnp.float32(0)
+    x = shard(x + y, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def lm_hidden(params: Params, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 -> (final hidden (B, S, d), moe aux loss)."""
+    dt = params["ln_f"].dtype
+    # gather the embedding over dp once (vocab stays TP-sharded) — the token
+    # gather is then local per TP shard instead of a dp-wide exchange
+    embed = shard(params["embed"], ("vocab", None))
+    x = embed[tokens].astype(dt)
+    x = shard(x, ("batch", "seq", "embed"))
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _block(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["layers"])
+    return layers.rmsnorm(x, params["ln_f"]), aux
+
+
+def _unembed(params: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if "unembed" in params:
+        return x @ params["unembed"].astype(dt)
+    return x @ params["embed"].T.astype(dt)
+
+
+def lm_forward(params: Params, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 -> (logits (B, S, V) f32, aux loss)."""
+    x, aux = lm_hidden(params, tokens, cfg)
+    logits = shard(_unembed(params, x).astype(jnp.float32), ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def lm_loss(params: Params, batch: dict, cfg: LMConfig,
+            loss_chunks: int = 8) -> tuple[jax.Array, dict]:
+    """Next-token CE + z-loss + MoE aux, with CHUNKED cross-entropy.
+
+    Full (B, S, V) logits at e.g. B·S=1M, V=256k are ~1 TB — never
+    materialized. The unembed+CE runs over sequence chunks inside a
+    checkpointed scan, so only one chunk of logits is ever live (forward and
+    backward); the standard large-vocab loss treatment.
+    """
+    x, aux = lm_hidden(params, batch["tokens"], cfg)   # (B, S, d)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    n = loss_chunks if s % loss_chunks == 0 else 1
+    xs = x.reshape(b, n, s // n, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, s // n).transpose(1, 0, 2)
+    # NB: the unembed stays dp-sharded on d — gathering it outside the scan
+    # makes its gradient accumulator dp-replicated, which costs a full-size
+    # all-reduce per CE chunk (measured 2.4 TB/chip on nemotron; §Perf).
+    # Contracting over the sharded d costs one (tokens, V/16) logits
+    # all-reduce per chunk instead.
+
+    def chunk(carry, xl):
+        xc, lc = xl
+        logits = _unembed(params, xc).astype(jnp.float32)
+        logits = shard(logits, ("batch", "seq", "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.clip(lc, 0)[..., None], axis=-1)[..., 0] - logz
+        mask = (lc >= 0).astype(jnp.float32)
+        ce_sum, z_sum, cnt = carry
+        return (
+            ce_sum - (ll * mask).sum(),
+            z_sum + ((logz * mask) ** 2).sum(),
+            cnt + mask.sum(),
+        ), None
+
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    (ce_sum, z_sum, cnt), _ = jax.lax.scan(jax.checkpoint(chunk), init, (xs, ls))
+    denom = jnp.clip(cnt, 1.0)
+    ce = ce_sum / denom
+    zloss = 1e-4 * z_sum / denom
+    loss = ce + zloss + aux
+    return loss, {"ce": ce, "zloss": zloss, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# prefill (serve): fill the KV cache for a prompt, return last-token logits
+# --------------------------------------------------------------------------
+
+def lm_prefill(params: Params, tokens: jax.Array, cfg: LMConfig):
+    """tokens (B, S) -> (last-position logits (B, V) f32, kv cache pytree)."""
+    dt = params["ln_f"].dtype
+    x = params["embed"][tokens].astype(dt)
+    x = shard(x, ("batch", "seq", "embed"))
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, lp):
+        h = layers.rmsnorm(x, lp["ln1"])
+        q, k, v = layers._qkv(lp["attn"], h, cfg.attn_cfg())
+        del q
+        # the cache stores POST-RoPE keys (attention_decode rotates only the
+        # incoming token and scores against the cache as-is)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        x, _ = _block(cfg, lp, x, positions)
+        return x, (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (ks, vs) = jax.lax.scan(body_fn, x, params["layers"])
+    x = layers.rmsnorm(x, params["ln_f"])
+    logits = _unembed(params, x[:, -1, :]).astype(jnp.float32)
+    cache = {
+        "k": ks.astype(jnp.bfloat16),   # caches are bf16 in production
+        "v": vs.astype(jnp.bfloat16),
+        "len": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step): one token against a per-layer KV cache
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.float32) -> Params:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def lm_decode_step(params: Params, cache: Params, tokens: jax.Array,
+                   cfg: LMConfig) -> tuple[jax.Array, Params]:
+    """tokens (B,) int32 -> (logits (B, V), updated cache)."""
+    dt = params["ln_f"].dtype
+    x = params["embed"][tokens][:, None, :].astype(dt)     # (B, 1, d)
+    x = shard(x, ("batch", None, "embed"))
+
+    def body(carry, inputs):
+        x = carry
+        lp, kc, vc = inputs
+        lp = _gather_fsdp(lp)
+        h = layers.rmsnorm(x, lp["ln1"])
+        a, kc, vc = layers.attention_decode(
+            lp["attn"], h, cfg.attn_cfg(), kc, vc, cache["len"]
+        )
+        x = x + a
+        h = layers.rmsnorm(x, lp["ln2"])
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe(lp["moe"], h, cfg.moe)
+        else:
+            y = layers.mlp(lp["mlp"], h, cfg.mlp_cfg())
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"])
+    )
+    x = layers.rmsnorm(x, params["ln_f"])
+    if "unembed" in params:
+        logits = x[:, 0, :] @ params["unembed"].astype(dt)
+    else:
+        logits = x[:, 0, :] @ params["embed"].T.astype(dt)
+    new_cache = {"k": k_new, "v": v_new, "len": cache["len"] + 1}
+    return logits.astype(jnp.float32), new_cache

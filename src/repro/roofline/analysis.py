@@ -1,0 +1,230 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory    = HLO_bytes_per_chip / HBM_bw
+    collective= collective_bytes_per_chip / ICI_link_bw
+
+Source: ``repro.roofline.hlo_cost`` — our own HLO-text cost analysis.
+XLA's ``compiled.cost_analysis()`` counts each instruction ONCE, so a
+scan-over-96-layers reports one layer's flops (verified empirically, see
+EXPERIMENTS.md); hlo_cost walks the computation tree and multiplies
+``while`` bodies by their parsed trip counts. Collective bytes are likewise
+trip-aware, per collective kind. The SPMD module is the per-device program,
+so every number is per-chip. f32 dots are charged at half the bf16 MXU rate
+(v5e).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (the assignment's numbers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# one HLO result type, e.g. f32[128,7168]{1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction line: "%name = <type-or-tuple> <op>(" — op may be suffixed
+# ("all-gather-start") which we still count once (ignore matching -done).
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind result bytes of every collective in the module."""
+    out: dict[str, int] = {k: 0 for k in _COLL_OPS}
+    out["count"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # paired with -start; count once
+        out[op] += _shape_bytes(type_str)
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict[str, int]
+    model_flops: float | None = None
+    memory_stats: dict | None = None
+    matmul_flops_f32: float = 0.0
+    matmul_flops_lp: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        """All flops at bf16 peak. Note: XLA:CPU upcasts bf16 dots to f32
+        before the dot op, so dtype-splitting the CPU-compiled HLO would
+        mis-charge the TPU target (where these dots run in bf16); the
+        f32/lp split fields are informational only."""
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time = max of the three overlappable terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float | None:
+        """MODEL_FLOPS / HLO_FLOPs (total over chips) — remat/dispatch waste."""
+        if not self.model_flops:
+            return None
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else None
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term pins us to the compute roofline:
+        T_compute / T_bound (1.0 = perfectly compute-bound)."""
+        tb = self.t_bound
+        return self.t_compute / tb if tb else 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "matmul_flops_f32": self.matmul_flops_f32,
+            "matmul_flops_lp": self.matmul_flops_lp,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "memory_stats": self.memory_stats,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(
+    arch: str, shape: str, mesh_name: str, chips: int,
+    compiled, model_flops: float | None = None,
+) -> Roofline:
+    from repro.roofline import hlo_cost
+
+    text = compiled.as_text()
+    cost = hlo_cost.analyze(text)
+    coll = {k: int(v) for k, v in cost.coll_bytes.items()}
+    coll["count"] = int(cost.coll_count)
+    mem = memory_stats(compiled)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+        coll_bytes_per_chip=float(cost.coll_total),
+        coll_breakdown=coll, model_flops=model_flops,
+        memory_stats=mem,
+        matmul_flops_f32=cost.matmul_flops_f32,
+        matmul_flops_lp=cost.matmul_flops_lp,
+    )
+
+
+def memory_stats(compiled) -> dict | None:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out = {"repr": str(ma)[:500]}
+    return out
+
+
+def load_records(path: str) -> list[Roofline]:
+    with open(path) as f:
+        raw = json.load(f)
+    out = []
+    for r in raw:
+        out.append(Roofline(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            chips=r["chips"], flops_per_chip=r["flops_per_chip"],
+            bytes_per_chip=r["bytes_per_chip"],
+            coll_bytes_per_chip=r["coll_bytes_per_chip"],
+            coll_breakdown=r.get("coll_breakdown", {}),
+            model_flops=r.get("model_flops"),
+            memory_stats=r.get("memory_stats"),
+            matmul_flops_f32=r.get("matmul_flops_f32", 0.0),
+            matmul_flops_lp=r.get("matmul_flops_lp", 0.0),
+        ))
+    return out
+
+
+def format_table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':22} {'shape':14} {'mesh':6} "
+           f"{'T_comp(s)':>10} {'T_mem(s)':>10} {'T_coll(s)':>10} "
+           f"{'bound':>10} {'useful':>7} {'roofl%':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        uf = r.useful_flops_fraction
+        lines.append(
+            f"{r.arch:22} {r.shape:14} {r.mesh:6} "
+            f"{r.t_compute:10.3e} {r.t_memory:10.3e} {r.t_collective:10.3e} "
+            f"{r.bottleneck:>10} "
+            f"{uf if uf is None else f'{uf:.2f}':>7} "
+            f"{100*r.roofline_fraction:6.1f}%"
+        )
+    return "\n".join(lines)

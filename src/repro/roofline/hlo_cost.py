@@ -1,0 +1,480 @@
+"""HLO-text cost analysis with while-trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` visits each instruction ONCE — a
+``jax.lax.scan`` over 96 layers reports the flops of a single layer
+(verified empirically; see EXPERIMENTS.md §Dry-run methodology). For a
+trustworthy roofline we re-derive costs from ``compiled.as_text()``:
+
+* the computation graph is walked from ENTRY; ``while`` bodies are
+  multiplied by their trip count (parsed from the loop condition's
+  ``compare(%iv, %constant)`` bound — scans always lower to this form);
+* ``fusion``/``call``/``reduce`` include their called computation's flops;
+* dot flops = 2 × |output| × (contracted extent), from
+  ``lhs_contracting_dims`` and the operand's shape;
+* bytes are counted at FUSION boundaries (operands + outputs of each
+  top-level instruction — fusion internals live in registers, which is
+  exactly the HBM-traffic model the memory roofline term wants);
+* collective bytes are also trip-multiplied, per collective kind.
+
+The SPMD module is the per-device program, so every number is per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|true_computation|false_computation)="
+    r"%?([\w.\-]+)"
+)
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "expm1", "log1p", "cosine", "sine", "atan2"}
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x] if m.group(2) else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _num_elements(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening paren of operands
+
+    @property
+    def operands(self) -> list[str]:
+        # operand names appear before the closing paren of the operand list;
+        # attrs after "), " may also contain %refs (computations) — harmless
+        # for bytes since unknown names resolve to 0.
+        depth, i = 1, 0
+        s = self.rest
+        while i < len(s) and depth:
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+            i += 1
+        return _OPERAND_RE.findall(s[: i])
+
+    @property
+    def attrs(self) -> str:
+        depth, i = 1, 0
+        s = self.rest
+        while i < len(s) and depth:
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+            i += 1
+        return s[i:]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    param_types: dict[str, str]
+
+    def shapes(self) -> dict[str, str]:
+        out = dict(self.param_types)
+        for ins in self.instrs:
+            out[ins.name] = ins.type_str
+        return out
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped == "}":
+            if cur is not None:
+                comps[cur.name] = cur
+                cur = None
+            continue
+        if stripped.endswith("{") and ("->" in stripped):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                params: dict[str, str] = {}
+                for pdecl in m.group(2).split(","):
+                    if ":" in pdecl:
+                        pname, ptype = pdecl.split(":", 1)
+                        params[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(name=m.group(1), instrs=[], param_types=params)
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if m:
+            cur.instrs.append(Instr(
+                name=m.group(1), type_str=m.group(2),
+                opcode=m.group(3), rest=m.group(4),
+            ))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (the scan bound —
+    jax scans lower to `while i < N`, so N is the only sizable constant)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"(\d+)\)", ins.rest.strip())
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    matmul_flops_f32: float = 0.0   # f32 dots run at ~half MXU rate on v5e
+    matmul_flops_lp: float = 0.0    # bf16/f16 dots at full rate
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_count: float = 0.0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.matmul_flops_f32 += o.matmul_flops_f32
+        self.matmul_flops_lp += o.matmul_flops_lp
+        self.transcendentals += o.transcendentals
+        self.bytes += o.bytes
+        for k in COLLECTIVES:
+            self.coll_bytes[k] += o.coll_bytes[k]
+        self.coll_count += o.coll_count
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            flops=self.flops * k,
+            matmul_flops_f32=self.matmul_flops_f32 * k,
+            matmul_flops_lp=self.matmul_flops_lp * k,
+            transcendentals=self.transcendentals * k,
+            bytes=self.bytes * k,
+            coll_bytes={c: v * k for c, v in self.coll_bytes.items()},
+            coll_count=self.coll_count * k,
+        )
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = self._find_entry(text)
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, flags=re.M)
+        if m:
+            return m.group(1)
+        # fall back: biggest computation
+        return max(self.comps, key=lambda c: len(self.comps[c].instrs))
+
+    # ------------------------------------------------------------------
+    def cost(self) -> Cost:
+        return self.comp_cost(self.entry, top_level=True)
+
+    def comp_cost(self, name: str, top_level: bool) -> Cost:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[key] = total
+            return total
+        shapes = comp.shapes()
+        cur = {i.name: i for i in comp.instrs}
+        for ins in comp.instrs:
+            self._cur_instrs = cur   # restore after recursive comp_cost calls
+            total += self.instr_cost(ins, shapes, top_level)
+        self._memo[key] = total
+        return total
+
+    def _produced_by_widening_convert(self, name: str) -> bool:
+        prod = getattr(self, "_cur_instrs", {}).get(name)
+        if prod is None:
+            return False
+        if prod.opcode == "convert":
+            # operand dtype from the same computation
+            ops = prod.operands
+            src = self._cur_instrs.get(ops[0]) if ops else None
+            return bool(src and src.type_str.lstrip().startswith("bf16"))
+        if prod.opcode in ("fusion", "call") and "convert" in prod.name:
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", prod.attrs)
+            called = self.comps.get(m.group(1)) if m else None
+            if called is None:
+                return False
+            cshapes = called.shapes()
+            for cins in called.instrs:
+                if cins.opcode == "convert" and cins.operands:
+                    src_t = cshapes.get(cins.operands[0], "")
+                    if (src_t.lstrip().startswith("bf16")
+                            and cins.type_str.lstrip().startswith("f32")):
+                        return True
+        return False
+
+    def instr_cost(self, ins: Instr, shapes: dict[str, str],
+                   top_level: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        attrs = ins.attrs
+
+        if op == "while":
+            called = _CALL_ATTR_RE.findall(attrs)
+            body = cond = None
+            mb = re.search(r"body=%?([\w.\-]+)", attrs)
+            mc = re.search(r"condition=%?([\w.\-]+)", attrs)
+            if mb:
+                body = mb.group(1)
+            if mc:
+                cond = mc.group(1)
+            trips = _trip_count(self.comps[cond]) if cond in self.comps else 1
+            inner = Cost()
+            if body in self.comps:
+                inner += self.comp_cost(body, top_level=True)
+            if cond in self.comps:
+                inner += self.comp_cost(cond, top_level=True)
+            return inner.scaled(max(trips, 1))
+
+        if op in ("fusion", "call"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs)
+            called = self.comps.get(m.group(1)) if m else None
+            if m:
+                c += self.comp_cost(m.group(1), top_level=False)
+            # bytes at the fusion boundary, aliasing-aware: a fused
+            # dynamic-update-slice writes ONE SLICE of an accumulator that
+            # XLA aliases in place — charge 2× the update slice instead of
+            # the full accumulator on both sides of the boundary.
+            io = self._io_bytes(ins, shapes)
+            if called is not None:
+                cshapes = called.shapes()
+                ops = ins.operands
+                # map fused-computation parameters to fusion operands
+                param_idx: dict[str, int] = {}
+                for cins in called.instrs:
+                    if cins.opcode == "parameter":
+                        mm = re.match(r"(\d+)\)", cins.rest.strip())
+                        if mm:
+                            param_idx[cins.name] = int(mm.group(1))
+                charged: set[int] = set()
+                for cins in called.instrs:
+                    if cins.opcode == "dynamic-update-slice":
+                        acc_bytes = _shape_bytes(cins.type_str)
+                        upd = (cshapes.get(cins.operands[1], "")
+                               if len(cins.operands) > 1 else "")
+                        io -= 2.0 * acc_bytes      # operand + output side
+                        io += 2.0 * _shape_bytes(upd)
+                    elif cins.opcode in ("gather", "dynamic-slice"):
+                        # a fused sparse read touches ~the result, not the
+                        # whole table operand
+                        table = cins.operands[0] if cins.operands else None
+                        pi = param_idx.get(table, -1)
+                        if 0 <= pi < len(ops) and pi not in charged:
+                            io -= _shape_bytes(shapes.get(ops[pi], ""))
+                            charged.add(pi)
+                        io += 2.0 * _shape_bytes(cins.type_str)
+                    # in-place: subtract the table on BOTH sides
+                    # (operand + fusion output) like DUS
+                    elif cins.opcode == "scatter":
+                        table = cins.operands[0] if cins.operands else None
+                        pi = param_idx.get(table, -1)
+                        if 0 <= pi < len(ops) and pi not in charged:
+                            io -= _shape_bytes(shapes.get(ops[pi], ""))
+                            charged.add(pi)
+                        io -= _shape_bytes(cins.type_str)
+                        upd = (cshapes.get(cins.operands[2], "")
+                               if len(cins.operands) > 2 else "")
+                        io += 3.0 * _shape_bytes(upd)
+            c.bytes += max(io, 0.0)
+            return c
+
+        if op == "conditional":
+            branches = re.findall(
+                r"(?:true_computation|false_computation|branch_computations=\{([^}]*)\})",
+                attrs)
+            names = _CALL_ATTR_RE.findall(attrs)
+            best = Cost()
+            for n in names:
+                if n in self.comps:
+                    bc = self.comp_cost(n, top_level=True)
+                    if bc.flops >= best.flops:
+                        best = bc
+            c += best
+            c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        for coll in COLLECTIVES:
+            if op.startswith(coll) and not op.endswith("-done"):
+                nbytes = _shape_bytes(ins.type_str)
+                # XLA:CPU widens bf16 to f32 BEFORE collectives (a backend
+                # artifact — the TPU target moves bf16). When the collective
+                # directly consumes a widening convert, charge the narrow
+                # dtype's bytes.
+                if ins.type_str.lstrip().startswith("f32") and ins.operands:
+                    src = ins.operands[0]
+                    if self._produced_by_widening_convert(src):
+                        nbytes //= 2
+                c.coll_bytes[coll] += nbytes
+                c.coll_count += 1
+                c.bytes += self._io_bytes(ins, shapes)
+                return c
+
+        if op == "dot":
+            out_elems = _num_elements(ins.type_str)
+            kdim = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+            ops = ins.operands
+            if m and ops:
+                lhs_shape = _first_shape_dims(shapes.get(ops[0], ""))
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs_shape):
+                        kdim *= lhs_shape[int(idx)]
+            fl = 2.0 * out_elems * kdim
+            c.flops += fl
+            # dtype of the LHS operand decides the MXU rate
+            lhs_type = shapes.get(ops[0], ins.type_str) if ops else ins.type_str
+            if lhs_type.startswith(("bf16", "f16")):
+                c.matmul_flops_lp += fl
+            else:
+                c.matmul_flops_f32 += fl
+            c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        if op == "convolution":
+            out_elems = _num_elements(ins.type_str)
+            ops = ins.operands
+            k = 1
+            if len(ops) >= 2:
+                k = max(1, _num_elements(shapes.get(ops[1], "")) // max(
+                    1, _first_shape_dims(shapes.get(ops[1], ""))[-1]
+                    if _first_shape_dims(shapes.get(ops[1], "")) else 1))
+            c.flops += 2.0 * out_elems * k
+            c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        if op in ("reduce", "reduce-window"):
+            ops = ins.operands
+            in_elems = sum(_num_elements(shapes.get(o, "")) for o in ops[:1])
+            c.flops += float(in_elems)
+            c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        if op in _TRANSCENDENTAL:
+            n = _num_elements(ins.type_str)
+            c.transcendentals += float(n)
+            c.flops += float(n)
+            if top_level:
+                c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        if op in _ELEMENTWISE:
+            c.flops += float(_num_elements(ins.type_str))
+            if top_level:
+                c.bytes += self._io_bytes(ins, shapes)
+            return c
+
+        # in-place / sparse-access ops: count touched bytes, not whole
+        # operands (XLA aliases the buffers; a scan's dynamic-update-slice
+        # accumulator writes one slice per step, not the whole stack)
+        if op == "dynamic-update-slice":
+            upd = (_shape_bytes(shapes.get(ins.operands[1], ""))
+                   if len(ins.operands) > 1 else 0)
+            c.bytes += 2.0 * upd
+            return c
+        if op == "dynamic-slice":
+            c.bytes += 2.0 * _shape_bytes(ins.type_str)
+            return c
+        if op == "gather":
+            idx = (_shape_bytes(shapes.get(ins.operands[1], ""))
+                   if len(ins.operands) > 1 else 0)
+            c.bytes += 2.0 * _shape_bytes(ins.type_str) + idx
+            return c
+        if op == "scatter":
+            upd = (_shape_bytes(shapes.get(ins.operands[2], ""))
+                   if len(ins.operands) > 2 else 0)
+            idx = (_shape_bytes(shapes.get(ins.operands[1], ""))
+                   if len(ins.operands) > 1 else 0)
+            c.bytes += 3.0 * upd + idx
+            c.flops += float(_num_elements(ins.type_str)) * 0  # combiner ~upd
+            return c
+
+        # data movement / structural ops: bytes only, at top level
+        if top_level and op not in ("parameter", "constant", "tuple",
+                                    "get-tuple-element", "bitcast"):
+            c.bytes += self._io_bytes(ins, shapes)
+        return c
+
+    def _io_bytes(self, ins: Instr, shapes: dict[str, str]) -> float:
+        total = float(_shape_bytes(ins.type_str))
+        for o in ins.operands:
+            total += float(_shape_bytes(shapes.get(o, "")))
+        return total
+
+
+def analyze(text: str) -> Cost:
+    return Analyzer(text).cost()

@@ -1,0 +1,149 @@
+"""Mesh-agnostic sharded checkpoints with async save.
+
+Format: one ``.npz`` per checkpoint step holding every leaf under its
+flattened pytree path, plus a JSON manifest (global shape, dtype, step,
+pipeline cursor). Leaves are saved as *global* arrays (gathered via
+``jax.device_get``), so restore works onto ANY mesh — the loader simply
+``jax.device_put``s each global array with the target sharding. That is the
+elastic-scaling contract (DESIGN.md §6): a 512-chip checkpoint restores on a
+448-chip mesh unchanged.
+
+Async save: device→host transfer happens on the caller thread (cheap,
+overlaps with the next step's compute since XLA is async), the file write
+runs in a background thread; ``wait()`` joins before the next save or exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None,
+             blocking: bool = False) -> str:
+        """Snapshot ``tree`` (+ json-serializable ``extra``) at ``step``."""
+        self.wait()
+        flat = _flatten_with_paths(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        manifest = {
+            "step": int(step),
+            "extra": extra or {},
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in host.items()
+            },
+        }
+        path = os.path.join(self.directory, f"ckpt_{step:08d}")
+
+        def write():
+            # np.savez appends ".npz" unless the name already ends with it
+            np.savez(path + ".tmp.npz", **host)
+            os.replace(path + ".tmp.npz", path + ".npz")
+            with open(path + ".json.tmp", "w") as f:
+                json.dump(manifest, f)
+            os.replace(path + ".json.tmp", path + ".json")
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return path
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.directory, f"ckpt_{s:08d}{ext}"))
+                except FileNotFoundError:
+                    pass
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.directory):
+            if f.startswith("ckpt_") and f.endswith(".json"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: int | None = None,
+                sharding_fn: Callable[[str], Any] | None = None):
+        """Restore into the structure of ``tree_like``.
+
+        ``sharding_fn(path) -> jax.sharding.Sharding | None`` places each
+        leaf on the target mesh (None = default device placement) — this is
+        where a different mesh than the saver's is applied.
+        Returns (tree, manifest).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"ckpt_{step:08d}")
+        with open(path + ".json") as f:
+            manifest = json.load(f)
+        data = np.load(path + ".npz")
+        flat_like = _flatten_with_paths(tree_like)
+        restored = {}
+        for key, like in flat_like.items():
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(like)):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != model {np.shape(like)}"
+                )
+            sh = sharding_fn(key) if sharding_fn else None
+            restored[key] = (
+                jax.device_put(arr, sh) if sh is not None else
+                jax.device_put(arr.astype(np.asarray(like).dtype))
+            )
+        # unflatten by path-order of tree_like
+        leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+        keys = list(flat_like.keys())
+        new_leaves = [restored[k] for k in keys]
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest

@@ -1,0 +1,168 @@
+"""Hand-rolled pytree optimizers: AdamW and Adafactor (no optax offline).
+
+Adafactor (Shazeer & Stern 2018) is the default for the >=100B archs: the
+second moment is factored into row/col statistics, so optimizer state is
+~2 bytes/param (bf16 momentum) instead of Adam's 8 — the difference between
+fitting and not fitting Arctic-480B on a 256-chip pod (DESIGN.md §6).
+
+API mirrors optax: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(
+    lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+    eps: float = 1e-8, weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = -lr * ((mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u, mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor
+# --------------------------------------------------------------------------
+
+def adafactor(
+    lr: float = 1e-2, decay: float = 0.8, eps1: float = 1e-30,
+    eps2: float = 1e-3, clip_threshold: float = 1.0,
+    momentum: float = 0.9, momentum_dtype=jnp.bfloat16,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored second moment for >=2D params; full for 1D."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def state_of(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    "m": jnp.zeros(p.shape, momentum_dtype) if momentum else None,
+                }
+            return {
+                "v": jnp.zeros(p.shape, jnp.float32),
+                "m": jnp.zeros(p.shape, momentum_dtype) if momentum else None,
+            }
+
+        return {
+            "per_param": jax.tree.map(state_of, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+                vhat = (
+                    vr[..., :, None] * vc[..., None, :]
+                    / denom[..., None]
+                )
+                u = g * jax.lax.rsqrt(vhat + eps1)
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps1)
+                news = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            scale = jnp.maximum(
+                eps2, jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2))
+            )
+            u = -lr * scale * u
+            if momentum:
+                m = momentum * s["m"].astype(jnp.float32) + (1 - momentum) * u
+                news["m"] = m.astype(momentum_dtype)
+                u = m
+            else:
+                news["m"] = None
+            if weight_decay:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u, news
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["per_param"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        per_param = treedef.unflatten([o[1] for o in outs])
+        return updates, {"per_param": per_param, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr=lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

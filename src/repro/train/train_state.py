@@ -1,0 +1,82 @@
+"""Train state + the generic train_step used by the loop and the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt_mod
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    @classmethod
+    def create(cls, params, optimizer: opt_mod.Optimizer) -> "TrainState":
+        return cls(
+            params=params,
+            opt_state=optimizer.init(params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+
+def make_train_step(
+    loss_fn: Callable, optimizer: opt_mod.Optimizer,
+    *, grad_clip: float = 1.0, microbatch: int = 0,
+    grad_compression: Callable | None = None,
+):
+    """Build train_step(state, batch) -> (state, metrics).
+
+    ``microbatch`` > 0 splits the batch into that many accumulation steps via
+    lax.scan (XLA's latency-hiding scheduler overlaps the reduce-scatter of
+    one microbatch's grads with the next microbatch's backward).
+    ``grad_compression`` optionally transforms grads before the optimizer
+    (e.g. int8 + error feedback — see distributed.collectives).
+    """
+
+    def _grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch):
+        if microbatch and microbatch > 1:
+            def split(x):
+                return x.reshape((microbatch, x.shape[0] // microbatch) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                loss, metrics, grads = _grads(state.params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        else:
+            loss, metrics, grads = _grads(state.params, batch)
+
+        if grad_compression is not None:
+            grads = grad_compression(grads)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = opt_mod.apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state, step=state.step + 1)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm})
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def random_codes(rng, n: int):
+    import jax.numpy as jnp
+    return jnp.asarray(rng.integers(0, 4, size=n, dtype=np.uint8))

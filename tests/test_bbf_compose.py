@@ -1,0 +1,65 @@
+"""IDL × Blocked-BF composition (paper §3.3): both localities at once."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom, idl
+from repro.data import genome
+
+CFG = idl.IDLConfig(k=31, t=16, L=1 << 14, eta=4, m=1 << 24)
+
+
+def test_all_probes_in_one_block():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(0, 4, size=2000, dtype=np.uint8))
+    locs = np.asarray(idl.idl_bbf_locations_rolling(CFG, codes, block_bits=512))
+    blocks = locs // 512
+    # BBF property: the η probes of each kmer share one 512-bit block
+    assert (blocks == blocks[0:1]).all()
+
+
+def test_window_locality_preserved():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(0, 4, size=3000, dtype=np.uint8))
+    locs = np.asarray(idl.idl_bbf_locations_rolling(CFG, codes))[0]
+    windows = locs // CFG.L
+    # IDL property: consecutive kmers share the window w.p. ~J
+    assert float(np.mean(windows[1:] == windows[:-1])) > 0.7
+
+
+def test_no_false_negatives_and_fpr_tradeoff():
+    g = genome.synthesize_genome(20_000, seed=2, repeat_fraction=0.0)
+    gj = jnp.asarray(g)
+    rng = np.random.default_rng(3)
+    neg = jnp.asarray(rng.integers(0, 4, size=60_000, dtype=np.uint8))
+
+    bits = bloom.insert_locations(
+        bloom.empty_filter(CFG.m), idl.idl_bbf_locations_rolling(CFG, gj))
+    hits = bloom.query_locations(bits, idl.idl_bbf_locations_rolling(CFG, gj))
+    assert bool(jnp.all(hits))  # no false negatives
+
+    fpr_bbf = float(jnp.mean(bloom.query_locations(
+        bits, idl.idl_bbf_locations_rolling(CFG, neg))))
+    bits_idl = bloom.insert_locations(
+        bloom.empty_filter(CFG.m), idl.idl_locations_rolling(CFG, gj))
+    fpr_idl = float(jnp.mean(bloom.query_locations(
+        bits_idl, idl.idl_locations_rolling(CFG, neg))))
+    # BBF trades FPR for locality (paper §3.3) — bounded degradation
+    assert fpr_bbf <= max(20 * fpr_idl, 5e-3)
+
+
+def test_line_level_misses_beat_plain_idl():
+    """The composition's raison d'être: ONE 64-B line per kmer (BBF) inside
+    a shared window (IDL) ⇒ line-miss rate far below plain IDL's."""
+    from repro.core import cache_model
+    rng = np.random.default_rng(4)
+    codes = jnp.asarray(rng.integers(0, 4, size=10_000, dtype=np.uint8))
+    tr_bbf = cache_model.probe_trace_from_locations(
+        np.asarray(idl.idl_bbf_locations_rolling(CFG, codes)))
+    tr_idl = cache_model.probe_trace_from_locations(
+        np.asarray(idl.idl_locations_rolling(CFG, codes)))
+    m_bbf, _ = cache_model.two_level_miss_rates(tr_bbf, l1_bytes=2 << 20,
+                                                line_bytes=64)
+    m_idl, _ = cache_model.two_level_miss_rates(tr_idl, l1_bytes=2 << 20,
+                                                line_bytes=64)
+    assert m_bbf < 0.5 * m_idl

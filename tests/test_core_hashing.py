@@ -1,0 +1,169 @@
+"""Unit + property tests for hashing, kmers, minhash — the paper's substrate."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, kmers, minhash
+
+
+class TestHashing:
+    def test_hash_to_range_in_range(self):
+        x = jnp.arange(10000, dtype=jnp.uint64)
+        for m in (7, 64, 1000, 1 << 20):
+            h = hashing.hash_to_range(x, 42, m)
+            assert int(h.max()) < m
+            assert int(h.min()) >= 0
+
+    def test_seeds_decorrelate(self):
+        x = jnp.arange(10000, dtype=jnp.uint64)
+        h1 = hashing.hash_to_range(x, 1, 1 << 16)
+        h2 = hashing.hash_to_range(x, 2, 1 << 16)
+        assert float(jnp.mean((h1 == h2).astype(jnp.float32))) < 0.01
+
+    def test_uniformity(self):
+        """Chi-square-ish: bucket counts close to uniform."""
+        x = jnp.arange(1 << 16, dtype=jnp.uint64)
+        h = np.asarray(hashing.hash_to_range(x, 7, 256))
+        counts = np.bincount(h, minlength=256)
+        expected = (1 << 16) / 256
+        assert np.abs(counts - expected).max() < 5 * np.sqrt(expected)
+
+    def test_np_mirror_matches_jax(self):
+        x = np.arange(1000, dtype=np.uint64)
+        got_np = hashing.np_hash_to_range(x, 9, 1 << 20)
+        got_jx = np.asarray(hashing.hash_to_range(jnp.asarray(x), 9, 1 << 20))
+        np.testing.assert_array_equal(got_np, got_jx)
+
+    def test_pair32_determinism_and_range(self):
+        hi = jnp.arange(1000, dtype=jnp.uint32)
+        lo = jnp.arange(1000, 2000, dtype=jnp.uint32)
+        a = hashing.hash_pair32_to_range(hi, lo, 3, 4096)
+        b = hashing.hash_pair32_to_range(hi, lo, 3, 4096)
+        assert jnp.all(a == b)
+        assert int(a.max()) < 4096
+
+    @given(st.integers(2, 1 << 30))
+    @settings(max_examples=30, deadline=None)
+    def test_hash32_range_property(self, m):
+        h = jnp.arange(0, 1 << 16, 97, dtype=jnp.uint32) * jnp.uint32(2654435761)
+        r = hashing.hash32_to_range(h, m)
+        assert int(r.max()) < m
+
+
+class TestKmers:
+    def test_pack_matches_manual(self):
+        codes = jnp.asarray([0, 1, 2, 3, 0, 1], dtype=jnp.uint8)
+        got = kmers.pack_kmers(codes, 3)
+        # kmer 0 = (0,1,2) -> 0b000110 = 6
+        want = [0b000110, 0b011011, 0b101100, 0b110001]
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_pack_np_matches_jax(self, rng):
+        codes = rng.integers(0, 4, size=500, dtype=np.uint8)
+        np.testing.assert_array_equal(
+            kmers.pack_kmers_np(codes, 31),
+            np.asarray(kmers.pack_kmers(jnp.asarray(codes), 31)),
+        )
+
+    def test_pair32_matches_u64(self, rng):
+        codes = jnp.asarray(rng.integers(0, 4, size=300, dtype=np.uint8))
+        k = 31
+        full = np.asarray(kmers.pack_kmers(codes, k))
+        hi, lo = kmers.pack_kmers_pair32(codes, k)
+        rebuilt = (np.asarray(hi, dtype=np.uint64) << np.uint64(32)) | np.asarray(
+            lo, dtype=np.uint64
+        )
+        np.testing.assert_array_equal(full, rebuilt)
+
+    def test_unpack_roundtrip(self, rng):
+        codes = rng.integers(0, 4, size=40, dtype=np.uint8)
+        packed = kmers.pack_kmers_np(codes, 31)
+        s = kmers.decode_bases(codes)
+        assert kmers.unpack_kmer(int(packed[0]), 31) == s[:31]
+        assert kmers.unpack_kmer(int(packed[5]), 31) == s[5 : 5 + 31]
+
+    def test_encode_decode(self):
+        s = "ACGTACGTNNGG"
+        codes = kmers.encode_bases(s)
+        assert kmers.decode_bases(codes) == "ACGTACGTAAGG"  # N -> A
+
+    @given(st.integers(1, 31), st.integers(0, 2**32))
+    @settings(max_examples=50, deadline=None)
+    def test_pack_roundtrip_property(self, k, seed):
+        r = np.random.default_rng(seed)
+        codes = r.integers(0, 4, size=k + 10, dtype=np.uint8)
+        packed = kmers.pack_kmers_np(codes, k)
+        for i in (0, len(packed) - 1):
+            assert kmers.unpack_kmer(int(packed[i]), k) == kmers.decode_bases(
+                codes[i : i + k]
+            )
+
+
+class TestSlidingWindowMin:
+    def naive(self, a, w):
+        return np.array([a[i : i + w].min() for i in range(len(a) - w + 1)])
+
+    @pytest.mark.parametrize("n,w", [(10, 1), (10, 3), (100, 16), (1000, 7),
+                                     (64, 64), (65, 64), (129, 16)])
+    def test_matches_naive(self, rng, n, w):
+        a = rng.integers(0, 2**63, size=n, dtype=np.uint64)
+        got = np.asarray(minhash.sliding_window_min(jnp.asarray(a), w))
+        np.testing.assert_array_equal(got, self.naive(a, w))
+
+    @given(st.integers(1, 64), st.integers(0, 2**32))
+    @settings(max_examples=50, deadline=None)
+    def test_property(self, w, seed):
+        r = np.random.default_rng(seed)
+        n = w + int(r.integers(0, 100))
+        a = r.integers(0, 2**32, size=n, dtype=np.uint64)
+        got = np.asarray(minhash.sliding_window_min(jnp.asarray(a), w))
+        np.testing.assert_array_equal(got, self.naive(a, w))
+
+
+class TestMinHash:
+    def test_rolling_equals_batch(self, rng):
+        """Rolling MinHash over a sequence == per-kmer batch MinHash."""
+        codes = jnp.asarray(rng.integers(0, 4, size=400, dtype=np.uint8))
+        k, t, eta = 31, 16, 4
+        subk = kmers.pack_kmers(codes, t)
+        roll = minhash.doph_minhash(subk, k - t + 1, eta)
+        kmer_arr = kmers.pack_kmers(codes, k)
+        batch = minhash.minhash_kmer_batch(kmer_arr, k, t, eta)
+        np.testing.assert_array_equal(np.asarray(roll), np.asarray(batch))
+
+    def test_exact_mode_rolling_equals_batch(self, rng):
+        codes = jnp.asarray(rng.integers(0, 4, size=300, dtype=np.uint8))
+        k, t = 31, 12
+        seeds = [11, 22, 33]
+        subk = kmers.pack_kmers(codes, t)
+        roll = minhash.minhash_exact(subk, k - t + 1, seeds)
+        kmer_arr = kmers.pack_kmers(codes, k)
+        batch = minhash.minhash_kmer_batch(
+            kmer_arr, k, t, len(seeds), mode="exact", seeds=seeds
+        )
+        np.testing.assert_array_equal(np.asarray(roll), np.asarray(batch))
+
+    def test_collision_prob_tracks_jaccard(self, rng):
+        """MinHash collision rate ≈ Jaccard similarity (eq. 4)."""
+        k, t = 31, 16
+        n_pairs, hits, jac = 400, 0, 0.0
+        codes = rng.integers(0, 4, size=n_pairs + k + 1, dtype=np.uint8)
+        kmer_arr = kmers.pack_kmers_np(codes, k)
+        mh = np.asarray(
+            minhash.minhash_kmer_batch(
+                jnp.asarray(kmer_arr), k, t, 1, mode="exact", seeds=[5]
+            )
+        )[0]
+        for i in range(n_pairs):
+            jac += minhash.jaccard_subkmers(kmer_arr[i], kmer_arr[i + 1], k, t)
+            hits += int(mh[i] == mh[i + 1])
+        emp, expect = hits / n_pairs, jac / n_pairs
+        assert abs(emp - expect) < 0.08
+
+    def test_doph_densifies_all_bins(self, rng):
+        codes = jnp.asarray(rng.integers(0, 4, size=200, dtype=np.uint8))
+        subk = kmers.pack_kmers(codes, 16)
+        mh = minhash.doph_minhash(subk, 16, 8)
+        assert not bool(jnp.any(mh == minhash.UINT64_MAX))

@@ -1,0 +1,58 @@
+"""Integration: the dry-run launcher lowers+compiles real cells end-to-end.
+
+Runs in a subprocess because the dry-run forces 512 host devices, which
+must never leak into this test process (everything else sees 1 device).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, mesh, tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--mesh", mesh,
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__{mesh}.json"))
+    return rec
+
+
+@pytest.mark.slow
+def test_dryrun_cell_single_pod(tmp_path):
+    rec = _run_cell("sasrec", "serve_p99", "single", tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["flops_per_chip"] > 0
+    assert rec["bytes_per_chip"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory_stats"] is not None
+
+
+@pytest.mark.slow
+def test_dryrun_cell_multi_pod(tmp_path):
+    rec = _run_cell("fm", "serve_p99", "multi", tmp_path)
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_skip_recorded(tmp_path):
+    rec = _run_cell("granite-20b", "long_500k", "single", tmp_path)
+    assert rec["status"] == "skipped"
+    assert "full-attention" in rec["skip_reason"]
+
+
+def test_device_count_not_leaked():
+    """This process must still see exactly one CPU device."""
+    import jax
+    assert len(jax.devices()) == 1

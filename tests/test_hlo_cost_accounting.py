@@ -1,0 +1,124 @@
+"""Accounting-specific tests for the HLO cost analyzer: aliasing-aware
+bytes, sparse-access fusions, widening-convert collectives, trip counts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import hlo_cost
+
+
+def _cost(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.analyze(c.as_text()), c
+
+
+class TestBytesAccounting:
+    def test_scan_accumulator_not_counted_whole(self):
+        """A scan writing one row per step must cost ~N rows, not N whole
+        accumulators."""
+        n, d = 64, 128
+        x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+
+        def f(xs):
+            def body(c, row):
+                return c, row * 2.0
+            _, out = jax.lax.scan(body, 0.0, xs)
+            return out
+
+        cost, _ = _cost(f, x)
+        whole = n * d * 4
+        # row-wise DUS: ~2 bytes-touched x total rows, plus boundary slack —
+        # far below n x whole-accumulator
+        assert cost.bytes < 20 * whole, cost.bytes
+
+    def test_gather_fusion_charges_result_not_table(self):
+        table = jax.ShapeDtypeStruct((1 << 20, 4), jnp.float32)  # 16 MB
+        idx = jax.ShapeDtypeStruct((64,), jnp.int32)
+
+        def f(t, i):
+            return jnp.take(t, i, axis=0) * 2.0
+
+        cost, _ = _cost(f, table, idx)
+        assert cost.bytes < 1e6, cost.bytes  # << the 16 MB table
+
+    def test_dot_flops_with_batch_dims(self):
+        a = jax.ShapeDtypeStruct((8, 32, 64), jnp.float32)
+        b = jax.ShapeDtypeStruct((8, 64, 16), jnp.float32)
+        cost, _ = _cost(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+        assert cost.flops == pytest.approx(2 * 8 * 32 * 64 * 16, rel=0.01)
+
+    def test_nested_scan_trip_counts_multiply(self):
+        x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+        def f(m):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ ci, None
+                c, _ = jax.lax.scan(inner, c, None, length=3)
+                return c, None
+            c, _ = jax.lax.scan(outer, m, None, length=5)
+            return c
+
+        cost, _ = _cost(f, x)
+        assert cost.flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.05)
+
+
+class TestCollectiveAccounting:
+    def test_widening_convert_charged_narrow(self):
+        txt = """
+%conv_comp (p0: bf16[1024]) -> f32[1024] {
+  %p0 = bf16[1024]{0} parameter(0)
+  ROOT %cv = f32[1024]{0} convert(%p0)
+}
+
+ENTRY %main (a: bf16[1024]) -> f32[1024] {
+  %a = bf16[1024]{0} parameter(0)
+  %convert_fusion = f32[1024]{0} fusion(%a), kind=kLoop, calls=%conv_comp
+  ROOT %ag = f32[1024]{0} all-gather(%convert_fusion), replica_groups={}
+}
+"""
+        cost = hlo_cost.analyze(txt)
+        # charged at bf16 (2 bytes), not f32 (4)
+        assert cost.coll_bytes["all-gather"] == 1024 * 2
+
+    def test_plain_f32_collective_charged_full(self):
+        txt = """
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%a), replica_groups={}
+}
+"""
+        cost = hlo_cost.analyze(txt)
+        assert cost.coll_bytes["all-reduce"] == 1024 * 4
+
+    def test_collective_inside_while_trip_multiplied(self):
+        txt = """
+%body (p: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[256]{0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %ag = f32[256]{0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], f32[256]) tuple(%ni, %ag)
+}
+
+%cond (p: (s32[], f32[256])) -> pred[] {
+  %p = (s32[], f32[256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[256]) -> (s32[], f32[256]) {
+  %a = f32[256]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[256]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[256]) while(%t0), condition=%cond, body=%body
+}
+"""
+        cost = hlo_cost.analyze(txt)
+        assert cost.coll_bytes["all-gather"] == 12 * 256 * 4
+        assert cost.coll_count == 12

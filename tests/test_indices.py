@@ -1,0 +1,109 @@
+"""COBS / RAMBO / gene-search service end-to-end behaviour (MT + MSMT)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cobs, idl, rambo
+from repro.data import genome
+from repro.serving import genesearch as gs
+
+CFG = idl.IDLConfig(k=31, t=16, L=1 << 10, eta=3, m=1 << 20)
+
+
+@pytest.fixture(scope="module")
+def archive():
+    return genome.synth_archive(n_files=12, genome_len=3000, seed=7)
+
+
+class TestCobs:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    def test_msmt_exact_recall(self, archive, scheme):
+        sizes = [f.n_kmers for f in archive]
+        c = cobs.Cobs.build(sizes, CFG, scheme=scheme, n_groups=3)
+        for f in archive:
+            c = c.insert_sequence(f.file_id, jnp.asarray(f.genome))
+        for fid in (0, 5, 11):
+            read = archive[fid].reads(230, 1)[0]
+            got = np.asarray(c.msmt(jnp.asarray(read)))
+            assert got[fid], f"file {fid} must match its own read ({scheme})"
+            assert got.sum() <= 2  # near-exact retrieval
+
+    def test_poisoned_queries_rejected(self, archive):
+        sizes = [f.n_kmers for f in archive]
+        c = cobs.Cobs.build(sizes, CFG, scheme="idl", n_groups=2)
+        for f in archive:
+            c = c.insert_sequence(f.file_id, jnp.asarray(f.genome))
+        reads = archive[3].reads(230, 8)
+        poisoned = genome.poison_queries(reads, seed=9)
+        fp = sum(int(np.asarray(c.msmt(jnp.asarray(q))).sum()) for q in poisoned)
+        assert fp <= 2
+
+    def test_theta_relaxes_match(self, archive):
+        sizes = [f.n_kmers for f in archive]
+        c = cobs.Cobs.build(sizes, CFG, scheme="idl", n_groups=2)
+        for f in archive:
+            c = c.insert_sequence(f.file_id, jnp.asarray(f.genome))
+        read = archive[2].reads(230, 1)[0]
+        poisoned = genome.poison_queries(read[None], seed=11)[0]
+        strict = np.asarray(c.msmt(jnp.asarray(poisoned), theta=1.0))
+        relaxed = np.asarray(c.msmt(jnp.asarray(poisoned), theta=0.5))
+        assert not strict[2]
+        assert relaxed[2]  # 1 flip kills <= k kmers of ~200
+
+
+class TestRambo:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    def test_candidate_set_contains_truth(self, archive, scheme):
+        r = rambo.Rambo.build(len(archive), CFG, scheme=scheme)
+        for f in archive:
+            r = r.insert_sequence(f.file_id, jnp.asarray(f.genome))
+        for fid in (1, 6, 10):
+            read = archive[fid].reads(230, 1)[0]
+            got = np.asarray(r.msmt(jnp.asarray(read)))
+            assert got[fid]
+
+    def test_bucket_layout(self, archive):
+        r = rambo.Rambo.build(100, CFG)
+        assert r.B >= int(np.sqrt(100))
+        assert r.R >= 2
+        assert r.filters.shape == (r.R * r.B, CFG.m)
+
+
+class TestGeneSearchService:
+    def test_serve_recall_and_fp(self):
+        cfg = gs.GeneSearchConfig(n_files=64, m=1 << 18, L=1 << 10,
+                                  read_len=100, eta=2)
+        idx = gs.empty_index(cfg)
+        rng = np.random.default_rng(1)
+        reads = [rng.integers(0, 4, 100, dtype=np.uint8) for _ in range(6)]
+        for i, r in enumerate(reads):
+            idx = gs.insert_read(idx, cfg, i * 9, jnp.asarray(r))
+        out = jax.jit(lambda i, q: gs.serve_step(i, q, cfg))(
+            idx, jnp.stack([jnp.asarray(r) for r in reads]))
+        for i in range(len(reads)):
+            ids = gs.match_file_ids(np.asarray(out[i]))
+            assert i * 9 in ids
+            assert len(ids) <= 2
+
+    def test_rh_variant_matches_semantics(self):
+        cfg = gs.GeneSearchConfig(n_files=32, m=1 << 18, L=1 << 10,
+                                  read_len=100, eta=2, scheme="rh")
+        idx = gs.empty_index(cfg)
+        rng = np.random.default_rng(2)
+        read = jnp.asarray(rng.integers(0, 4, 100, dtype=np.uint8))
+        idx = gs.insert_read(idx, cfg, 17, read)
+        out = gs.serve_step(idx, read[None], cfg)
+        assert 17 in gs.match_file_ids(np.asarray(out[0]))
+
+    def test_theta_below_one_popcount_path(self):
+        cfg = gs.GeneSearchConfig(n_files=32, m=1 << 18, L=1 << 10,
+                                  read_len=100, eta=2, theta=0.5)
+        idx = gs.empty_index(cfg)
+        rng = np.random.default_rng(3)
+        read = rng.integers(0, 4, 100, dtype=np.uint8)
+        idx = gs.insert_read(idx, cfg, 5, jnp.asarray(read))
+        poisoned = genome.poison_queries(read[None], seed=4)[0]
+        out = gs.serve_step(idx, jnp.asarray(poisoned)[None], cfg)
+        assert 5 in gs.match_file_ids(np.asarray(out[0]))

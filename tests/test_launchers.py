@@ -1,0 +1,40 @@
+"""Launcher CLIs run end-to-end (subprocess: fresh jax state per run)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m"] + args,
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+
+
+@pytest.mark.slow
+def test_train_launcher_recsys():
+    p = _run(["repro.launch.train", "--arch", "fm", "--steps", "10",
+              "--batch", "32"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "done: fm" in p.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_lm_with_checkpoint(tmp_path):
+    p = _run(["repro.launch.train", "--arch", "granite-20b", "--steps", "6",
+              "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path)])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert any(f.startswith("ckpt_") for f in os.listdir(tmp_path))
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    p = _run(["repro.launch.serve", "--files", "32", "--batch", "4",
+              "--requests", "2"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "recall 8/8" in p.stdout

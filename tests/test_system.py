@@ -1,0 +1,56 @@
+"""End-to-end behaviour of the paper's system: index a genome archive,
+serve queries, and verify the locality + quality story in one pass."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom, cache_model, idl
+from repro.data import genome
+from repro.kernels.idl_probe import ops as probe_ops
+
+
+def test_end_to_end_gene_search_with_kernel_path():
+    """Index -> plan -> Pallas probe kernel -> membership, IDL vs RH."""
+    g = genome.synthesize_genome(20_000, seed=0, repeat_fraction=0.0)
+    cfg = idl.IDLConfig(k=31, t=16, L=1 << 13, eta=4, m=1 << 23)
+    bf = bloom.BloomFilter(cfg=cfg, scheme="idl").insert_sequence(jnp.asarray(g))
+    words = bloom.pack_bits(bf.bits)
+
+    reads = genome.extract_reads(g, 230, 16, seed=1)
+    poisoned = genome.poison_queries(reads, seed=2)
+
+    # genuine reads: every kmer present (no false negatives through the
+    # kernel path); poisoned reads: the flipped kmers break membership
+    for read, bad in zip(reads[:4], poisoned[:4]):
+        locs = np.asarray(idl.idl_locations_rolling(cfg, jnp.asarray(read)))
+        plan = probe_ops.plan_probe_runs(locs, cfg.L)
+        member = probe_ops.probe_membership(words, plan, interpret=True)
+        assert bool(jnp.all(member))
+        locs_b = np.asarray(idl.idl_locations_rolling(cfg, jnp.asarray(bad)))
+        plan_b = probe_ops.plan_probe_runs(locs_b, cfg.L)
+        member_b = probe_ops.probe_membership(words, plan_b, interpret=True)
+        assert not bool(jnp.all(member_b))
+
+    # the system claim: IDL's plan needs far fewer tile DMAs than RH's
+    locs_idl = np.asarray(idl.idl_locations_rolling(cfg, jnp.asarray(reads[0])))
+    locs_rh = np.asarray(idl.rh_locations_rolling(cfg, jnp.asarray(reads[0])))
+    n_idl = probe_ops.plan_probe_runs(locs_idl, cfg.L).n_runs
+    n_rh = probe_ops.plan_probe_runs(locs_rh, cfg.L).n_runs
+    assert n_rh > 4 * n_idl
+
+
+def test_fpr_quality_parity_idl_vs_rh():
+    """IDL preserves BF quality (paper Fig 5): FPRs within 2x of each other
+    at a size where FPR is measurable."""
+    g = genome.synthesize_genome(30_000, seed=3, repeat_fraction=0.0)
+    rng = np.random.default_rng(4)
+    neg = jnp.asarray(rng.integers(0, 4, size=60_000, dtype=np.uint8))
+    fprs = {}
+    for scheme in ("idl", "rh"):
+        cfg = idl.IDLConfig(k=31, t=16, L=1 << 11, eta=4, m=1 << 19)
+        bf = bloom.BloomFilter(cfg=cfg, scheme=scheme).insert_sequence(
+            jnp.asarray(g))
+        fprs[scheme] = float(jnp.mean(bf.query_sequence(neg)))
+    assert fprs["idl"] > 0  # measurable regime
+    assert fprs["idl"] < 2.0 * fprs["rh"] + 1e-4
+    assert fprs["rh"] < 2.0 * fprs["idl"] + 1e-4

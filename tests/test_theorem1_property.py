@@ -1,0 +1,75 @@
+"""Property tests for Theorem 1's IDL sensitivity bounds, across random
+configurations (hypothesis-driven)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import idl, kmers, minhash
+
+
+@given(
+    t=st.integers(10, 20),
+    logL=st.integers(9, 13),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=15, deadline=None)
+def test_theorem1_case1_lower_bound(t, logL, seed):
+    """d(x,y) small (adjacent kmers, J=(w-1)/(w+1)): distinct values inside
+    an L-window with prob >= J·(L-1)/L (Thm 1 case 1, MinHash p1 = J)."""
+    rng = np.random.default_rng(seed)
+    cfg = idl.IDLConfig(k=31, t=t, L=1 << logL, eta=1, m=1 << 22,
+                        minhash_mode="exact")
+    codes = jnp.asarray(rng.integers(0, 4, size=4000, dtype=np.uint8))
+    locs = np.asarray(idl.idl_locations_rolling(cfg, codes))[0]
+    blocks = locs // cfg.L
+    same_window = blocks[1:] == blocks[:-1]
+    distinct = locs[1:] != locs[:-1]
+    ok = float(np.mean(same_window & distinct))
+    w = cfg.w
+    j = (w - 1) / (w + 1)
+    p1_bound = j * (cfg.L - 1) / cfg.L
+    # empirical mean over ~4k pairs: allow 4-sigma slack
+    sigma = np.sqrt(p1_bound * (1 - p1_bound) / len(distinct))
+    assert ok >= p1_bound - 4 * sigma - 0.02
+
+
+@given(
+    t=st.integers(12, 20),
+    logL=st.integers(9, 12),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=15, deadline=None)
+def test_theorem1_case2_upper_bound(t, logL, seed):
+    """d(x,y) large (independent random kmers): P(within L) <= L/m' + p2
+    with p2 ~ 0 for random kmers (J=0 whp)."""
+    rng = np.random.default_rng(seed)
+    cfg = idl.IDLConfig(k=31, t=t, L=1 << logL, eta=1, m=1 << 22,
+                        minhash_mode="exact")
+    a = jnp.asarray(rng.integers(0, 2**62, size=3000, dtype=np.uint64))
+    b = jnp.asarray(rng.integers(0, 2**62, size=3000, dtype=np.uint64))
+    mask = (np.uint64(1) << np.uint64(62)) - np.uint64(1)
+    la = np.asarray(idl.idl_locations_kmer_batch(cfg, a & mask))[0]
+    lb = np.asarray(idl.idl_locations_kmer_batch(cfg, b & mask))[0]
+    near = float(np.mean(np.abs(la.astype(np.int64) - lb.astype(np.int64))
+                         < cfg.L))
+    bound = 2 * cfg.L / cfg.m_part + 0.01  # window overlap, both directions
+    sigma = np.sqrt(max(bound * (1 - bound), 1e-6) / 3000)
+    assert near <= bound + 4 * sigma + 0.01
+
+
+@given(seed=st.integers(0, 2**31), eta=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_doph_matches_exact_distribution(seed, eta):
+    """Densified OPH MinHash collides adjacent kmers at ~the Jaccard rate,
+    like exact per-seed MinHash (paper §5.3.3 correctness)."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 4, size=3000, dtype=np.uint8))
+    k, t = 31, 16
+    w = k - t + 1
+    subk = kmers.pack_kmers(codes, t)
+    mh = np.asarray(minhash.doph_minhash(subk, w, eta))
+    j = (w - 1) / (w + 1)
+    for rep in range(eta):
+        rate = float(np.mean(mh[rep][1:] == mh[rep][:-1]))
+        assert abs(rate - j) < 0.12
