@@ -1,17 +1,20 @@
 """One benchmark per paper table/figure (scaled to this CPU harness; same
-structure, same comparisons, same claims checked)."""
+structure, same comparisons, same claims checked).
+
+All index construction and querying goes through the unified ``GeneIndex``
+API: engines from :mod:`repro.index`, hash families by name from
+:mod:`repro.index.registry` (including the ``idl-bbf`` composition — no
+string-dispatch ladders here)."""
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, locality_metrics, timeit
-from repro.core import bloom, cobs, idl, kmers, minhash, rambo, theory
+from repro.core import idl, kmers, theory
 from repro.data import genome
+from repro.index import CobsIndex, PackedBloomIndex, RamboIndex, registry
 
 
 # --------------------------------------------------------------------------
@@ -24,7 +27,6 @@ def table2_assumptions() -> None:
         g = genome.synthesize_genome(glen, seed=glen)
         k, t = 31, 16
         subk = kmers.pack_kmers_np(g, t)
-        h = jnp.asarray(subk)
         # J(far pair)=0 <=> the two kmers' sub-kmer SETS are disjoint;
         # estimate over random far pairs
         rng = np.random.default_rng(0)
@@ -37,6 +39,19 @@ def table2_assumptions() -> None:
             sj = set(subk[j : j + w].tolist())
             zero += int(not (si & sj))
         csv.row(glen, zero / n_pairs, n_pairs)
+
+
+def _fpr_on_poisoned(eng: PackedBloomIndex, g: np.ndarray,
+                     queries: np.ndarray) -> float:
+    """FPR over poisoned kmers that are NOT in the genome (batched query)."""
+    hits = np.asarray(eng.query_batch(jnp.asarray(queries)))
+    gk = kmers.pack_kmers_np(g, eng.cfg.k)
+    fp, n_neg = 0, 0
+    for row, q in zip(hits, queries):
+        truth = np.isin(kmers.pack_kmers_np(q, eng.cfg.k), gk)
+        fp += int((row & ~truth).sum())
+        n_neg += int((~truth).sum())
+    return fp / max(n_neg, 1)
 
 
 # --------------------------------------------------------------------------
@@ -56,29 +71,19 @@ def fig5_idlbf() -> None:
     for logm in (17, 19, 21, 24, 26):
         for scheme in ("rh", "idl"):
             cfg = idl.IDLConfig(k=31, t=16, L=1 << 13, eta=4, m=1 << logm)
-            bf = bloom.BloomFilter(cfg=cfg, scheme=scheme)
-            index_fn = jax.jit(
-                lambda codes: bloom.insert_locations(
-                    bloom.empty_filter(cfg.m),
-                    idl.locations(cfg, codes, scheme)))
-            t_index = timeit(index_fn, gj)
-            bf = dataclasses.replace(bf, bits=index_fn(gj))
-            qbatch = jnp.asarray(queries[:100].reshape(-1))
-            query_fn = jax.jit(
-                lambda codes: bloom.query_locations(
-                    bf.bits, idl.locations(cfg, codes, scheme)))
-            t_query = timeit(query_fn, qbatch)
-            # FPR on poisoned kmers that are NOT in the genome
-            fp, n_neg = 0, 0
-            for q in queries[:100]:
-                hits = np.asarray(bf.query_sequence(jnp.asarray(q)))
-                qk = kmers.pack_kmers_np(q, cfg.k)
-                truth = np.isin(qk, kmers.pack_kmers_np(g, cfg.k))
-                fp += int((hits & ~truth).sum())
-                n_neg += int((~truth).sum())
-            locs = np.asarray(idl.locations(cfg, jnp.asarray(queries[0]), scheme))
+            # build fresh per call: insert_batch donates the engine's buffer,
+            # so a pre-insert engine must not be reused across timing repeats
+            t_index = timeit(
+                lambda codes: PackedBloomIndex.build(cfg, scheme)
+                .insert_batch(codes).words, gj)
+            eng = PackedBloomIndex.build(cfg, scheme).insert_batch(gj)
+            qbatch = jnp.asarray(queries[:100])
+            t_query = timeit(lambda q: eng.query_batch(q), qbatch)
+            fpr = _fpr_on_poisoned(eng, g, queries[:100])
+            locs = np.asarray(
+                registry.locations(cfg, jnp.asarray(queries[0]), scheme))
             loc_m = locality_metrics(locs, cfg.L)
-            csv.row(cfg.m, scheme, fp / max(n_neg, 1), loc_m["page_miss"],
+            csv.row(cfg.m, scheme, fpr, loc_m["page_miss"],
                     loc_m["line_miss"], loc_m["dma_per_probe"],
                     1e3 * t_query, 1e3 * t_index)
 
@@ -99,26 +104,15 @@ def fig6_pareto() -> None:
             for eta in (2, 4, 6):
                 cfg = idl.IDLConfig(k=31, t=16, L=1 << 14, eta=eta,
                                     m=1 << logm)
-                bits = bloom.insert_locations(
-                    bloom.empty_filter(cfg.m),
-                    idl.locations(cfg, gj, scheme))
-                bf = bloom.BloomFilter(cfg=cfg, scheme=scheme, bits=bits)
-                fp, n_neg = 0, 0
-                for q in neg[:60]:
-                    hits = np.asarray(bf.query_sequence(jnp.asarray(q)))
-                    qk = kmers.pack_kmers_np(q, cfg.k)
-                    truth = np.isin(qk, kmers.pack_kmers_np(g, cfg.k))
-                    fp += int((hits & ~truth).sum())
-                    n_neg += int((~truth).sum())
-                query_fn = jax.jit(
-                    lambda codes: bloom.query_locations(
-                        bf.bits, idl.locations(cfg, codes, scheme)))
-                t_q = timeit(query_fn, jnp.asarray(neg[:60].reshape(-1)))
+                eng = PackedBloomIndex.build(cfg, scheme).insert_batch(gj)
+                fpr = _fpr_on_poisoned(eng, g, neg[:60])
+                t_q = timeit(lambda q: eng.query_batch(q),
+                             jnp.asarray(neg[:60]))
                 locs = np.asarray(
-                    idl.locations(cfg, jnp.asarray(neg[0]), scheme))
+                    registry.locations(cfg, jnp.asarray(neg[0]), scheme))
                 lm = locality_metrics(locs, cfg.L)
-                csv.row(scheme, cfg.m, eta, fp / max(n_neg, 1),
-                        lm["dma_per_probe"], 1e3 * t_q)
+                csv.row(scheme, cfg.m, eta, fpr, lm["dma_per_probe"],
+                        1e3 * t_q)
 
 
 # --------------------------------------------------------------------------
@@ -131,26 +125,23 @@ def fig7_cobs() -> None:
                "page_miss"])
     archive = genome.synth_archive(n_files=10, genome_len=20_000, seed=9)
     sizes = [f.n_kmers for f in archive]
+    genomes = jnp.asarray(np.stack([np.asarray(f.genome) for f in archive]))
+    file_ids = np.asarray([f.file_id for f in archive], dtype=np.int32)
     for scheme in ("rh", "idl"):
         base_cfg = idl.IDLConfig(k=31, t=16, L=1 << 13, eta=3, m=1 << 22)
-        c = cobs.Cobs.build(sizes, base_cfg, scheme=scheme, n_groups=2)
-        for f in archive:
-            c = c.insert_sequence(f.file_id, jnp.asarray(f.genome))
-        recall, fp, total = 0, 0, 0
-        t_q = 0.0
-        for f in archive[:6]:
-            read = f.reads(230, 1)[0]
-            t_q += timeit(lambda r: c.query_sequence(r), jnp.asarray(read),
-                          repeats=1)
-            got = np.asarray(c.msmt(jnp.asarray(read)))
-            recall += int(got[f.file_id])
-            fp += int(got.sum() - got[f.file_id])
-            total += 1
-        locs = np.asarray(idl.locations(
-            c.groups[0].cfg, jnp.asarray(archive[0].reads(230, 1)[0]), scheme))
+        c = CobsIndex.build(sizes, base_cfg, scheme=scheme, n_groups=2)
+        c = c.insert_batch(genomes, file_ids)      # whole archive, batched
+        qreads = jnp.asarray(np.stack(
+            [f.reads(230, 1)[0] for f in archive[:6]]))
+        t_q = timeit(lambda r: c.query_batch(r), qreads, repeats=1) / 6
+        got = np.asarray(c.msmt(qreads))
+        recall = int(got[np.arange(6), file_ids[:6]].sum())
+        fp = int(got.sum()) - recall
+        locs = np.asarray(registry.locations(
+            c.groups[0].cfg, qreads[0], scheme))
         lm = locality_metrics(locs, c.groups[0].cfg.L)
-        csv.row(scheme, c.total_bits, fp / (total * (len(archive) - 1)),
-                recall / total, 1e3 * t_q / total, lm["page_miss"])
+        csv.row(scheme, c.total_bits, fp / (6 * (len(archive) - 1)),
+                recall / 6, 1e3 * t_q, lm["page_miss"])
 
 
 # --------------------------------------------------------------------------
@@ -162,27 +153,23 @@ def table3_rambo() -> None:
               ["scheme", "L_bits", "m_per_bucket", "fpr", "recall",
                "query_ms", "page_miss"])
     archive = genome.synth_archive(n_files=100, genome_len=4_000, seed=13)
+    genomes = jnp.asarray(np.stack([np.asarray(f.genome) for f in archive]))
+    file_ids = np.asarray([f.file_id for f in archive], dtype=np.int32)
     for scheme in ("rh", "idl"):
         for L in (1 << 11, 1 << 12):          # paper's 2k / 4k ablation
             cfg = idl.IDLConfig(k=31, t=16, L=L, eta=4, m=1 << 21)
-            r = rambo.Rambo.build(100, cfg, scheme=scheme, B=20, R=2)
-            for f in archive:
-                r = r.insert_sequence(f.file_id, jnp.asarray(f.genome))
-            recall, fp, total = 0, 0, 0
-            t_q = 0.0
-            for f in archive[:8]:
-                read = f.reads(230, 1)[0]
-                t_q += timeit(lambda q: r.msmt(q), jnp.asarray(read),
-                              repeats=1)
-                got = np.asarray(r.msmt(jnp.asarray(read)))
-                recall += int(got[f.file_id])
-                fp += int(got.sum()) - int(got[f.file_id])
-                total += 1
-            locs = np.asarray(idl.locations(
-                cfg, jnp.asarray(archive[0].reads(230, 1)[0]), scheme))
+            r = RamboIndex.build(100, cfg, scheme=scheme, B=20, R=2)
+            r = r.insert_batch(genomes, file_ids)
+            qreads = jnp.asarray(np.stack(
+                [f.reads(230, 1)[0] for f in archive[:8]]))
+            t_q = timeit(lambda q: r.msmt(q), qreads, repeats=1) / 8
+            got = np.asarray(r.msmt(qreads))
+            recall = int(got[np.arange(8), file_ids[:8]].sum())
+            fp = int(got.sum()) - recall
+            locs = np.asarray(registry.locations(cfg, qreads[0], scheme))
             lm = locality_metrics(locs, cfg.L)
-            csv.row(scheme, L, cfg.m, fp / (total * 99), recall / total,
-                    1e3 * t_q / total, lm["page_miss"])
+            csv.row(scheme, L, cfg.m, fp / (8 * 99), recall / 8,
+                    1e3 * t_q, lm["page_miss"])
 
 
 # --------------------------------------------------------------------------
@@ -198,20 +185,12 @@ def table4_lsh() -> None:
     cfg = idl.IDLConfig(k=31, t=16, L=1 << 14, eta=4, m=1 << 24)
     gj = jnp.asarray(g)
     for scheme in ("lsh", "rh", "idl"):
-        bits = bloom.insert_locations(
-            bloom.empty_filter(cfg.m), idl.locations(cfg, gj, scheme))
-        bf = bloom.BloomFilter(cfg=cfg, scheme=scheme, bits=bits)
-        fp, n_neg = 0, 0
-        for q in neg[:80]:
-            hits = np.asarray(bf.query_sequence(jnp.asarray(q)))
-            qk = kmers.pack_kmers_np(q, cfg.k)
-            truth = np.isin(qk, kmers.pack_kmers_np(g, cfg.k))
-            fp += int((hits & ~truth).sum())
-            n_neg += int((~truth).sum())
-        locs = np.asarray(idl.locations(cfg, jnp.asarray(neg[0]), scheme))
+        eng = PackedBloomIndex.build(cfg, scheme).insert_batch(gj)
+        fpr = _fpr_on_poisoned(eng, g, neg[:80])
+        locs = np.asarray(registry.locations(cfg, jnp.asarray(neg[0]), scheme))
         lm = locality_metrics(locs, cfg.L)
-        csv.row(scheme, fp / max(n_neg, 1), lm["page_miss"],
-                lm["line_miss"], lm["dma_per_probe"])
+        csv.row(scheme, fpr, lm["page_miss"], lm["line_miss"],
+                lm["dma_per_probe"])
 
 
 # --------------------------------------------------------------------------
@@ -228,22 +207,12 @@ def fig8_ablation() -> None:
     base = dict(k=31, t=16, L=1 << 14, eta=4, m=1 << 23)
 
     def run(cfg: idl.IDLConfig):
-        bits = bloom.insert_locations(
-            bloom.empty_filter(cfg.m), idl.locations(cfg, gj, "idl"))
-        bf = bloom.BloomFilter(cfg=cfg, scheme="idl", bits=bits)
-        fp, n_neg = 0, 0
-        for q in neg[:40]:
-            hits = np.asarray(bf.query_sequence(jnp.asarray(q)))
-            qk = kmers.pack_kmers_np(q, cfg.k)
-            truth = np.isin(qk, kmers.pack_kmers_np(g, cfg.k))
-            fp += int((hits & ~truth).sum())
-            n_neg += int((~truth).sum())
-        fn = jax.jit(lambda codes: bloom.query_locations(
-            bf.bits, idl.locations(cfg, codes, "idl")))
-        t_q = timeit(fn, jnp.asarray(neg[:40].reshape(-1)))
-        locs = np.asarray(idl.locations(cfg, jnp.asarray(neg[0]), "idl"))
+        eng = PackedBloomIndex.build(cfg, "idl").insert_batch(gj)
+        fpr = _fpr_on_poisoned(eng, g, neg[:40])
+        t_q = timeit(lambda q: eng.query_batch(q), jnp.asarray(neg[:40]))
+        locs = np.asarray(registry.locations(cfg, jnp.asarray(neg[0]), "idl"))
         lm = locality_metrics(locs, cfg.L)
-        return fp / max(n_neg, 1), lm["dma_per_probe"], 1e3 * t_q
+        return fpr, lm["dma_per_probe"], 1e3 * t_q
 
     for logm in (21, 23, 25):
         cfg = idl.IDLConfig(**{**base, "m": 1 << logm})
@@ -275,17 +244,16 @@ def theory_check() -> None:
     for logm, eta, logL in ((22, 4, 12), (23, 4, 14), (24, 6, 14),
                             (21, 2, 12)):
         cfg = idl.IDLConfig(k=31, t=16, L=1 << logL, eta=eta, m=1 << logm)
-        bits = bloom.insert_locations(
-            bloom.empty_filter(cfg.m), idl.locations(cfg, gj, "idl"))
-        bf = bloom.BloomFilter(cfg=cfg, scheme="idl", bits=bits)
-        fpr = float(jnp.mean(bf.query_sequence(neg)))
+        eng = PackedBloomIndex.build(cfg, "idl").insert_batch(gj)
+        fpr = float(jnp.mean(eng.query_batch(neg)[0]))
         bound = theory.idl_bf_fpr_bound(cfg.m, n, cfg.eta, cfg.L, cfg.k, cfg.t)
         csv.row(cfg.m, eta, cfg.L, fpr, bound, fpr <= bound + 1e-6)
 
 
 # --------------------------------------------------------------------------
 # §3.3: Blocked-BF × IDL composition (beyond the paper's experiments — the
-# paper states the two are orthogonal and integrable; we measure it)
+# paper states the two are orthogonal and integrable; we measure it).
+# "idl-bbf" is an ordinary registry scheme: the engine needs no special case.
 # --------------------------------------------------------------------------
 
 def bbf_compose() -> None:
@@ -297,16 +265,11 @@ def bbf_compose() -> None:
     neg_codes = jnp.asarray(rng.integers(0, 4, size=40_000, dtype=np.uint8))
     cfg = idl.IDLConfig(k=31, t=16, L=1 << 14, eta=4, m=1 << 23)
 
-    def loc_fn(scheme):
-        if scheme == "idl+bbf":
-            return lambda c: idl.idl_bbf_locations_rolling(cfg, c)
-        return lambda c: idl.locations(cfg, c, scheme)
-
-    for scheme in ("rh", "idl", "idl+bbf"):
-        fn = loc_fn(scheme)
-        bits = bloom.insert_locations(bloom.empty_filter(cfg.m), fn(gj))
-        fpr = float(jnp.mean(bloom.query_locations(bits, fn(neg_codes))))
-        locs = np.asarray(fn(jnp.asarray(neg_codes[:2000])))
+    for scheme in ("rh", "idl", "idl-bbf"):
+        eng = PackedBloomIndex.build(cfg, scheme).insert_batch(gj)
+        fpr = float(jnp.mean(eng.query_batch(neg_codes)[0]))
+        locs = np.asarray(
+            registry.locations(cfg, neg_codes[:2000], scheme))
         lm = locality_metrics(locs, cfg.L)
         csv.row(scheme, fpr, lm["page_miss"], lm["line_miss"])
 

@@ -1,4 +1,5 @@
-"""Quickstart: index a genome with an IDL Bloom filter and query reads.
+"""Quickstart: index a genome with an IDL Bloom filter and query reads,
+through the unified `GeneIndex` API (`repro.index`).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,33 +7,40 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bloom, cache_model, idl
+from repro.core import cache_model, idl
 from repro.data import genome
+from repro.index import PackedBloomIndex, registry
 
 
 def main() -> None:
     # 1. synthesize a genome and build the IDL-BF over its 31-mers
     g = genome.synthesize_genome(50_000, seed=0)
     cfg = idl.IDLConfig(k=31, t=16, L=1 << 15, eta=4, m=1 << 24)
-    bf = bloom.BloomFilter(cfg=cfg, scheme="idl").insert_sequence(jnp.asarray(g))
+    bf = PackedBloomIndex.build(cfg, scheme="idl").insert_batch(jnp.asarray(g))
     print(f"indexed {len(g) - cfg.k + 1} kmers into a {cfg.m // 8 // 1024} KiB "
           f"IDL-BF (fill = {float(bf.fill_fraction):.3f})")
 
-    # 2. genuine reads pass Membership Testing; 1-poisoned reads fail
+    # 2. genuine reads pass Membership Testing; 1-poisoned reads fail —
+    #    both checked for the whole batch in one query_batch call
     reads = genome.extract_reads(g, 230, 5, seed=1)
     poisoned = genome.poison_queries(reads, seed=2)
+    ok = bf.msmt(jnp.asarray(np.stack(reads)))
+    bad = bf.msmt(jnp.asarray(poisoned))
     for i in range(3):
-        ok = bool(bf.membership(jnp.asarray(reads[i])))
-        bad = bool(bf.membership(jnp.asarray(poisoned[i])))
-        print(f"read {i}: genuine -> {ok}, 1-poisoned -> {bad}")
+        print(f"read {i}: genuine -> {bool(ok[i])}, 1-poisoned -> {bool(bad[i])}")
 
-    # 3. the paper's locality claim, measured
-    locs_idl = np.asarray(idl.idl_locations_rolling(cfg, jnp.asarray(reads[0])))
-    locs_rh = np.asarray(idl.rh_locations_rolling(cfg, jnp.asarray(reads[0])))
-    for name, locs in (("IDL", locs_idl), ("RH", locs_rh)):
+    # 3. the paper's locality claim, measured per registered scheme
+    for name in ("idl", "rh"):
+        locs = np.asarray(registry.locations(cfg, jnp.asarray(reads[0]), name))
         d = cache_model.count_block_dmas_partitioned(locs, cfg.L)
-        print(f"{name}: {d['switches']} block DMAs for {d['accesses']} probes "
-              f"({d['switches'] / d['accesses']:.2%} per probe)")
+        print(f"{name.upper()}: {d['switches']} block DMAs for {d['accesses']} "
+              f"probes ({d['switches'] / d['accesses']:.2%} per probe)")
+
+    # 4. the same membership through the Pallas probe-kernel backend
+    member_kernel = bf.query_batch(jnp.asarray(np.stack(reads)),
+                                   backend="kernel")
+    print(f"kernel backend agrees: "
+          f"{bool(jnp.all(member_kernel == bf.query_batch(jnp.asarray(np.stack(reads)))))}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,12 @@
-"""Partitioned Bloom filters over IDL / RH / LSH location streams.
+"""Partitioned Bloom filters over registered hash-scheme location streams.
 
-Canonical in-JAX representation: ``uint8`` array of m entries in {0,1}
-("bit-per-byte") — scatter-set and gather are native XLA ops and dedup-safe.
-``pack_bits`` / ``unpack_bits`` convert to the 32-bit-word packed layout used
-by the Pallas kernels (`repro.kernels.idl_probe` / `idl_insert`) and by the
-serving engine, where memory-realism matters.
+The canonical index storage now lives in :mod:`repro.index`: packed uint32
+words mutated by batched, donated scatters. This module keeps the simple
+``uint8`` bit-per-byte primitives (``insert_locations`` / ``query_locations``)
+as the reference oracle the parity tests check engines against, plus
+``pack_bits`` / ``unpack_bits`` to convert between the two layouts.
+:class:`BloomFilter` is a deprecated adapter over
+``repro.index.PackedBloomIndex``.
 
 The Blocked Bloom filter (Putze et al.) is provided as the orthogonal
 baseline the paper discusses in §3.3: all η probes of one key confined to a
@@ -40,7 +42,15 @@ def query_locations(bf: jax.Array, locs: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass
 class BloomFilter:
-    """A partitioned BF bound to a hashing scheme ("idl" | "rh" | "lsh")."""
+    """Deprecated thin adapter over :class:`repro.index.PackedBloomIndex`.
+
+    Kept for source compatibility with the seed API (uint8 ``bits`` field,
+    single-sequence methods). New code should build a
+    ``repro.index.PackedBloomIndex`` directly: it stores packed uint32
+    words, inserts whole batches in one donated scatter, and exposes the
+    Pallas kernel backend. Hash-scheme dispatch lives in
+    :mod:`repro.index.registry` — any registered scheme name works here.
+    """
 
     cfg: idl_mod.IDLConfig
     scheme: str = "idl"
@@ -50,15 +60,39 @@ class BloomFilter:
         if self.bits is None:
             self.bits = empty_filter(self.cfg.m)
 
+    def _query_index(self):
+        """Engine view for non-donating (query) use; packed words cached.
+
+        Keyed on the bits array's identity — pack_bits over m=2^26 per
+        query_sequence call would dominate. Never hand the cached words to
+        ``insert_batch``: it donates its buffer.
+        """
+        from repro.index import engines
+
+        cached = getattr(self, "_packed_cache", None)
+        if cached is None or cached[0] is not self.bits:
+            cached = (self.bits, pack_bits(self.bits))
+            object.__setattr__(self, "_packed_cache", cached)
+        return engines.PackedBloomIndex(
+            cfg=self.cfg, scheme=self.scheme, words=cached[1]
+        )
+
     # --- sequence (read / genome chunk) API: the paper's Alg. 1 / Alg. 2 ---
     def insert_sequence(self, codes: jax.Array) -> "BloomFilter":
-        locs = idl_mod.locations(self.cfg, codes, self.scheme)
-        return dataclasses.replace(self, bits=insert_locations(self.bits, locs))
+        from repro.index import engines
+
+        # pack a fresh temp for the donated insert; the cached view (and
+        # this instance's bits) stay valid
+        fresh = engines.PackedBloomIndex(
+            cfg=self.cfg, scheme=self.scheme, words=pack_bits(self.bits)
+        ).insert_batch(codes)
+        out = dataclasses.replace(self, bits=unpack_bits(fresh.words))
+        object.__setattr__(out, "_packed_cache", (out.bits, fresh.words))
+        return out
 
     def query_sequence(self, codes: jax.Array) -> jax.Array:
         """Per-kmer membership bits for all stride-1 kmers of the read."""
-        locs = idl_mod.locations(self.cfg, codes, self.scheme)
-        return query_locations(self.bits, locs)
+        return self._query_index().query_batch(codes)[0]
 
     def membership(self, codes: jax.Array) -> jax.Array:
         """MT(Q, G): True iff every kmer of Q passes (Definition 2)."""
@@ -73,11 +107,9 @@ class BloomFilter:
         return query_locations(self.bits, self._kmer_locs(kmer_arr))
 
     def _kmer_locs(self, kmer_arr: jax.Array) -> jax.Array:
-        if self.scheme == "idl":
-            return idl_mod.idl_locations_kmer_batch(self.cfg, kmer_arr)
-        if self.scheme == "rh":
-            return idl_mod.rh_locations(self.cfg, kmer_arr)
-        raise ValueError(f"kmer-batch API not defined for scheme {self.scheme!r}")
+        from repro.index import registry
+
+        return registry.kmer_locations(self.cfg, kmer_arr, self.scheme)
 
     @property
     def fill_fraction(self) -> jax.Array:

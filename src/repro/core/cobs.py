@@ -9,6 +9,11 @@ smaller filters → less space), exactly as in the paper's reference [4].
 IDL-COBS = identical structure, IDL locations instead of RH (paper §5.2):
 consecutive kmers gather *adjacent rows*, so one fetched row-block of the
 matrix serves a run of queries — the matrix row-block is the TPU DMA unit.
+
+:class:`Cobs` is now a deprecated thin adapter over
+:class:`repro.index.CobsIndex` (packed uint32 storage, batched donated
+inserts, registry-dispatched hash schemes). New code should use the engine
+directly; this class keeps the seed's single-sequence call signatures.
 """
 
 from __future__ import annotations
@@ -17,45 +22,17 @@ import dataclasses
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import idl as idl_mod
-
-
-@dataclasses.dataclass
-class CobsGroup:
-    """One size-group: files sharing a filter size m_g."""
-
-    cfg: idl_mod.IDLConfig             # cfg.m is this group's m_g
-    scheme: str
-    file_ids: list[int]
-    matrix: jax.Array | None = None    # (m_g, n_files) uint8
-
-    def __post_init__(self):
-        if self.matrix is None:
-            self.matrix = jnp.zeros(
-                (self.cfg.m, len(self.file_ids)), dtype=jnp.uint8
-            )
-
-    def insert_sequence(self, col: int, codes: jax.Array) -> "CobsGroup":
-        locs = idl_mod.locations(self.cfg, codes, self.scheme)  # (η, n)
-        mat = self.matrix.at[locs.reshape(-1), col].set(np.uint8(1))
-        return dataclasses.replace(self, matrix=mat)
-
-    def query_sequence(self, codes: jax.Array) -> jax.Array:
-        """(n_kmers, n_files) bool — per-kmer membership slice."""
-        locs = idl_mod.locations(self.cfg, codes, self.scheme)
-        rows = self.matrix[locs]              # (η, n_kmers, n_files)
-        return jnp.all(rows == np.uint8(1), axis=0)
+from repro.index import engines
 
 
 @dataclasses.dataclass
 class Cobs:
-    """Size-grouped array of bit-sliced filters over N files."""
+    """Deprecated adapter: size-grouped bit-sliced filters over N files."""
 
-    groups: list[CobsGroup]
-    n_files: int
+    index: engines.CobsIndex
 
     @classmethod
     def build(
@@ -66,38 +43,44 @@ class Cobs:
         bits_per_kmer: float = 10.0,
         n_groups: int = 2,
     ) -> "Cobs":
-        """Group files by kmer count; m_g sized from the group's largest file."""
-        order = np.argsort(file_sizes)
-        chunks = np.array_split(order, n_groups)
-        groups = []
-        for chunk in chunks:
-            if len(chunk) == 0:
-                continue
-            biggest = max(int(file_sizes[i]) for i in chunk)
-            m_g = _round_up(int(bits_per_kmer * biggest), 1 << 12)
-            m_g = max(m_g, base_cfg.eta * (base_cfg.L * 2))
-            cfg = dataclasses.replace(base_cfg, m=m_g)
-            groups.append(CobsGroup(cfg=cfg, scheme=scheme, file_ids=[int(i) for i in chunk]))
-        return cls(groups=groups, n_files=len(file_sizes))
+        """Group files by kmer count; m_g sized from the group's largest file.
+
+        Validates up front that the index is non-empty and that every group
+        shares one kmer size ``k`` (stored top-level on the engine — query
+        paths never reach into ``groups[0]``).
+        """
+        return cls(index=engines.CobsIndex.build(
+            file_sizes, base_cfg, scheme=scheme,
+            bits_per_kmer=bits_per_kmer, n_groups=n_groups,
+        ))
+
+    @property
+    def groups(self):
+        return self.index.groups
+
+    @property
+    def n_files(self) -> int:
+        return self.index.n_files
+
+    @property
+    def k(self) -> int:
+        return self.index.k
 
     def insert_sequence(self, file_id: int, codes: jax.Array) -> "Cobs":
-        groups = list(self.groups)
-        for gi, g in enumerate(groups):
-            if file_id in g.file_ids:
-                groups[gi] = g.insert_sequence(g.file_ids.index(file_id), codes)
-                break
-        else:
-            raise KeyError(f"file {file_id} not in any group")
-        return dataclasses.replace(self, groups=groups)
+        # insert_batch donates the target group's buffer; copy it first so
+        # this (pre-insert) instance keeps the seed's functional semantics
+        gi, _ = self.index._slot(int(file_id))
+        groups = list(self.index.groups)
+        groups[gi] = dataclasses.replace(
+            groups[gi], words=groups[gi].words.copy())
+        safe = dataclasses.replace(self.index, groups=tuple(groups))
+        return dataclasses.replace(
+            self, index=safe.insert_batch(codes, np.asarray([file_id]))
+        )
 
     def query_sequence(self, codes: jax.Array) -> jax.Array:
         """MSMT kmer slice: (n_kmers, N) bool across all files (Definition 3)."""
-        n_kmers = codes.shape[0] - self.groups[0].cfg.k + 1
-        out = jnp.zeros((n_kmers, self.n_files), dtype=bool)
-        for g in self.groups:
-            sl = g.query_sequence(codes)  # (n_kmers, len(g.file_ids))
-            out = out.at[:, jnp.asarray(g.file_ids)].set(sl)
-        return out
+        return self.index.query_batch(codes)[0]
 
     def msmt(self, codes: jax.Array, theta: float = 1.0) -> jax.Array:
         """Per-file match: fraction of query kmers present >= theta.
@@ -105,18 +88,8 @@ class Cobs:
         theta=1.0 reproduces Definition 2 (all kmers present); theta<1 is the
         standard COBS approximate-match mode.
         """
-        slices = self.query_sequence(codes)  # (n_kmers, N)
-        n_kmers = slices.shape[0]
-        hits = jnp.sum(slices.astype(jnp.int32), axis=0)
-        # integer threshold: exact for theta=1.0 (float mean of n ones != 1.0
-        # in f32 for many n, which silently breaks Definition 2)
-        need = int(np.ceil(theta * n_kmers - 1e-9))
-        return hits >= need
+        return self.index.msmt(codes, theta=theta)[0]
 
     @property
     def total_bits(self) -> int:
-        return sum(int(g.matrix.shape[0]) * len(g.file_ids) for g in self.groups)
-
-
-def _round_up(x: int, align: int) -> int:
-    return -(-x // align) * align
+        return self.index.total_bits

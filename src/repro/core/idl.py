@@ -250,23 +250,26 @@ def rh_locations_rolling(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
     return rh_locations(cfg, kmers.pack_kmers(codes, cfg.k))
 
 
-def locations(cfg: IDLConfig, codes: jax.Array, scheme: str) -> jax.Array:
-    """Dispatch: scheme in {"idl", "rh", "lsh"}.
+def lsh_locations_rolling(cfg: IDLConfig, codes: jax.Array) -> jax.Array:
+    """Rehashed MinHash only (Table 4's ablation: locality but identity
+    loss → FPR blowup)."""
+    subk = kmers.pack_kmers(codes, cfg.t)
+    mh = _minhash_rolling(cfg, subk)
+    locs = [
+        hashing.hash_to_range(mh[j], _SALT_ANCHOR + 31 * j, cfg.m_part)
+        + np.uint32(j * cfg.m_part)
+        for j in range(cfg.eta)
+    ]
+    return jnp.stack(locs, axis=0)
 
-    "lsh" = rehashed MinHash only (Table 4's ablation: locality but identity
-    loss → FPR blowup).
+
+def locations(cfg: IDLConfig, codes: jax.Array, scheme: str) -> jax.Array:
+    """Rolling locations for a named scheme.
+
+    Dispatch lives in :mod:`repro.index.registry` (the single place hash
+    families are looked up by name); this wrapper is kept for callers that
+    predate the registry.
     """
-    if scheme == "idl":
-        return idl_locations_rolling(cfg, codes)
-    if scheme == "rh":
-        return rh_locations_rolling(cfg, codes)
-    if scheme == "lsh":
-        subk = kmers.pack_kmers(codes, cfg.t)
-        mh = _minhash_rolling(cfg, subk)
-        locs = [
-            hashing.hash_to_range(mh[j], _SALT_ANCHOR + 31 * j, cfg.m_part)
-            + np.uint32(j * cfg.m_part)
-            for j in range(cfg.eta)
-        ]
-        return jnp.stack(locs, axis=0)
-    raise ValueError(f"unknown scheme {scheme!r}")
+    from repro.index import registry  # local import: registry imports us
+
+    return registry.locations(cfg, codes, scheme)

@@ -9,9 +9,11 @@ B = O(sqrt(N)), R = O(log N) gives sub-linear query time with linear memory.
 IDL-RAMBO (paper §5.2, Table 3): each bucket BF swaps RH → IDL locations;
 parameters (B, R, m, η) are unchanged — IDL is a drop-in.
 
-Implementation: the R*B filters are ONE stacked uint8 array (R*B, m_b) so a
-batched query is a single gather — this is also the layout the serving layer
-shards across the mesh (filter axis → 'model').
+:class:`Rambo` is now a deprecated thin adapter over
+:class:`repro.index.RamboIndex`, which stores the R*B filters as ONE packed
+(R*B, m/32) uint32 array mutated by a single batched donated scatter per
+insert. This shim keeps the seed's uint8 ``filters`` field and
+single-sequence call signatures.
 """
 
 from __future__ import annotations
@@ -22,75 +24,58 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashing, idl as idl_mod
+from repro.core import idl as idl_mod
+from repro.index import engines, packed
 
 
 @dataclasses.dataclass
 class Rambo:
+    """Deprecated adapter over ``repro.index.RamboIndex``."""
+
     cfg: idl_mod.IDLConfig            # cfg.m = bits per bucket BF (m_b)
     scheme: str
     n_files: int
     B: int                            # buckets per repetition
     R: int                            # repetitions
-    filters: jax.Array | None = None  # (R*B, m_b) uint8
+    filters: jax.Array | None = None  # (R*B, m_b) uint8 (compat view)
     assignment: np.ndarray | None = None  # (R, N) int32: file -> bucket
 
     def __post_init__(self):
-        if self.filters is None:
-            self.filters = jnp.zeros((self.R * self.B, self.cfg.m), dtype=jnp.uint8)
         if self.assignment is None:
-            files = np.arange(self.n_files, dtype=np.uint64)
-            self.assignment = np.stack(
-                [
-                    hashing.np_hash_to_range(files, 0xA3B0 + r, self.B).astype(np.int32)
-                    for r in range(self.R)
-                ],
-                axis=0,
-            )
+            self.assignment = engines.rambo_assignment(
+                self.n_files, self.B, self.R)
+        if self.filters is None:
+            self.filters = jnp.zeros(
+                (self.R * self.B, self.cfg.m), dtype=jnp.uint8)
 
     @classmethod
     def build(
         cls, n_files: int, cfg: idl_mod.IDLConfig, scheme: str = "idl",
         B: int | None = None, R: int | None = None,
     ) -> "Rambo":
-        if B is None:
-            B = max(2, int(np.ceil(np.sqrt(n_files))))
-        if R is None:
-            R = max(2, int(np.ceil(np.log2(max(n_files, 2)))))
+        B, R = engines.rambo_dimensions(n_files, B, R)
         return cls(cfg=cfg, scheme=scheme, n_files=n_files, B=B, R=R)
 
     # ------------------------------------------------------------------
-    def _locs(self, codes: jax.Array) -> jax.Array:
-        return idl_mod.locations(self.cfg, codes, self.scheme)  # (η, n_kmers)
+    def _as_index(self) -> engines.RamboIndex:
+        return engines.RamboIndex(
+            cfg=self.cfg, scheme=self.scheme, n_files=self.n_files,
+            n_buckets=self.B, n_rep=self.R,
+            words=packed.pack_rows(self.filters), assignment=self.assignment,
+        )
 
     def insert_sequence(self, file_id: int, codes: jax.Array) -> "Rambo":
-        locs = self._locs(codes).reshape(-1)
-        filt = self.filters
-        for r in range(self.R):
-            row = r * self.B + int(self.assignment[r, file_id])
-            filt = filt.at[row, locs].set(np.uint8(1))
-        return dataclasses.replace(self, filters=filt)
+        eng = self._as_index().insert_batch(codes, np.asarray([file_id]))
+        return dataclasses.replace(
+            self, filters=packed.unpack_rows(eng.words, self.cfg.m))
 
     def query_kmer_grid(self, codes: jax.Array) -> jax.Array:
         """(n_kmers, R, B) bool: bucket hits per kmer."""
-        locs = self._locs(codes)                    # (η, n_kmers)
-        bits = self.filters[:, locs]                # (R*B, η, n_kmers)
-        hit = jnp.all(bits == np.uint8(1), axis=1)  # (R*B, n_kmers)
-        return hit.T.reshape(-1, self.R, self.B)
+        return self._as_index().query_grid(codes)[0]
 
     def msmt(self, codes: jax.Array, theta: float = 1.0) -> jax.Array:
         """Candidate files whose kmer-coverage >= theta (N-bool)."""
-        grid = self.query_kmer_grid(codes)          # (n_kmers, R, B)
-        assign = jnp.asarray(self.assignment)       # (R, N)
-        # file i present for a kmer iff all R of its buckets hit
-        per_rep = jnp.take_along_axis(
-            grid, assign.T[None, :, :].transpose(0, 2, 1), axis=2
-        )  # (n_kmers, R, N)
-        present = jnp.all(per_rep, axis=1)          # (n_kmers, N)
-        n_kmers = present.shape[0]
-        hits = jnp.sum(present.astype(jnp.int32), axis=0)
-        need = int(np.ceil(theta * n_kmers - 1e-9))  # exact at theta=1.0
-        return hits >= need
+        return self._as_index().msmt(codes, theta=theta)[0]
 
     @property
     def total_bits(self) -> int:

@@ -52,25 +52,33 @@ class _NgramBF:
         self.probes = 0
         self.byte_trace: list[np.ndarray] = []
 
+    def _locations_idl(self, ngrams: np.ndarray, anchors: np.ndarray,
+                       j: int, m_part: int) -> np.ndarray:
+        cfg = self.cfg
+        anchor = hashing.np_hash_to_range(
+            anchors, 0xA17C + 31 * j, max(m_part // cfg.dedup_L, 1)
+        ).astype(np.int64) * cfg.dedup_L
+        local = hashing.np_hash_to_range(
+            ngrams, 0x10CA + 31 * j, cfg.dedup_L
+        ).astype(np.int64)
+        return anchor + local + j * m_part
+
+    def _locations_rh(self, ngrams: np.ndarray, anchors: np.ndarray,
+                      j: int, m_part: int) -> np.ndarray:
+        del anchors
+        return hashing.np_hash_to_range(
+            ngrams, 0x5EED + 31 * j, m_part
+        ).astype(np.int64) + j * m_part
+
     def _locations(self, ngrams: np.ndarray, anchors: np.ndarray) -> np.ndarray:
         cfg = self.cfg
         m_part = cfg.dedup_bf_bits // cfg.dedup_eta
-        locs = []
-        for j in range(cfg.dedup_eta):
-            if cfg.dedup_scheme == "idl":
-                anchor = hashing.np_hash_to_range(
-                    anchors, 0xA17C + 31 * j, max(m_part // cfg.dedup_L, 1)
-                ).astype(np.int64) * cfg.dedup_L
-                local = hashing.np_hash_to_range(
-                    ngrams, 0x10CA + 31 * j, cfg.dedup_L
-                ).astype(np.int64)
-                locs.append(anchor + local + j * m_part)
-            else:
-                locs.append(
-                    hashing.np_hash_to_range(ngrams, 0x5EED + 31 * j, m_part)
-                    .astype(np.int64) + j * m_part
-                )
-        return np.stack(locs, axis=0)  # (eta, n)
+        loc_fn = {"idl": self._locations_idl}.get(
+            cfg.dedup_scheme, self._locations_rh)
+        return np.stack(
+            [loc_fn(ngrams, anchors, j, m_part) for j in range(cfg.dedup_eta)],
+            axis=0,
+        )  # (eta, n)
 
     def check_and_insert(self, tokens: np.ndarray) -> float:
         """Returns the fraction of the doc's n-grams already seen."""

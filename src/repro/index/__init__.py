@@ -1,0 +1,30 @@
+"""Unified gene-sequence index subsystem.
+
+One protocol (:class:`GeneIndex`), one hash-family registry
+(:mod:`repro.index.registry`), one packed-word storage layer
+(:mod:`repro.index.packed`), four engines (:mod:`repro.index.engines`).
+See docs/API.md for the full API and migration notes from the deprecated
+``core.bloom.BloomFilter`` / ``core.cobs.Cobs`` / ``core.rambo.Rambo``
+classes.
+"""
+
+from repro.index import packed, registry
+from repro.index.engines import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+)
+from repro.index.protocol import GeneIndex
+from repro.index.registry import HashScheme
+
+__all__ = [
+    "BitSlicedIndex",
+    "CobsIndex",
+    "GeneIndex",
+    "HashScheme",
+    "PackedBloomIndex",
+    "RamboIndex",
+    "packed",
+    "registry",
+]

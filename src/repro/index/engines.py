@@ -1,0 +1,442 @@
+"""The four index engines behind the :class:`GeneIndex` protocol.
+
+=====================  =====================================================
+Engine                 Storage (canonical packed-uint32 words)
+=====================  =====================================================
+PackedBloomIndex       flat partitioned BF: ``(m/32,)``
+CobsIndex              size-grouped bit-sliced matrices: ``(m_g, ⌈F_g/32⌉)``
+RamboIndex             stacked bucket BFs: ``(R·B, m_b/32)``
+BitSlicedIndex         single bit-sliced matrix: ``(m, ⌈F/32⌉)`` (serving)
+=====================  =====================================================
+
+All engines resolve their hash family by name through
+:mod:`repro.index.registry` and mutate storage only through the batched,
+donated, dedup'd scatters in :mod:`repro.index.packed`. Engines are
+immutable dataclasses; ``insert_batch`` returns a new value and donates the
+old buffer (linear use — keep only the returned index).
+
+``PackedBloomIndex.query_batch(..., backend="kernel")`` routes probes
+through the host-side run-length planner + Pallas kernel of
+:mod:`repro.kernels.idl_probe` instead of the pure-jnp gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, idl as idl_mod
+from repro.index import packed, registry
+
+
+def _as_batch(reads: jax.Array) -> jax.Array:
+    reads = jnp.asarray(reads)
+    return reads[None, :] if reads.ndim == 1 else reads
+
+
+def _as_file_ids(file_ids, batch: int) -> np.ndarray:
+    if file_ids is None:
+        raise ValueError("this engine requires file_ids for insert_batch")
+    arr = np.atleast_1d(np.asarray(file_ids, dtype=np.int32))
+    if arr.shape != (batch,):
+        raise ValueError(f"file_ids shape {arr.shape} != batch ({batch},)")
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# Partitioned Bloom filter.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedBloomIndex:
+    """Single-set partitioned BF over any registered hash scheme."""
+
+    cfg: idl_mod.IDLConfig
+    scheme: str = "idl"
+    words: Optional[jax.Array] = None     # (m/32,) uint32
+
+    def __post_init__(self):
+        if self.cfg.m % 32:
+            raise ValueError(f"m={self.cfg.m} must be a multiple of 32")
+        if self.words is None:
+            object.__setattr__(
+                self, "words", jnp.zeros((self.cfg.m // 32,), dtype=jnp.uint32)
+            )
+
+    @classmethod
+    def build(cls, cfg: idl_mod.IDLConfig, scheme: str = "idl") -> "PackedBloomIndex":
+        return cls(cfg=cfg, scheme=scheme)
+
+    def insert_batch(self, reads, file_ids=None) -> "PackedBloomIndex":
+        """Index a (B, read_len) batch; ``file_ids`` is ignored (single set)."""
+        del file_ids
+        words = packed.insert_batch_words(
+            self.words, _as_batch(reads), cfg=self.cfg, scheme=self.scheme
+        )
+        return dataclasses.replace(self, words=words)
+
+    def query_batch(
+        self, reads, *, backend: str = "jnp",
+        interpret: Optional[bool] = None,
+    ) -> jax.Array:
+        """(B, n_kmers) bool per-kmer membership.
+
+        ``backend="kernel"`` plans block-resident probe runs on the host and
+        executes them with the Pallas ``idl_probe`` kernel. ``interpret``
+        forces/disables Pallas interpreter mode; the default interprets only
+        on CPU (no Mosaic), and compiles on TPU/GPU.
+        """
+        reads = _as_batch(reads)
+        if backend == "jnp":
+            return packed.query_batch_words(
+                self.words, reads, cfg=self.cfg, scheme=self.scheme
+            )
+        if backend == "kernel":
+            return self._query_kernel(reads, interpret=interpret)
+        raise ValueError(f"unknown backend {backend!r} (want 'jnp' or 'kernel')")
+
+    def _query_kernel(
+        self, reads: jax.Array, interpret: Optional[bool] = None
+    ) -> jax.Array:
+        from repro.kernels.idl_probe import ops as probe_ops
+
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        out = []
+        for row in np.asarray(reads):
+            locs = np.asarray(
+                registry.locations(self.cfg, jnp.asarray(row), self.scheme)
+            )
+            plan = probe_ops.plan_probe_runs(locs, block_bits=self.cfg.L)
+            out.append(
+                np.asarray(probe_ops.probe_membership(self.words, plan,
+                                                      interpret=interpret))
+            )
+        return jnp.asarray(np.stack(out, axis=0))
+
+    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+        """(B,) bool: kmer-coverage of the one indexed set >= theta."""
+        member = self.query_batch(reads)
+        need = packed.coverage_need(theta, member.shape[1])
+        return jnp.sum(member.astype(jnp.int32), axis=1) >= need
+
+    @property
+    def bits(self) -> jax.Array:
+        """Compatibility view: (m,) uint8 bit-per-byte layout."""
+        from repro.core import bloom as bloom_mod
+
+        return bloom_mod.unpack_bits(self.words)
+
+    @property
+    def fill_fraction(self) -> jax.Array:
+        return jnp.mean(self.bits.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# COBS — compact bit-sliced signature index (size-grouped).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CobsGroupState:
+    """One size-group: files sharing a filter size ``cfg.m``."""
+
+    cfg: idl_mod.IDLConfig
+    file_ids: tuple[int, ...]
+    words: Optional[jax.Array] = None     # (m_g, ceil(n_files/32)) uint32
+
+    def __post_init__(self):
+        if self.words is None:
+            w = -(-len(self.file_ids) // 32)
+            object.__setattr__(
+                self, "words", jnp.zeros((self.cfg.m, w), dtype=jnp.uint32)
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class CobsIndex:
+    """Size-grouped bit-sliced filters over N files (BIGSI/COBS layout)."""
+
+    groups: tuple[CobsGroupState, ...]
+    scheme: str
+    n_files: int
+    k: int
+
+    def __post_init__(self):
+        ks = {g.cfg.k for g in self.groups}
+        if not self.groups:
+            raise ValueError("CobsIndex needs at least one group")
+        if ks != {self.k}:
+            raise ValueError(f"groups disagree on k: {sorted(ks)} vs k={self.k}")
+
+    @classmethod
+    def build(
+        cls,
+        file_sizes: Sequence[int],
+        base_cfg: idl_mod.IDLConfig,
+        scheme: str = "idl",
+        bits_per_kmer: float = 10.0,
+        n_groups: int = 2,
+    ) -> "CobsIndex":
+        """Group files by kmer count; m_g sized from the group's largest file."""
+        if len(file_sizes) == 0:
+            raise ValueError("CobsIndex.build needs at least one file")
+        order = np.argsort(file_sizes)
+        chunks = np.array_split(order, n_groups)
+        groups = []
+        for chunk in chunks:
+            if len(chunk) == 0:
+                continue
+            biggest = max(int(file_sizes[i]) for i in chunk)
+            m_g = _round_up(int(bits_per_kmer * biggest), 1 << 12)
+            m_g = max(m_g, base_cfg.eta * (base_cfg.L * 2))
+            cfg = dataclasses.replace(base_cfg, m=m_g)
+            groups.append(
+                CobsGroupState(cfg=cfg, file_ids=tuple(int(i) for i in chunk))
+            )
+        return cls(groups=tuple(groups), scheme=scheme,
+                   n_files=len(file_sizes), k=base_cfg.k)
+
+    def _slot(self, file_id: int) -> tuple[int, int]:
+        for gi, g in enumerate(self.groups):
+            if file_id in g.file_ids:
+                return gi, g.file_ids.index(file_id)
+        raise KeyError(f"file {file_id} not in any group")
+
+    def insert_batch(self, reads, file_ids=None) -> "CobsIndex":
+        """Index reads into their files' group columns (one scatter/group)."""
+        reads = _as_batch(reads)
+        fids = _as_file_ids(file_ids, reads.shape[0])
+        slots = [self._slot(int(f)) for f in fids]
+        groups = list(self.groups)
+        for gi in sorted({gi for gi, _ in slots}):
+            sel = np.array([i for i, (g, _) in enumerate(slots) if g == gi])
+            cols = jnp.asarray(
+                np.array([slots[i][1] for i in sel], dtype=np.int32))
+            g = groups[gi]
+            words = packed.insert_batch_bitsliced(
+                g.words, jnp.take(reads, jnp.asarray(sel), axis=0), cols,
+                cfg=g.cfg, scheme=self.scheme,
+            )
+            groups[gi] = dataclasses.replace(g, words=words)
+        return dataclasses.replace(self, groups=tuple(groups))
+
+    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+        """(B, n_kmers, n_files) bool MSMT kmer slices (Definition 3)."""
+        if backend != "jnp":
+            raise NotImplementedError("CobsIndex supports backend='jnp' only")
+        reads = _as_batch(reads)
+        n_k = reads.shape[1] - self.k + 1
+        out = jnp.zeros((reads.shape[0], n_k, self.n_files), dtype=bool)
+        for g in self.groups:
+            masks = _query_bitsliced(g.words, reads, cfg=g.cfg,
+                                     scheme=self.scheme, lane32=False)
+            sl = packed.unpack_file_bits(masks, len(g.file_ids))
+            out = out.at[:, :, jnp.asarray(g.file_ids)].set(sl)
+        return out
+
+    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+        """(B, n_files) bool: per-file kmer-coverage >= theta."""
+        slices = self.query_batch(reads)
+        need = packed.coverage_need(theta, slices.shape[1])
+        return jnp.sum(slices.astype(jnp.int32), axis=1) >= need
+
+    @property
+    def total_bits(self) -> int:
+        return sum(int(g.cfg.m) * len(g.file_ids) for g in self.groups)
+
+
+# ---------------------------------------------------------------------------
+# RAMBO — repeated and merged bucketed Bloom filters.
+# ---------------------------------------------------------------------------
+
+def rambo_dimensions(
+    n_files: int, B: Optional[int] = None, R: Optional[int] = None
+) -> tuple[int, int]:
+    """Default RAMBO shape: B = O(sqrt N) buckets, R = O(log N) repetitions."""
+    if B is None:
+        B = max(2, int(np.ceil(np.sqrt(n_files))))
+    if R is None:
+        R = max(2, int(np.ceil(np.log2(max(n_files, 2)))))
+    return B, R
+
+
+def rambo_assignment(n_files: int, n_buckets: int, n_rep: int) -> np.ndarray:
+    """(R, N) int32 file->bucket map (same hash family as the query path)."""
+    files = np.arange(n_files, dtype=np.uint64)
+    return np.stack(
+        [
+            hashing.np_hash_to_range(files, 0xA3B0 + r, n_buckets).astype(np.int32)
+            for r in range(n_rep)
+        ],
+        axis=0,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RamboIndex:
+    """B buckets × R repetitions of merged BFs; sub-linear MSMT."""
+
+    cfg: idl_mod.IDLConfig                 # cfg.m = bits per bucket BF
+    scheme: str
+    n_files: int
+    n_buckets: int                         # B
+    n_rep: int                             # R
+    words: Optional[jax.Array] = None      # (R*B, m/32) uint32
+    assignment: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        if self.cfg.m % 32:
+            raise ValueError(f"bucket size m={self.cfg.m} must be a multiple of 32")
+        if self.words is None:
+            object.__setattr__(
+                self, "words",
+                jnp.zeros((self.n_rep * self.n_buckets, self.cfg.m // 32),
+                          dtype=jnp.uint32),
+            )
+        if self.assignment is None:
+            object.__setattr__(
+                self, "assignment",
+                rambo_assignment(self.n_files, self.n_buckets, self.n_rep),
+            )
+
+    @classmethod
+    def build(
+        cls, n_files: int, cfg: idl_mod.IDLConfig, scheme: str = "idl",
+        B: Optional[int] = None, R: Optional[int] = None,
+    ) -> "RamboIndex":
+        B, R = rambo_dimensions(n_files, B, R)
+        return cls(cfg=cfg, scheme=scheme, n_files=n_files,
+                   n_buckets=B, n_rep=R)
+
+    def _filter_rows(self, fids: np.ndarray) -> jax.Array:
+        offs = np.arange(self.n_rep, dtype=np.int32) * self.n_buckets
+        return jnp.asarray(self.assignment[:, fids].T + offs[None, :])  # (B, R)
+
+    def insert_batch(self, reads, file_ids=None) -> "RamboIndex":
+        reads = _as_batch(reads)
+        fids = _as_file_ids(file_ids, reads.shape[0])
+        words = packed.insert_batch_rows(
+            self.words, reads, self._filter_rows(fids),
+            cfg=self.cfg, scheme=self.scheme,
+        )
+        return dataclasses.replace(self, words=words)
+
+    def query_grid(self, reads) -> jax.Array:
+        """(B, n_kmers, R, buckets) bool: bucket hits per kmer."""
+        return _rambo_query_grid(
+            self.words, _as_batch(reads), cfg=self.cfg, scheme=self.scheme,
+            n_rep=self.n_rep, n_buckets=self.n_buckets,
+        )
+
+    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+        """(B, n_kmers, n_files) bool: file present in all R of its buckets."""
+        if backend != "jnp":
+            raise NotImplementedError("RamboIndex supports backend='jnp' only")
+        grid = self.query_grid(reads)                     # (B, n_k, R, Bkt)
+        idx = jnp.asarray(self.assignment)[None, None]    # (1, 1, R, N)
+        per_rep = jnp.take_along_axis(grid, idx, axis=3)  # (B, n_k, R, N)
+        return jnp.all(per_rep, axis=2)
+
+    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+        present = self.query_batch(reads)
+        need = packed.coverage_need(theta, present.shape[1])
+        return jnp.sum(present.astype(jnp.int32), axis=1) >= need
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.words.shape[0]) * int(self.words.shape[1]) * 32
+
+
+# ---------------------------------------------------------------------------
+# Bit-sliced serving index (the paper's system; 32-bit lane path).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BitSlicedIndex:
+    """One bit-sliced (m, F/32) matrix queried on the TPU 32-bit lane path."""
+
+    cfg: idl_mod.IDLConfig
+    scheme: str
+    n_files: int
+    words: Optional[jax.Array] = None      # (m, ceil(n_files/32)) uint32
+
+    def __post_init__(self):
+        if self.words is None:
+            w = -(-self.n_files // 32)
+            object.__setattr__(
+                self, "words", jnp.zeros((self.cfg.m, w), dtype=jnp.uint32)
+            )
+
+    @classmethod
+    def build(
+        cls, cfg: idl_mod.IDLConfig, scheme: str = "idl", n_files: int = 1024
+    ) -> "BitSlicedIndex":
+        return cls(cfg=cfg, scheme=scheme, n_files=n_files)
+
+    def insert_batch(self, reads, file_ids=None) -> "BitSlicedIndex":
+        reads = _as_batch(reads)
+        fids = _as_file_ids(file_ids, reads.shape[0])
+        words = packed.insert_batch_bitsliced(
+            self.words, reads, jnp.asarray(fids),
+            cfg=self.cfg, scheme=self.scheme, lane32=True,
+        )
+        return dataclasses.replace(self, words=words)
+
+    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+        """(B, n_kmers, F/32) uint32 per-kmer file masks (packed)."""
+        if backend != "jnp":
+            raise NotImplementedError("BitSlicedIndex supports backend='jnp' only")
+        return _query_bitsliced(self.words, _as_batch(reads), cfg=self.cfg,
+                                scheme=self.scheme, lane32=True)
+
+    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+        """(B, n_files) bool, same math as ``serving.genesearch.serve_step``."""
+        per_kmer = self.query_batch(reads)                # (B, n_k, W)
+        if theta >= 1.0:
+            mask = jax.lax.reduce(
+                per_kmer, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and,
+                dimensions=(1,),
+            )
+            return packed.unpack_file_bits(mask, self.n_files)
+        bits = (per_kmer[..., None] >> jnp.arange(32, dtype=jnp.uint32)) \
+            & jnp.uint32(1)
+        hits = jnp.sum(bits.astype(jnp.int32), axis=1)    # (B, W, 32)
+        match = hits >= packed.coverage_need(theta, per_kmer.shape[1])
+        return match.reshape(match.shape[0], -1)[:, : self.n_files]
+
+
+# ---------------------------------------------------------------------------
+# Shared jitted query bodies.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scheme", "lane32"))
+def _query_bitsliced(words, reads, *, cfg, scheme, lane32):
+    """(B, n_kmers, W) uint32: per-kmer AND over η of gathered file masks."""
+    locs = packed.batch_locations(cfg, reads, scheme, lane32=lane32)
+    rows = words[locs.astype(jnp.int32)]                  # (B, η, n_k, W)
+    return jax.lax.reduce(
+        rows, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, dimensions=(1,)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "scheme", "n_rep", "n_buckets")
+)
+def _rambo_query_grid(words, reads, *, cfg, scheme, n_rep, n_buckets):
+    locs = packed.batch_locations(cfg, reads, scheme)     # (B, η, n_k)
+    word_idx = (locs >> jnp.uint32(5)).astype(jnp.int32)
+    bit = locs & jnp.uint32(31)
+    got = (words[:, word_idx] >> bit) & jnp.uint32(1)     # (RB, B, η, n_k)
+    hit = jnp.all(got == jnp.uint32(1), axis=2)           # (RB, B, n_k)
+    return jnp.transpose(hit, (1, 2, 0)).reshape(
+        hit.shape[1], hit.shape[2], n_rep, n_buckets
+    )
+
+
+def _round_up(x: int, align: int) -> int:
+    return -(-x // align) * align

@@ -1,0 +1,200 @@
+"""Packed-uint32 word storage + batched, donated, dedup'd scatter inserts.
+
+Canonical storage for every engine behind the :class:`~repro.index.protocol.
+GeneIndex` protocol: Bloom-filter bits live packed 32-per-``uint32`` word
+(the layout the Pallas kernels and the serving index already use), not as
+one byte per bit. All mutation goes through the jit-compiled entry points
+here, which share one structure:
+
+1. locations for a whole ``(B, read_len)`` batch of reads are computed
+   in-graph with ``vmap`` over the registry's rolling path — no per-read
+   Python loop;
+2. duplicate (target, bit) pairs are removed with a sort-based dedup
+   (``lexsort`` + neighbour compare — no ``jnp.unique``, whose output shape
+   is data-dependent and would break jit); duplicates are routed to an
+   out-of-range row and dropped by the ``mode="drop"`` scatter;
+3. the deduped bits are scatter-added into a zero delta (safe: each bit
+   appears at most once, so add == or) and OR-ed into the donated
+   destination buffer — one fused scatter per batch instead of a full
+   ``m``-bit array copy per read.
+
+The destination buffer is donated (``donate_argnums=0``): on accelerators
+the update is in-place; CPU falls back to a copy with a one-time warning.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom as bloom_mod
+from repro.core import idl as idl_mod
+from repro.index import registry
+
+
+def batch_locations(
+    cfg: idl_mod.IDLConfig, reads: jax.Array, scheme: str, *, lane32: bool = False
+) -> jax.Array:
+    """(B, η, n_kmers) uint32 locations for a batch of equal-length reads."""
+    fn = registry.locations32 if lane32 else registry.locations
+    return jax.vmap(lambda codes: fn(cfg, codes, scheme))(reads)
+
+
+# ---------------------------------------------------------------------------
+# Dedup'd scatter-or primitives (pure jnp, jit/vmap safe).
+# ---------------------------------------------------------------------------
+
+def _mask_duplicates(sort_key_rows: jax.Array, primary: jax.Array, oob) -> jax.Array:
+    """Return ``primary`` with duplicate entries replaced by ``oob``.
+
+    ``sort_key_rows``: tuple-like (k, P) stack of already-sorted key rows;
+    an entry is a duplicate iff every key row equals its left neighbour.
+    """
+    same = jnp.ones(primary.shape, dtype=bool)
+    for row in sort_key_rows:
+        same = same & jnp.concatenate(
+            [jnp.zeros((1,), dtype=bool), row[1:] == row[:-1]]
+        )
+    return jnp.where(same, oob, primary)
+
+
+def scatter_or(words: jax.Array, locs: jax.Array) -> jax.Array:
+    """OR the bits at flat bit-locations ``locs`` into packed ``words``.
+
+    One sort + one scatter for the whole location stream, duplicate-safe.
+    """
+    flat = jnp.sort(locs.reshape(-1).astype(jnp.uint32))
+    word_idx = (flat >> jnp.uint32(5)).astype(jnp.int32)
+    word_idx = _mask_duplicates((flat,), word_idx, words.shape[0])
+    bit = jnp.uint32(1) << (flat & jnp.uint32(31))
+    delta = jnp.zeros_like(words).at[word_idx].add(bit, mode="drop")
+    return words | delta
+
+
+def scatter_or_bitsliced(
+    matrix: jax.Array, rows: jax.Array, file_ids: jax.Array
+) -> jax.Array:
+    """Set file bits at (row, file) pairs in a bit-sliced (m, F/32) matrix."""
+    rows = rows.reshape(-1).astype(jnp.int32)
+    fids = file_ids.reshape(-1).astype(jnp.int32)
+    order = jnp.lexsort((fids, rows))
+    r, f = rows[order], fids[order]
+    r = _mask_duplicates((r, f), r, matrix.shape[0])
+    bit = jnp.uint32(1) << (f & 31).astype(jnp.uint32)
+    delta = jnp.zeros_like(matrix).at[r, f >> 5].add(bit, mode="drop")
+    return matrix | delta
+
+
+def scatter_or_rows(
+    filters: jax.Array, filter_rows: jax.Array, locs: jax.Array
+) -> jax.Array:
+    """Set bit ``locs[i]`` of packed filter row ``filter_rows[i]`` (RAMBO)."""
+    frows = filter_rows.reshape(-1).astype(jnp.int32)
+    flat = locs.reshape(-1).astype(jnp.uint32)
+    order = jnp.lexsort((flat, frows))
+    fr, lc = frows[order], flat[order]
+    fr = _mask_duplicates((fr, lc), fr, filters.shape[0])
+    word_idx = (lc >> jnp.uint32(5)).astype(jnp.int32)
+    bit = jnp.uint32(1) << (lc & jnp.uint32(31))
+    delta = jnp.zeros_like(filters).at[fr, word_idx].add(bit, mode="drop")
+    return filters | delta
+
+
+# ---------------------------------------------------------------------------
+# Jitted batched entry points (donated destination, static cfg + scheme).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme"))
+def insert_batch_words(
+    words: jax.Array, reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str
+) -> jax.Array:
+    """Insert a (B, read_len) batch into a flat packed BF — one jit call."""
+    return scatter_or(words, batch_locations(cfg, reads, scheme))
+
+
+@functools.partial(
+    jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme", "lane32")
+)
+def insert_batch_bitsliced(
+    matrix: jax.Array,
+    reads: jax.Array,
+    cols: jax.Array,
+    *,
+    cfg: idl_mod.IDLConfig,
+    scheme: str,
+    lane32: bool = False,
+) -> jax.Array:
+    """Insert a batch of reads into columns ``cols`` of a bit-sliced matrix."""
+    locs = batch_locations(cfg, reads, scheme, lane32=lane32)
+    b = reads.shape[0]
+    rows = locs.reshape(b, -1)
+    fids = jnp.broadcast_to(cols.reshape(b, 1), rows.shape)
+    return scatter_or_bitsliced(matrix, rows, fids)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme"))
+def insert_batch_rows(
+    filters: jax.Array,
+    reads: jax.Array,
+    filter_rows: jax.Array,
+    *,
+    cfg: idl_mod.IDLConfig,
+    scheme: str,
+) -> jax.Array:
+    """Insert each read into ``R`` packed filter rows (RAMBO buckets).
+
+    ``filter_rows``: (B, R) int32 — the stacked-filter rows read b lands in.
+    """
+    locs = batch_locations(cfg, reads, scheme)          # (B, η, n_k)
+    b, r = filter_rows.shape
+    per_read = locs.reshape(b, 1, -1)                   # (B, 1, η·n_k)
+    lf = jnp.broadcast_to(per_read, (b, r, per_read.shape[-1]))
+    ff = jnp.broadcast_to(filter_rows.reshape(b, r, 1), lf.shape)
+    return scatter_or_rows(filters, ff, lf)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scheme"))
+def query_batch_words(
+    words: jax.Array, reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str
+) -> jax.Array:
+    """(B, n_kmers) bool membership against a flat packed BF."""
+    locs = batch_locations(cfg, reads, scheme)
+    return jax.vmap(lambda l: bloom_mod.query_packed(words, l))(locs)
+
+
+# ---------------------------------------------------------------------------
+# Layout conversions (row-major stacks of packed filters).
+# ---------------------------------------------------------------------------
+
+def pack_rows(bits_u8: jax.Array) -> jax.Array:
+    """(..., m) uint8 {0,1} -> (..., m/32) uint32 (rowwise pack_bits)."""
+    m = bits_u8.shape[-1]
+    if m % 32:
+        raise ValueError(f"row length m={m} must be a multiple of 32")
+    flat = bloom_mod.pack_bits(bits_u8.reshape(-1))
+    return flat.reshape(bits_u8.shape[:-1] + (m // 32,))
+
+
+def unpack_rows(words: jax.Array, m: int) -> jax.Array:
+    """(..., m/32) uint32 -> (..., m) uint8 (rowwise unpack_bits)."""
+    flat = bloom_mod.unpack_bits(words.reshape(-1))
+    return flat.reshape(words.shape[:-1] + (m,))
+
+
+def unpack_file_bits(masks: jax.Array, n_files: int) -> jax.Array:
+    """(..., F/32) uint32 file masks -> (..., n_files) bool."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (masks[..., None] >> shifts) & jnp.uint32(1)
+    return (bits.reshape(masks.shape[:-1] + (-1,))[..., :n_files]) == 1
+
+
+def coverage_need(theta: float, n_kmers: int) -> int:
+    """Integer hit threshold for kmer-coverage >= theta.
+
+    Exact at theta=1.0 (a float mean of n ones != 1.0 in f32 for many n,
+    which would silently break Definition 2).
+    """
+    return int(np.ceil(theta * n_kmers - 1e-9))

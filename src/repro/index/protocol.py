@@ -1,0 +1,48 @@
+"""The ``GeneIndex`` protocol — one index API for every engine.
+
+Every gene-sequence index in this repo (partitioned Bloom filter, COBS,
+RAMBO, the bit-sliced serving index) speaks the same four-method protocol:
+
+* ``build(cfg, ...)``                  — classmethod constructor;
+* ``insert_batch(reads, file_ids)``    — index a ``(B, read_len)`` batch of
+  base-code reads (one jit-compiled, donated scatter — no per-read Python
+  loop). ``file_ids`` is ignored by single-set engines;
+* ``query_batch(reads, backend=...)``  — per-kmer membership for a batch.
+  ``backend="jnp"`` is the pure-XLA path; ``backend="kernel"`` opts into the
+  Pallas ``idl_probe`` planner/kernel path where the engine supports it;
+* ``msmt(reads, theta)``               — Multiple-Set Membership Testing
+  (paper Definition 3): per-file kmer-coverage >= theta. ``theta=1.0``
+  reproduces exact Membership Testing (Definition 2).
+
+Engines are immutable: ``insert_batch`` returns a new index value whose
+storage buffer was donated from the old one (linear-use style — keep only
+the returned index). Hash families are resolved by name through
+:mod:`repro.index.registry`; an engine never hard-codes a scheme.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+
+
+@runtime_checkable
+class GeneIndex(Protocol):
+    """Structural protocol shared by all index engines."""
+
+    scheme: str
+
+    def insert_batch(
+        self, reads: jax.Array, file_ids: Optional[jax.Array] = None
+    ) -> "GeneIndex":
+        """Index a batch of reads; returns the updated index."""
+        ...
+
+    def query_batch(self, reads: jax.Array, *, backend: str = "jnp") -> jax.Array:
+        """Per-kmer membership for a batch of reads."""
+        ...
+
+    def msmt(self, reads: jax.Array, theta: float = 1.0) -> jax.Array:
+        """Per-file match verdicts at kmer-coverage threshold ``theta``."""
+        ...

@@ -1,0 +1,119 @@
+"""HashScheme registry — the single point of hash-family dispatch.
+
+Every index engine (partitioned BF, COBS, RAMBO, the bit-sliced serving
+index) used to carry its own ``if scheme == "idl": ...`` ladder. They now
+all resolve a named :class:`HashScheme` here and call its location
+functions. Adding a hash family is one :func:`register` call; every engine,
+example and benchmark picks it up for free.
+
+A scheme bundles up to three location paths:
+
+* ``rolling``     — (cfg, codes) -> (η, n_kmers) uint locations for all
+                    stride-1 kmers of a base-code sequence (the read path).
+* ``kmer_batch``  — (cfg, packed_kmers) -> (η, n) locations for an arbitrary
+                    batch of packed kmers (dedup pipelines). Optional.
+* ``rolling32``   — 32-bit-lane variant of ``rolling`` (TPU serving path,
+                    no int64). Optional.
+
+Built-in schemes: ``idl`` (the paper's hash), ``rh`` (random-hash baseline),
+``lsh`` (rehashed MinHash ablation, Table 4), ``idl-bbf`` (IDL × Blocked-BF
+composition, §3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import idl as idl_mod
+
+LocationFn = Callable[[idl_mod.IDLConfig, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class HashScheme:
+    """A named hash family with its location paths."""
+
+    name: str
+    rolling: LocationFn
+    kmer_batch: Optional[LocationFn] = None
+    rolling32: Optional[LocationFn] = None
+    doc: str = ""
+
+
+_REGISTRY: dict[str, HashScheme] = {}
+
+
+def register(scheme: HashScheme) -> HashScheme:
+    """Register (or replace) a scheme under ``scheme.name``."""
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def get(name: str) -> HashScheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown hash scheme {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def locations(cfg: idl_mod.IDLConfig, codes: jax.Array, scheme: str) -> jax.Array:
+    """Rolling locations of ``scheme`` for all stride-1 kmers of ``codes``."""
+    return get(scheme).rolling(cfg, codes)
+
+
+def locations32(cfg: idl_mod.IDLConfig, codes: jax.Array, scheme: str) -> jax.Array:
+    """32-bit-lane rolling locations (serving / TPU path)."""
+    s = get(scheme)
+    if s.rolling32 is None:
+        raise ValueError(f"scheme {s.name!r} has no 32-bit lane path")
+    return s.rolling32(cfg, codes)
+
+
+def kmer_locations(cfg: idl_mod.IDLConfig, kmer_arr: jax.Array, scheme: str) -> jax.Array:
+    """Locations for an arbitrary batch of packed kmers."""
+    s = get(scheme)
+    if s.kmer_batch is None:
+        raise ValueError(f"kmer-batch API not defined for scheme {s.name!r}")
+    return s.kmer_batch(cfg, kmer_arr)
+
+
+# ---------------------------------------------------------------------------
+# Built-in schemes.
+# ---------------------------------------------------------------------------
+
+register(HashScheme(
+    name="idl",
+    rolling=idl_mod.idl_locations_rolling,
+    kmer_batch=idl_mod.idl_locations_kmer_batch,
+    rolling32=idl_mod.idl_locations_rolling32,
+    doc="IDentity with Locality: ψ(x) = ρ₁(MinHash(x)) + ρ₂(x) (Theorem 1).",
+))
+
+register(HashScheme(
+    name="rh",
+    rolling=idl_mod.rh_locations_rolling,
+    kmer_batch=idl_mod.rh_locations,
+    rolling32=idl_mod.rh_locations_rolling32,
+    doc="Random-hash baseline (MurmurHash-style partitioned BF).",
+))
+
+register(HashScheme(
+    name="lsh",
+    rolling=idl_mod.lsh_locations_rolling,
+    doc="Rehashed MinHash only (Table 4 ablation: locality, identity loss).",
+))
+
+register(HashScheme(
+    name="idl-bbf",
+    rolling=idl_mod.idl_bbf_locations_rolling,
+    doc="IDL × Blocked-Bloom composition (§3.3): window + one cache line.",
+))

@@ -29,25 +29,40 @@ from repro.models.layers import Params
 # EmbeddingBag with optional hashing-trick (RH or IDL row assignment)
 # --------------------------------------------------------------------------
 
+def _rows_none(ids: jax.Array, n_rows: int, L: int) -> jax.Array:
+    del L
+    return (ids % n_rows).astype(jnp.int32)
+
+
+def _rows_rh(ids: jax.Array, n_rows: int, L: int) -> jax.Array:
+    del L
+    return hashing.hash_to_range(ids.astype(jnp.uint64), 0x5EED, n_rows).astype(jnp.int32)
+
+
+def _rows_idl(ids: jax.Array, n_rows: int, L: int) -> jax.Array:
+    # ids are grouped L/16 per window of L rows (load factor 1/16) —
+    # identity preservation needs the window sparse, exactly like the
+    # paper's L >> expected probes-per-window
+    group = max(1, L // 16)
+    bucket = (ids // group).astype(jnp.uint64)  # locality proxy: id blocks
+    anchor = hashing.hash_to_range(bucket, 0xA17C, max(n_rows // L, 1))
+    local = hashing.hash_to_range(ids.astype(jnp.uint64), 0x10CA, L)
+    return (anchor.astype(jnp.int32) * np.int32(L) + local.astype(jnp.int32)) % n_rows
+
+
+_ROW_SCHEMES = {"none": _rows_none, "rh": _rows_rh, "idl": _rows_idl}
+
+
 def hash_rows(ids: jax.Array, n_rows: int, scheme: str = "none",
               L: int = 4096) -> jax.Array:
     """Map raw ids -> table rows. "none": modulo; "rh": murmur-style;
     "idl": anchor from id-bucket (locality) + local hash — session-adjacent
     ids land in the same L-row window without colliding."""
-    if scheme == "none":
-        return (ids % n_rows).astype(jnp.int32)
-    if scheme == "rh":
-        return hashing.hash_to_range(ids.astype(jnp.uint64), 0x5EED, n_rows).astype(jnp.int32)
-    if scheme == "idl":
-        # ids are grouped L/16 per window of L rows (load factor 1/16) —
-        # identity preservation needs the window sparse, exactly like the
-        # paper's L >> expected probes-per-window
-        group = max(1, L // 16)
-        bucket = (ids // group).astype(jnp.uint64)  # locality proxy: id blocks
-        anchor = hashing.hash_to_range(bucket, 0xA17C, max(n_rows // L, 1))
-        local = hashing.hash_to_range(ids.astype(jnp.uint64), 0x10CA, L)
-        return (anchor.astype(jnp.int32) * np.int32(L) + local.astype(jnp.int32)) % n_rows
-    raise ValueError(scheme)
+    try:
+        row_fn = _ROW_SCHEMES[scheme]
+    except KeyError:
+        raise ValueError(scheme) from None
+    return row_fn(ids, n_rows, L)
 
 
 def embedding_bag(

@@ -8,14 +8,16 @@ slice), so the only collective is the output concatenation — the layout the
 roofline analysis shows is optimal for MSMT.
 
 ``serve_step`` is the TPU-lowerable batched MSMT: queries arrive as raw
-base-code arrays; kmerization, rolling MinHash and IDL locations all run
-on-device on the 32-bit lane path (core.idl.idl_locations_rolling32).
+base-code arrays; kmerization, rolling MinHash and scheme locations all run
+on-device on the registry's 32-bit lane path. Indexing goes through
+``insert_read_batch`` — one jit-compiled, donated, dedup'd scatter per
+batch of reads (``repro.index.packed``); ``repro.index.BitSlicedIndex`` is
+the protocol-level engine over the same storage.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +25,7 @@ import numpy as np
 
 from repro.core import idl as idl_mod
 from repro.distributed.sharding import shard
+from repro.index import packed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,22 +60,34 @@ def empty_index(cfg: GeneSearchConfig) -> jax.Array:
     return jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
 
 
+def insert_read_batch(
+    index: jax.Array, cfg: GeneSearchConfig, reads: jax.Array,
+    file_ids: jax.Array,
+) -> jax.Array:
+    """Index a (B, read_len) batch of reads into their files — ONE jit call.
+
+    Locations for the whole batch are vmapped in-graph, duplicate (row, file)
+    targets are dedup'd with a sort, and the index buffer is donated: no
+    per-read Python loop and no full-matrix copy per read.
+    """
+    return packed.insert_batch_bitsliced(
+        index, reads, jnp.asarray(file_ids),
+        cfg=cfg.idl_config(), scheme=cfg.scheme, lane32=True,
+    )
+
+
 def insert_read(
     index: jax.Array, cfg: GeneSearchConfig, file_id: int, codes: jax.Array
 ) -> jax.Array:
-    """Index one read into file ``file_id`` (same 32-bit path as queries)."""
-    locs = _query_locations(cfg, codes).reshape(-1)
-    word = file_id // 32
-    bit = jnp.uint32(1) << jnp.uint32(file_id % 32)
-    col = index[:, word].at[locs].set(index[locs, word] | bit)
-    return index.at[:, word].set(col)
+    """Index one read into file ``file_id`` (B=1 case of the batched path)."""
+    return insert_read_batch(
+        index, cfg, codes[None, :], jnp.asarray([file_id], dtype=jnp.int32))
 
 
 def _query_locations(cfg: GeneSearchConfig, codes: jax.Array) -> jax.Array:
-    icfg = cfg.idl_config()
-    if cfg.scheme == "idl":
-        return idl_mod.idl_locations_rolling32(icfg, codes)
-    return idl_mod.rh_locations_rolling32(icfg, codes)
+    from repro.index import registry
+
+    return registry.locations32(cfg.idl_config(), codes, cfg.scheme)
 
 
 def serve_step(
@@ -96,10 +111,13 @@ def serve_step(
             per_kmer, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, dimensions=(1,)
         )                                       # AND over kmers -> (B, F/32)
         return shard(out, ("batch", "files"))
-    # fractional coverage: popcount per file via bit unpack
+    # fractional coverage: popcount per file via bit unpack, compared with
+    # the exact integer threshold every engine uses (a float mean of n ones
+    # != 1.0 in f32 for many n, which would flip boundary thetas)
     bits = (per_kmer[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
-    frac = bits.astype(jnp.float32).mean(axis=1)          # (B, F/32, 32)
-    match = (frac >= cfg.theta).astype(jnp.uint32)
+    hits = jnp.sum(bits.astype(jnp.int32), axis=1)        # (B, F/32, 32)
+    need = packed.coverage_need(cfg.theta, per_kmer.shape[1])
+    match = (hits >= need).astype(jnp.uint32)
     out = jnp.sum(match << jnp.arange(32, dtype=jnp.uint32), axis=-1, dtype=jnp.uint32)
     return shard(out, ("batch", "files"))
 

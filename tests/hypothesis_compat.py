@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a test-only extra (see pyproject.toml). When it is not
+installed, importing this module instead of ``hypothesis`` keeps collection
+alive: ``@given(...)`` turns into a skip marker for just the property tests,
+while every plain test in the same module still runs. Modules that are
+property-tests-only should call ``pytest.importorskip("hypothesis")``
+directly instead.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any call returns None."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,0 +1,259 @@
+"""Golden parity: the new ``repro.index`` engines must be bit-identical to
+the seed semantics (uint8 scatter/gather primitives + per-read loops), for
+all registered schemes × ``align`` × theta; plus kernel-backend equivalence
+and the one-jit-call batched-insert guarantee."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bloom, idl
+from repro.data import genome
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    GeneIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    packed,
+    registry,
+)
+from repro.serving import genesearch as gs
+
+
+def _cfg(align: bool) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=3, m=1 << 20, align=align)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    g = genome.synthesize_genome(4000, seed=100, repeat_fraction=0.0)
+    return jnp.asarray(np.stack(genome.extract_reads(g, 230, 6, seed=101)))
+
+
+class TestBloomEngineParity:
+    @pytest.mark.parametrize("scheme", ["idl", "rh", "lsh", "idl-bbf"])
+    @pytest.mark.parametrize("align", [True, False])
+    def test_bit_identical_to_seed_primitives(self, reads, scheme, align):
+        cfg = _cfg(align)
+        eng = PackedBloomIndex.build(cfg, scheme).insert_batch(reads)
+        # seed semantics: per-read uint8 scatter-set, uint8 gather + AND
+        bits = bloom.empty_filter(cfg.m)
+        for r in reads:
+            bits = bloom.insert_locations(bits, registry.locations(cfg, r, scheme))
+        np.testing.assert_array_equal(np.asarray(eng.bits), np.asarray(bits))
+        want = np.stack([
+            np.asarray(bloom.query_locations(bits, registry.locations(cfg, r, scheme)))
+            for r in reads
+        ])
+        np.testing.assert_array_equal(np.asarray(eng.query_batch(reads)), want)
+        assert want.all()  # inserted reads are members
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    def test_msmt_threshold_matches_seed_rule(self, reads, theta):
+        cfg = _cfg(True)
+        eng = PackedBloomIndex.build(cfg, "idl").insert_batch(reads[:3])
+        member = np.asarray(eng.query_batch(reads))
+        need = int(np.ceil(theta * member.shape[1] - 1e-9))  # seed integer rule
+        np.testing.assert_array_equal(
+            np.asarray(eng.msmt(reads, theta=theta)), member.sum(axis=1) >= need
+        )
+
+
+class TestKernelBackend:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("align", [True, False])
+    def test_kernel_equals_jnp_backend(self, reads, scheme, align):
+        cfg = _cfg(align)
+        eng = PackedBloomIndex.build(cfg, scheme).insert_batch(reads[:4])
+        got_jnp = np.asarray(eng.query_batch(reads, backend="jnp"))
+        got_kernel = np.asarray(eng.query_batch(reads, backend="kernel"))
+        np.testing.assert_array_equal(got_kernel, got_jnp)
+        # and both equal the packed-word oracle
+        for i, r in enumerate(reads):
+            locs = registry.locations(cfg, r, scheme)
+            oracle = bloom.query_packed(eng.words, locs.astype(jnp.uint32))
+            np.testing.assert_array_equal(got_jnp[i], np.asarray(oracle))
+
+
+def _seed_cobs_reference(file_sizes, base_cfg, scheme, genomes, theta):
+    """The seed Cobs algorithm, verbatim: uint8 group matrices, python loops."""
+    order = np.argsort(file_sizes)
+    chunks = np.array_split(order, 3)
+    groups = []  # (cfg, file_ids, matrix)
+    for chunk in chunks:
+        if len(chunk) == 0:
+            continue
+        biggest = max(int(file_sizes[i]) for i in chunk)
+        m_g = -(-int(10.0 * biggest) // (1 << 12)) * (1 << 12)
+        m_g = max(m_g, base_cfg.eta * (base_cfg.L * 2))
+        cfg = dataclasses.replace(base_cfg, m=m_g)
+        fids = [int(i) for i in chunk]
+        groups.append([cfg, fids, jnp.zeros((m_g, len(fids)), dtype=jnp.uint8)])
+    for fid, codes in enumerate(genomes):
+        for grp in groups:
+            if fid in grp[1]:
+                locs = registry.locations(grp[0], codes, scheme)
+                grp[2] = grp[2].at[locs.reshape(-1), grp[1].index(fid)].set(
+                    np.uint8(1))
+    n_kmers = genomes.shape[1] - base_cfg.k + 1
+    out = np.zeros((len(genomes), n_kmers, len(file_sizes)), dtype=bool)
+    for q, codes in enumerate(genomes):
+        for cfg, fids, mat in groups:
+            locs = registry.locations(cfg, codes, scheme)
+            rows = mat[locs]
+            out[q][:, np.asarray(fids)] = np.asarray(
+                jnp.all(rows == np.uint8(1), axis=0))
+    hits = out.sum(axis=1)
+    need = int(np.ceil(theta * n_kmers - 1e-9))
+    return out, hits >= need
+
+
+class TestCobsEngineParity:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    def test_bit_identical_to_seed_algorithm(self, rng, scheme, theta):
+        base_cfg = _cfg(True)
+        genomes = jnp.asarray(rng.integers(0, 4, size=(6, 400), dtype=np.uint8))
+        sizes = [370, 120, 800, 240, 500, 310]
+        want_slices, want_msmt = _seed_cobs_reference(
+            sizes, base_cfg, scheme, genomes, theta)
+        eng = CobsIndex.build(sizes, base_cfg, scheme=scheme, n_groups=3)
+        eng = eng.insert_batch(genomes, np.arange(6))
+        np.testing.assert_array_equal(
+            np.asarray(eng.query_batch(genomes)), want_slices)
+        np.testing.assert_array_equal(
+            np.asarray(eng.msmt(genomes, theta=theta)), want_msmt)
+
+    def test_build_validates_inputs(self):
+        with pytest.raises(ValueError):
+            CobsIndex.build([], _cfg(True))
+        mixed = dataclasses.replace(_cfg(True), k=25)
+        good = CobsIndex.build([100, 200], _cfg(True))
+        with pytest.raises(ValueError):
+            dataclasses.replace(good, k=mixed.k)  # top-level k must match groups
+
+
+def _seed_rambo_reference(n_files, cfg, scheme, genomes, B, R, theta):
+    """The seed Rambo algorithm: uint8 stacked filters, per-rep python loop."""
+    from repro.index.engines import rambo_assignment
+
+    assignment = rambo_assignment(n_files, B, R)
+    filt = jnp.zeros((R * B, cfg.m), dtype=jnp.uint8)
+    for fid, codes in enumerate(genomes):
+        locs = registry.locations(cfg, codes, scheme).reshape(-1)
+        for r in range(R):
+            row = r * B + int(assignment[r, fid])
+            filt = filt.at[row, locs].set(np.uint8(1))
+    outs = []
+    for codes in genomes:
+        locs = registry.locations(cfg, codes, scheme)
+        bits = filt[:, locs]
+        hit = jnp.all(bits == np.uint8(1), axis=1)
+        grid = hit.T.reshape(-1, R, B)
+        assign = jnp.asarray(assignment)
+        per_rep = jnp.take_along_axis(
+            grid, assign.T[None, :, :].transpose(0, 2, 1), axis=2)
+        present = jnp.all(per_rep, axis=1)
+        hits = jnp.sum(present.astype(jnp.int32), axis=0)
+        need = int(np.ceil(theta * present.shape[0] - 1e-9))
+        outs.append(np.asarray(hits >= need))
+    return np.stack(outs)
+
+
+class TestRamboEngineParity:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    def test_bit_identical_to_seed_algorithm(self, rng, scheme, theta):
+        cfg = _cfg(True)
+        genomes = jnp.asarray(rng.integers(0, 4, size=(7, 400), dtype=np.uint8))
+        want = _seed_rambo_reference(7, cfg, scheme, genomes, B=3, R=2,
+                                     theta=theta)
+        eng = RamboIndex.build(7, cfg, scheme=scheme, B=3, R=2)
+        eng = eng.insert_batch(genomes, np.arange(7))
+        np.testing.assert_array_equal(
+            np.asarray(eng.msmt(genomes, theta=theta)), want)
+
+
+def _seed_insert_read(index, cfg, file_id, codes):
+    """The seed's insert_read, verbatim: per-file column read-modify-write."""
+    locs = registry.locations32(cfg.idl_config(), codes, cfg.scheme).reshape(-1)
+    word = file_id // 32
+    bit = jnp.uint32(1) << jnp.uint32(file_id % 32)
+    col = index[:, word].at[locs].set(index[locs, word] | bit)
+    return index.at[:, word].set(col)
+
+
+class TestBitSlicedEngineParity:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    def test_matches_serve_step(self, rng, scheme, theta):
+        cfg = gs.GeneSearchConfig(n_files=64, m=1 << 18, L=1 << 10,
+                                  read_len=120, eta=2, scheme=scheme,
+                                  theta=theta)
+        reads = jnp.asarray(rng.integers(0, 4, size=(5, 120), dtype=np.uint8))
+        fids = np.asarray([0, 9, 31, 32, 63])
+        eng = BitSlicedIndex.build(cfg.idl_config(), scheme, cfg.n_files)
+        eng = eng.insert_batch(reads, fids)
+        # independent seed oracle: per-read column scatter into the raw matrix
+        index = gs.empty_index(cfg)
+        for f, r in zip(fids, reads):
+            index = _seed_insert_read(index, cfg, int(f), r)
+        np.testing.assert_array_equal(np.asarray(eng.words), np.asarray(index))
+        # and the current public insert_read agrees with its B=1 batch self
+        index2 = gs.empty_index(cfg)
+        for f, r in zip(fids, reads):
+            index2 = gs.insert_read(index2, cfg, int(f), r)
+        np.testing.assert_array_equal(np.asarray(index2), np.asarray(index))
+        served = gs.serve_step(index, reads, cfg)
+        want = np.asarray(packed.unpack_file_bits(served, cfg.n_files))
+        np.testing.assert_array_equal(
+            np.asarray(eng.msmt(reads, theta=theta)), want)
+
+
+class TestBatchedInsert:
+    def test_64_reads_one_jit_call_and_sequential_parity(self, rng):
+        cfg = _cfg(True)
+        reads = jnp.asarray(rng.integers(0, 4, size=(64, 230), dtype=np.uint8))
+        packed.insert_batch_words.clear_cache()
+        eng = PackedBloomIndex.build(cfg, "idl").insert_batch(reads)
+        assert packed.insert_batch_words._cache_size() == 1  # one compilation
+        eng2 = PackedBloomIndex.build(cfg, "idl").insert_batch(reads[:32])
+        eng2 = eng2.insert_batch(reads[32:])
+        assert packed.insert_batch_words._cache_size() == 2  # new shape only
+        np.testing.assert_array_equal(np.asarray(eng.words),
+                                      np.asarray(eng2.words))
+        # and equals one-read-at-a-time insertion
+        seq = PackedBloomIndex.build(cfg, "idl")
+        for r in reads:
+            seq = seq.insert_batch(r)
+        np.testing.assert_array_equal(np.asarray(eng.words),
+                                      np.asarray(seq.words))
+
+    def test_dedup_drops_duplicate_locations(self):
+        words = jnp.zeros((4,), dtype=jnp.uint32)
+        locs = jnp.asarray([0, 0, 1, 33, 33, 127], dtype=jnp.uint32)
+        got = packed.scatter_or(words, locs)
+        np.testing.assert_array_equal(
+            np.asarray(got), [0b11, 1 << 1, 0, 1 << 31])
+
+
+class TestProtocol:
+    def test_all_engines_satisfy_gene_index(self, rng):
+        cfg = _cfg(True)
+        engines_list = [
+            PackedBloomIndex.build(cfg, "idl"),
+            CobsIndex.build([100, 200], cfg),
+            RamboIndex.build(4, cfg, B=2, R=2),
+            BitSlicedIndex.build(cfg, "idl", n_files=32),
+        ]
+        for e in engines_list:
+            assert isinstance(e, GeneIndex)
+
+    def test_registry_rejects_unknown_scheme(self):
+        with pytest.raises(ValueError, match="unknown hash scheme"):
+            registry.get("murmur")
+        assert set(registry.names()) >= {"idl", "rh", "lsh", "idl-bbf"}

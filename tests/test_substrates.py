@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data import genome, graph_pipeline, lm_pipeline, recsys_pipeline
 from repro.distributed import collectives, fault_tolerance as ft

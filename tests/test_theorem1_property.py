@@ -3,6 +3,9 @@ configurations (hypothesis-driven)."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-test-only module")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import idl, kmers, minhash
