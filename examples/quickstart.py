@@ -36,11 +36,16 @@ def main() -> None:
         print(f"{name.upper()}: {d['switches']} block DMAs for {d['accesses']} "
               f"probes ({d['switches'] / d['accesses']:.2%} per probe)")
 
-    # 4. the same membership through the Pallas probe-kernel backend
-    member_kernel = bf.query_batch(jnp.asarray(np.stack(reads)),
-                                   backend="kernel")
-    print(f"kernel backend agrees: "
-          f"{bool(jnp.all(member_kernel == bf.query_batch(jnp.asarray(np.stack(reads)))))}")
+    # 4. the same membership through the planned Pallas probe backend and
+    #    the sharded (shard_map) backend — one shared query layer
+    batch = jnp.asarray(np.stack(reads))
+    member = bf.query_batch(batch)
+    member_kernel = bf.query_batch(batch, backend="idl_probe")
+    member_sharded = bf.query_batch(batch, backend="sharded")
+    print(f"idl_probe backend agrees: "
+          f"{bool(jnp.all(member_kernel == member))}")
+    print(f"sharded backend agrees:   "
+          f"{bool(jnp.all(member_sharded == member))}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +59,15 @@ class BloomFilter:
 
     def __post_init__(self):
         if self.bits is None:
+            # fresh user construction (internal dataclasses.replace calls
+            # always pass bits — don't re-warn per method call); stacklevel
+            # skips the generated __init__ to point at the caller
+            warnings.warn(
+                "core.bloom.BloomFilter is a deprecated adapter; build a "
+                "repro.index.PackedBloomIndex instead (batched donated "
+                "inserts, planned/sharded query backends).",
+                DeprecationWarning, stacklevel=3,
+            )
             self.bits = empty_filter(self.cfg.m)
 
     def _query_index(self):

@@ -19,6 +19,7 @@ directly; this class keeps the seed's single-sequence call signatures.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
@@ -49,6 +50,12 @@ class Cobs:
         shares one kmer size ``k`` (stored top-level on the engine — query
         paths never reach into ``groups[0]``).
         """
+        warnings.warn(
+            "core.cobs.Cobs is a deprecated adapter; build a "
+            "repro.index.CobsIndex instead (packed storage, batched donated "
+            "inserts, planned/sharded query backends).",
+            DeprecationWarning, stacklevel=2,
+        )
         return cls(index=engines.CobsIndex.build(
             file_sizes, base_cfg, scheme=scheme,
             bits_per_kmer=bits_per_kmer, n_groups=n_groups,

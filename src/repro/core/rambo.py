@@ -19,6 +19,7 @@ single-sequence call signatures.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +54,12 @@ class Rambo:
         cls, n_files: int, cfg: idl_mod.IDLConfig, scheme: str = "idl",
         B: int | None = None, R: int | None = None,
     ) -> "Rambo":
+        warnings.warn(
+            "core.rambo.Rambo is a deprecated adapter; build a "
+            "repro.index.RamboIndex instead (packed storage, batched "
+            "donated inserts, planned/sharded query backends).",
+            DeprecationWarning, stacklevel=2,
+        )
         B, R = engines.rambo_dimensions(n_files, B, R)
         return cls(cfg=cfg, scheme=scheme, n_files=n_files, B=B, R=R)
 

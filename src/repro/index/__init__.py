@@ -2,13 +2,14 @@
 
 One protocol (:class:`GeneIndex`), one hash-family registry
 (:mod:`repro.index.registry`), one packed-word storage layer
-(:mod:`repro.index.packed`), four engines (:mod:`repro.index.engines`).
-See docs/API.md for the full API and migration notes from the deprecated
-``core.bloom.BloomFilter`` / ``core.cobs.Cobs`` / ``core.rambo.Rambo``
-classes.
+(:mod:`repro.index.packed`), one shared query planner/executor
+(:mod:`repro.index.query` — jnp / Pallas / sharded backends), four engines
+(:mod:`repro.index.engines`). See docs/API.md for the full API and
+migration notes from the deprecated ``core.bloom.BloomFilter`` /
+``core.cobs.Cobs`` / ``core.rambo.Rambo`` classes.
 """
 
-from repro.index import packed, registry
+from repro.index import packed, query, registry
 from repro.index.engines import (
     BitSlicedIndex,
     CobsIndex,
@@ -16,6 +17,7 @@ from repro.index.engines import (
     RamboIndex,
 )
 from repro.index.protocol import GeneIndex
+from repro.index.query import QueryPlan, plan_query
 from repro.index.registry import HashScheme
 
 __all__ = [
@@ -24,7 +26,10 @@ __all__ = [
     "GeneIndex",
     "HashScheme",
     "PackedBloomIndex",
+    "QueryPlan",
     "RamboIndex",
     "packed",
+    "plan_query",
+    "query",
     "registry",
 ]

@@ -15,15 +15,17 @@ donated, dedup'd scatters in :mod:`repro.index.packed`. Engines are
 immutable dataclasses; ``insert_batch`` returns a new value and donates the
 old buffer (linear use — keep only the returned index).
 
-``PackedBloomIndex.query_batch(..., backend="kernel")`` routes probes
-through the host-side run-length planner + Pallas kernel of
-:mod:`repro.kernels.idl_probe` instead of the pure-jnp gather.
+Every query routes through the shared planner/executor layer of
+:mod:`repro.index.query`: each engine describes its storage as a packed
+``(n_rows, W)`` bit-matrix and picks a backend — ``"jnp"`` (pure-XLA
+gather), ``"idl_probe"`` (host run-length planner + the generalized Pallas
+``probe_rows`` kernel) or ``"sharded"`` (``shard_map`` over a 1-D device
+mesh). All backends are bit-identical (``tests/test_index_parity.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -31,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, idl as idl_mod
-from repro.index import packed, registry
+from repro.index import packed, query
 
 
 def _as_batch(reads: jax.Array) -> jax.Array:
@@ -80,50 +82,32 @@ class PackedBloomIndex:
         )
         return dataclasses.replace(self, words=words)
 
-    def query_batch(
-        self, reads, *, backend: str = "jnp",
-        interpret: Optional[bool] = None,
-    ) -> jax.Array:
+    def _plan(self, reads: jax.Array) -> query.QueryPlan:
+        return query.plan_query(
+            self.cfg, self.scheme, reads.shape,
+            (self.cfg.m // 32, 1), bit_probe=True,
+        )
+
+    def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers) bool per-kmer membership.
 
-        ``backend="kernel"`` plans block-resident probe runs on the host and
-        executes them with the Pallas ``idl_probe`` kernel. ``interpret``
-        forces/disables Pallas interpreter mode; the default interprets only
-        on CPU (no Mosaic), and compiles on TPU/GPU.
+        ``backend`` picks the shared query executor (see
+        :mod:`repro.index.query`): ``"jnp"``, ``"idl_probe"`` (host
+        run-length planner + Pallas kernel; kw ``interpret`` forces or
+        disables Pallas interpreter mode, defaulting to interpret on CPU;
+        kw ``use_ref`` swaps in the kernel's fused jnp oracle) or
+        ``"sharded"`` (``shard_map`` over kw ``mesh``, default the full
+        1-D device mesh).
         """
         reads = _as_batch(reads)
-        if backend == "jnp":
-            return packed.query_batch_words(
-                self.words, reads, cfg=self.cfg, scheme=self.scheme
-            )
-        if backend == "kernel":
-            return self._query_kernel(reads, interpret=interpret)
-        raise ValueError(f"unknown backend {backend!r} (want 'jnp' or 'kernel')")
+        vals = self._plan(reads).execute(
+            self.words, reads, backend=backend, **kw
+        )
+        return vals[..., 0] == 1
 
-    def _query_kernel(
-        self, reads: jax.Array, interpret: Optional[bool] = None
-    ) -> jax.Array:
-        from repro.kernels.idl_probe import ops as probe_ops
-
-        if interpret is None:
-            interpret = jax.default_backend() == "cpu"
-        out = []
-        for row in np.asarray(reads):
-            locs = np.asarray(
-                registry.locations(self.cfg, jnp.asarray(row), self.scheme)
-            )
-            plan = probe_ops.plan_probe_runs(locs, block_bits=self.cfg.L)
-            out.append(
-                np.asarray(probe_ops.probe_membership(self.words, plan,
-                                                      interpret=interpret))
-            )
-        return jnp.asarray(np.stack(out, axis=0))
-
-    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+    def msmt(self, reads, theta: float = 1.0, **kw) -> jax.Array:
         """(B,) bool: kmer-coverage of the one indexed set >= theta."""
-        member = self.query_batch(reads)
-        need = packed.coverage_need(theta, member.shape[1])
-        return jnp.sum(member.astype(jnp.int32), axis=1) >= need
+        return query.member_coverage(self.query_batch(reads, **kw), theta)
 
     @property
     def bits(self) -> jax.Array:
@@ -225,25 +209,24 @@ class CobsIndex:
             groups[gi] = dataclasses.replace(g, words=words)
         return dataclasses.replace(self, groups=tuple(groups))
 
-    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+    def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers, n_files) bool MSMT kmer slices (Definition 3)."""
-        if backend != "jnp":
-            raise NotImplementedError("CobsIndex supports backend='jnp' only")
         reads = _as_batch(reads)
         n_k = reads.shape[1] - self.k + 1
         out = jnp.zeros((reads.shape[0], n_k, self.n_files), dtype=bool)
         for g in self.groups:
-            masks = _query_bitsliced(g.words, reads, cfg=g.cfg,
-                                     scheme=self.scheme, lane32=False)
+            plan = query.plan_query(
+                g.cfg, self.scheme, reads.shape, g.words.shape,
+                bit_probe=False,
+            )
+            masks = plan.execute(g.words, reads, backend=backend, **kw)
             sl = packed.unpack_file_bits(masks, len(g.file_ids))
             out = out.at[:, :, jnp.asarray(g.file_ids)].set(sl)
         return out
 
-    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+    def msmt(self, reads, theta: float = 1.0, **kw) -> jax.Array:
         """(B, n_files) bool: per-file kmer-coverage >= theta."""
-        slices = self.query_batch(reads)
-        need = packed.coverage_need(theta, slices.shape[1])
-        return jnp.sum(slices.astype(jnp.int32), axis=1) >= need
+        return query.member_coverage(self.query_batch(reads, **kw), theta)
 
     @property
     def total_bits(self) -> int:
@@ -317,6 +300,17 @@ class RamboIndex:
         offs = np.arange(self.n_rep, dtype=np.int32) * self.n_buckets
         return jnp.asarray(self.assignment[:, fids].T + offs[None, :])  # (B, R)
 
+    @property
+    def _words_t(self) -> jax.Array:
+        """(m/32, R·B) transposed view for the query layer, materialized
+        once per index value (insert_batch returns a fresh instance, so the
+        cache can never alias a donated buffer)."""
+        cached = getattr(self, "_words_t_cache", None)
+        if cached is None or cached[0] is not self.words:
+            cached = (self.words, jnp.asarray(self.words.T))
+            object.__setattr__(self, "_words_t_cache", cached)
+        return cached[1]
+
     def insert_batch(self, reads, file_ids=None) -> "RamboIndex":
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
@@ -326,26 +320,35 @@ class RamboIndex:
         )
         return dataclasses.replace(self, words=words)
 
-    def query_grid(self, reads) -> jax.Array:
-        """(B, n_kmers, R, buckets) bool: bucket hits per kmer."""
-        return _rambo_query_grid(
-            self.words, _as_batch(reads), cfg=self.cfg, scheme=self.scheme,
-            n_rep=self.n_rep, n_buckets=self.n_buckets,
+    def query_grid(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
+        """(B, n_kmers, R, buckets) bool: bucket hits per kmer.
+
+        The R·B stacked filters are probed as ONE transposed
+        ``(m/32, R·B)`` bit-matrix: every location resolves all buckets'
+        bits from a single gathered row of the shared query layer.
+        """
+        reads = _as_batch(reads)
+        rb = self.n_rep * self.n_buckets
+        plan = query.plan_query(
+            self.cfg, self.scheme, reads.shape,
+            (self.cfg.m // 32, rb), bit_probe=True,
+        )
+        vals = plan.execute(
+            self._words_t, reads, backend=backend, **kw
+        )                                                 # (B, n_k, RB) {0,1}
+        return (vals == 1).reshape(
+            vals.shape[0], vals.shape[1], self.n_rep, self.n_buckets
         )
 
-    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+    def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers, n_files) bool: file present in all R of its buckets."""
-        if backend != "jnp":
-            raise NotImplementedError("RamboIndex supports backend='jnp' only")
-        grid = self.query_grid(reads)                     # (B, n_k, R, Bkt)
+        grid = self.query_grid(reads, backend=backend, **kw)  # (B, n_k, R, Bkt)
         idx = jnp.asarray(self.assignment)[None, None]    # (1, 1, R, N)
         per_rep = jnp.take_along_axis(grid, idx, axis=3)  # (B, n_k, R, N)
         return jnp.all(per_rep, axis=2)
 
-    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
-        present = self.query_batch(reads)
-        need = packed.coverage_need(theta, present.shape[1])
-        return jnp.sum(present.astype(jnp.int32), axis=1) >= need
+    def msmt(self, reads, theta: float = 1.0, **kw) -> jax.Array:
+        return query.member_coverage(self.query_batch(reads, **kw), theta)
 
     @property
     def total_bits(self) -> int:
@@ -387,55 +390,20 @@ class BitSlicedIndex:
         )
         return dataclasses.replace(self, words=words)
 
-    def query_batch(self, reads, *, backend: str = "jnp") -> jax.Array:
+    def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers, F/32) uint32 per-kmer file masks (packed)."""
-        if backend != "jnp":
-            raise NotImplementedError("BitSlicedIndex supports backend='jnp' only")
-        return _query_bitsliced(self.words, _as_batch(reads), cfg=self.cfg,
-                                scheme=self.scheme, lane32=True)
+        reads = _as_batch(reads)
+        plan = query.plan_query(
+            self.cfg, self.scheme, reads.shape, self.words.shape,
+            bit_probe=False, lane32=True,
+        )
+        return plan.execute(self.words, reads, backend=backend, **kw)
 
-    def msmt(self, reads, theta: float = 1.0) -> jax.Array:
+    def msmt(self, reads, theta: float = 1.0, **kw) -> jax.Array:
         """(B, n_files) bool, same math as ``serving.genesearch.serve_step``."""
-        per_kmer = self.query_batch(reads)                # (B, n_k, W)
-        if theta >= 1.0:
-            mask = jax.lax.reduce(
-                per_kmer, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and,
-                dimensions=(1,),
-            )
-            return packed.unpack_file_bits(mask, self.n_files)
-        bits = (per_kmer[..., None] >> jnp.arange(32, dtype=jnp.uint32)) \
-            & jnp.uint32(1)
-        hits = jnp.sum(bits.astype(jnp.int32), axis=1)    # (B, W, 32)
-        match = hits >= packed.coverage_need(theta, per_kmer.shape[1])
-        return match.reshape(match.shape[0], -1)[:, : self.n_files]
-
-
-# ---------------------------------------------------------------------------
-# Shared jitted query bodies.
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("cfg", "scheme", "lane32"))
-def _query_bitsliced(words, reads, *, cfg, scheme, lane32):
-    """(B, n_kmers, W) uint32: per-kmer AND over η of gathered file masks."""
-    locs = packed.batch_locations(cfg, reads, scheme, lane32=lane32)
-    rows = words[locs.astype(jnp.int32)]                  # (B, η, n_k, W)
-    return jax.lax.reduce(
-        rows, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, dimensions=(1,)
-    )
-
-
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "scheme", "n_rep", "n_buckets")
-)
-def _rambo_query_grid(words, reads, *, cfg, scheme, n_rep, n_buckets):
-    locs = packed.batch_locations(cfg, reads, scheme)     # (B, η, n_k)
-    word_idx = (locs >> jnp.uint32(5)).astype(jnp.int32)
-    bit = locs & jnp.uint32(31)
-    got = (words[:, word_idx] >> bit) & jnp.uint32(1)     # (RB, B, η, n_k)
-    hit = jnp.all(got == jnp.uint32(1), axis=2)           # (RB, B, n_k)
-    return jnp.transpose(hit, (1, 2, 0)).reshape(
-        hit.shape[1], hit.shape[2], n_rep, n_buckets
-    )
+        per_kmer = self.query_batch(reads, **kw)          # (B, n_k, W)
+        mask = query.file_match_mask(per_kmer, theta)     # (B, W)
+        return packed.unpack_file_bits(mask, self.n_files)
 
 
 def _round_up(x: int, align: int) -> int:

@@ -156,15 +156,6 @@ def insert_batch_rows(
     return scatter_or_rows(filters, ff, lf)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "scheme"))
-def query_batch_words(
-    words: jax.Array, reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str
-) -> jax.Array:
-    """(B, n_kmers) bool membership against a flat packed BF."""
-    locs = batch_locations(cfg, reads, scheme)
-    return jax.vmap(lambda l: bloom_mod.query_packed(words, l))(locs)
-
-
 # ---------------------------------------------------------------------------
 # Layout conversions (row-major stacks of packed filters).
 # ---------------------------------------------------------------------------
@@ -194,7 +185,10 @@ def unpack_file_bits(masks: jax.Array, n_files: int) -> jax.Array:
 def coverage_need(theta: float, n_kmers: int) -> int:
     """Integer hit threshold for kmer-coverage >= theta.
 
-    Exact at theta=1.0 (a float mean of n ones != 1.0 in f32 for many n,
-    which would silently break Definition 2).
+    Canonical implementation lives with the rest of the query-side math in
+    :func:`repro.index.query.coverage_need`; re-exported here for storage
+    users.
     """
-    return int(np.ceil(theta * n_kmers - 1e-9))
+    from repro.index import query
+
+    return query.coverage_need(theta, n_kmers)

@@ -8,8 +8,11 @@ RAMBO, the bit-sliced serving index) speaks the same four-method protocol:
   base-code reads (one jit-compiled, donated scatter — no per-read Python
   loop). ``file_ids`` is ignored by single-set engines;
 * ``query_batch(reads, backend=...)``  — per-kmer membership for a batch.
-  ``backend="jnp"`` is the pure-XLA path; ``backend="kernel"`` opts into the
-  Pallas ``idl_probe`` planner/kernel path where the engine supports it;
+  Every engine routes through the shared planner/executor layer
+  (:mod:`repro.index.query`): ``backend="jnp"`` is the pure-XLA reference,
+  ``backend="idl_probe"`` the host run-length planner + generalized Pallas
+  ``probe_rows`` kernel, ``backend="sharded"`` a ``shard_map`` over a 1-D
+  device mesh splitting the words/files axis. All three are bit-identical;
 * ``msmt(reads, theta)``               — Multiple-Set Membership Testing
   (paper Definition 3): per-file kmer-coverage >= theta. ``theta=1.0``
   reproduces exact Membership Testing (Definition 2).

@@ -1,0 +1,388 @@
+"""The shared query-execution layer: one planned probe path for every engine.
+
+The paper's whole argument is about the *query* side: IDL co-locates the
+probes of successive kmers so membership tests hit one resident block
+instead of scattering across the filter. Before this layer each engine
+re-derived its own probe stream (``PackedBloomIndex`` reached the Pallas
+planner, COBS / RAMBO / the bit-sliced serving index each had private
+``jnp`` gather code). Now there is exactly one pipeline:
+
+    kmer extraction -> hash-scheme codes -> row probes -> backend executor
+
+unified by one observation: every engine's query is a **row gather over a
+packed ``(n_rows, W)`` uint32 bit-matrix** followed by an AND over the η
+hash repetitions —
+
+======================  ==========================  =====================
+Engine                  Probed matrix               Probe kind
+======================  ==========================  =====================
+``PackedBloomIndex``    ``(m/32, 1)`` word column   bit  (row = loc>>5)
+``RamboIndex``          ``(m/32, R·B)`` transpose   bit  (row = loc>>5)
+``CobsIndex`` group     ``(m_g, ⌈F_g/32⌉)``         row  (row = loc)
+``BitSlicedIndex``      ``(m, ⌈F/32⌉)``             row  (row = loc)
+======================  ==========================  =====================
+
+A :class:`QueryPlan` holds everything static — config, scheme, read shape,
+matrix geometry, the run-coalescing block height — and is built once per
+``(cfg, scheme, read_shape, matrix_shape)`` through an LRU cache
+(:func:`plan_query`). Executing a plan picks one of three backends:
+
+* ``"jnp"``       — pure-XLA reference gather (always available);
+* ``"idl_probe"`` — the host-side run-length planner + the generalized
+  Pallas ``probe_rows`` kernel: probes are run-length-encoded by matrix
+  row-block, each run DMAs ONE ``(rows_per_block, W)`` tile, and the whole
+  ``(B, η, n_kmers)`` batch executes as a single kernel launch;
+* ``"sharded"``   — ``shard_map`` over a 1-D device mesh. Bit probes split
+  the words axis (each shard resolves its local probes and misses combine
+  with a single ``lax.psum``); row probes split the file-words axis (the
+  serving layout — gathers are device-local, outputs concatenate).
+
+All backends are bit-identical; ``tests/test_index_parity.py`` holds the
+parity matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import idl as idl_mod
+from repro.index import packed
+
+BACKENDS = ("jnp", "idl_probe", "sharded")
+MESH_AXIS = "shards"
+
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# Location stream (shared by every backend).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scheme", "lane32"))
+def batch_locations(
+    reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str, lane32: bool
+) -> jax.Array:
+    """(B, η, n_kmers) uint32 locations — jitted view of the one rolling
+    location body the insert path (:mod:`repro.index.packed`) also uses."""
+    return packed.batch_locations(cfg, reads, scheme, lane32=lane32)
+
+
+# ---------------------------------------------------------------------------
+# The plan.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Static query recipe for one (cfg, scheme, read_shape, matrix) tuple.
+
+    ``bit_probe=True``: locations are flat bit offsets — the probed row is
+    ``loc >> 5`` and the answer is bit ``loc & 31`` of every word in that
+    row. ``bit_probe=False``: locations are row indices and the answer is
+    the whole W-word row (bit-sliced layouts).
+    """
+
+    cfg: idl_mod.IDLConfig
+    scheme: str
+    read_shape: tuple[int, int]       # (B, read_len)
+    matrix_shape: tuple[int, int]     # (n_rows, W)
+    bit_probe: bool
+    lane32: bool
+    rows_per_block: int               # run-coalescing DMA tile height
+    probes_per_run: int
+
+    @property
+    def batch(self) -> int:
+        return self.read_shape[0]
+
+    @property
+    def n_kmers(self) -> int:
+        return self.read_shape[1] - self.cfg.k + 1
+
+    @property
+    def n_rows(self) -> int:
+        return self.matrix_shape[0]
+
+    @property
+    def row_words(self) -> int:
+        return self.matrix_shape[1]
+
+    @property
+    def block_bytes(self) -> int:
+        """HBM bytes one run's DMA moves — the quantity IDL minimizes."""
+        return self.rows_per_block * self.row_words * 4
+
+    # -- probe streams ------------------------------------------------------
+    def locations(self, reads: jax.Array) -> jax.Array:
+        """(B, η, n_kmers) uint32 hash locations."""
+        return batch_locations(
+            reads, cfg=self.cfg, scheme=self.scheme, lane32=self.lane32
+        )
+
+    def row_indices(self, locs: jax.Array) -> jax.Array:
+        """Matrix row probed by each location."""
+        return (locs >> jnp.uint32(5)) if self.bit_probe else locs
+
+    def plan_runs(self, reads: jax.Array):
+        """Host-side run-length plan for the whole batch (one kernel launch).
+
+        Returns ``(ProbePlan, locs)`` where locs is the (B, η, n_kmers)
+        numpy location array the plan was built from.
+        """
+        from repro.kernels.idl_probe import ops as probe_ops
+
+        locs = np.asarray(self.locations(reads))
+        rows = (locs >> 5) if self.bit_probe else locs
+        b, eta, n_k = locs.shape
+        rplan = probe_ops.plan_probe_runs(
+            rows.reshape(b * eta, n_k),
+            block_bits=self.rows_per_block,
+            probes_per_run=self.probes_per_run,
+        )
+        return rplan, locs
+
+    def run_dma_bytes(self, rplan) -> int:
+        """Total tile bytes the plan DMAs (n_runs × block_bytes)."""
+        return rplan.n_runs * self.block_bytes
+
+    # -- execution ----------------------------------------------------------
+    def execute(
+        self,
+        matrix: jax.Array,
+        reads: jax.Array,
+        *,
+        backend: str = "jnp",
+        interpret: Optional[bool] = None,
+        use_ref: bool = False,
+        mesh: Optional[Mesh] = None,
+    ) -> jax.Array:
+        """(B, n_kmers, W) uint32: AND over η of per-probe row values.
+
+        ``bit_probe`` plans extract the probed bit first, so values are
+        {0, 1} per word slot; row plans return full AND-ed word masks.
+        ``matrix`` may be 1-D when ``W == 1`` (flat packed BF).
+        """
+        if backend == "kernel":   # pre-PR2 spelling of the planned backend
+            backend = "idl_probe"
+        if backend == "jnp":
+            return _execute_jnp(matrix, reads, plan=self)
+        if backend == "idl_probe":
+            return self._execute_idl_probe(matrix, reads, interpret, use_ref)
+        if backend == "sharded":
+            return self._execute_sharded(matrix, reads, mesh)
+        raise ValueError(
+            f"unknown query backend {backend!r} (want one of {BACKENDS}; "
+            f"'kernel' is accepted as an alias for 'idl_probe')"
+        )
+
+    def _execute_idl_probe(self, matrix, reads, interpret, use_ref):
+        from repro.kernels.idl_probe import ops as probe_ops
+
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        rplan, locs = self.plan_runs(reads)
+        gathered = probe_ops.gather_planned_rows(
+            matrix, rplan, interpret=interpret, use_ref=use_ref,
+        )                                           # (n_probes, W)
+        b, eta, n_k = locs.shape
+        gathered = gathered.reshape(b, eta, n_k, self.row_words)
+        return _finish_probe(
+            gathered, jnp.asarray(locs), bit_probe=self.bit_probe
+        )
+
+    def _execute_sharded(self, matrix, reads, mesh):
+        if mesh is None:
+            mesh = default_mesh()
+        fn = _sharded_executor(self, mesh)
+        return fn(matrix, reads)
+
+
+def _pow2_block(n_rows: int, target: int) -> int:
+    """Largest power of two <= target that divides n_rows (floor 1)."""
+    blk = 1 << max(int(target).bit_length() - 1, 0)
+    while blk > 1 and n_rows % blk:
+        blk //= 2
+    return max(blk, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def plan_query(
+    cfg: idl_mod.IDLConfig,
+    scheme: str,
+    read_shape: tuple[int, int],
+    matrix_shape: tuple[int, int],
+    *,
+    bit_probe: bool,
+    lane32: bool = False,
+    rows_per_block: Optional[int] = None,
+    probes_per_run: Optional[int] = None,
+) -> QueryPlan:
+    """Build (or fetch) the cached plan for one query geometry.
+
+    ``rows_per_block`` defaults to the IDL locality window ``cfg.L``
+    translated to matrix rows (``L/32`` packed words for bit probes, ``L``
+    rows for row probes), clamped to a VMEM-friendly power of two that
+    divides ``n_rows``. ``probes_per_run`` defaults to the TPU lane width
+    (128); on a CPU host 32 — narrower runs waste fewer pad lanes where
+    there is no vector unit to fill.
+    """
+    n_rows, row_words = matrix_shape
+    if probes_per_run is None:
+        probes_per_run = 32 if jax.default_backend() == "cpu" else 128
+    if rows_per_block is None:
+        if bit_probe:
+            target = max(cfg.L // 32, 1)
+        else:
+            # keep one DMA tile's unpacked bit image ~<= 2 MB of f32
+            target = max(8, min(cfg.L, (1 << 21) // max(row_words * 128, 1)))
+        rows_per_block = _pow2_block(n_rows, target)
+    if n_rows % rows_per_block:
+        raise ValueError(
+            f"rows_per_block={rows_per_block} must divide n_rows={n_rows}"
+        )
+    return QueryPlan(
+        cfg=cfg, scheme=scheme,
+        read_shape=tuple(read_shape), matrix_shape=tuple(matrix_shape),
+        bit_probe=bit_probe, lane32=lane32,
+        rows_per_block=rows_per_block, probes_per_run=probes_per_run,
+    )
+
+
+def plan_cache_info():
+    """LRU stats of the plan cache (hits prove plans are built once)."""
+    return plan_query.cache_info()
+
+
+def clear_plan_cache() -> None:
+    plan_query.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Backend bodies.
+# ---------------------------------------------------------------------------
+
+def _finish_probe(rows: jax.Array, locs: jax.Array, *, bit_probe: bool):
+    """(B, η, n_k, W) gathered rows -> (B, n_k, W) AND-over-η values."""
+    if bit_probe:
+        bit = (locs & jnp.uint32(31))[..., None]
+        vals = (rows >> bit) & jnp.uint32(1)
+    else:
+        vals = rows
+    return jax.lax.reduce(vals, _FULL, jax.lax.bitwise_and, dimensions=(1,))
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _execute_jnp(matrix: jax.Array, reads: jax.Array, *, plan: QueryPlan):
+    matrix = jnp.reshape(matrix, plan.matrix_shape)
+    locs = plan.locations(reads)
+    rows = matrix[plan.row_indices(locs).astype(jnp.int32)]
+    return _finish_probe(rows, locs, bit_probe=plan.bit_probe)
+
+
+@functools.lru_cache(maxsize=None)
+def default_mesh() -> Mesh:
+    """1-D mesh over every visible device (the scale-out words/files axis)."""
+    return Mesh(np.asarray(jax.devices()), (MESH_AXIS,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_executor(plan: QueryPlan, mesh: Mesh):
+    """jit-compiled shard_map executor for one (plan, mesh) pair."""
+    n_shards = int(np.prod(mesh.devices.shape))
+    n_rows, w = plan.matrix_shape
+
+    if plan.bit_probe:
+        # Split the words (row) axis: every probe is local to exactly one
+        # shard. Each shard reduces its local probes to per-(kmer, slot)
+        # miss counts over η; ONE psum combines shards; a hit is zero
+        # misses anywhere.
+        rows_per_shard = -(-n_rows // n_shards)
+
+        def body(mat, reads):
+            locs = plan.locations(reads)
+            rows = plan.row_indices(locs).astype(jnp.int32)
+            lo = jax.lax.axis_index(MESH_AXIS).astype(jnp.int32) * rows_per_shard
+            local = (rows >= lo) & (rows < lo + rows_per_shard)
+            got = mat[jnp.where(local, rows - lo, 0)]       # (B, η, n_k, W)
+            bit = (got >> (locs & jnp.uint32(31))[..., None]) & jnp.uint32(1)
+            miss = jnp.where(local[..., None], 1 - bit.astype(jnp.int32), 0)
+            miss = jnp.sum(miss, axis=1)                    # (B, n_k, W)
+            return jax.lax.psum(miss, MESH_AXIS)
+
+        pad = rows_per_shard * n_shards - n_rows
+
+        def run(matrix, reads):
+            matrix = jnp.reshape(matrix, plan.matrix_shape)
+            if pad:
+                matrix = jnp.pad(matrix, ((0, pad), (0, 0)))
+            miss = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(MESH_AXIS, None), P()), out_specs=P(),
+            )(matrix, reads)
+            return (miss == 0).astype(jnp.uint32)
+
+        return jax.jit(run)
+
+    # Row probe: split the file-words axis (the serving layout) — every
+    # shard holds all rows for its file slice, gathers are device-local and
+    # the only collective is the output concatenation.
+    words_per_shard = -(-w // n_shards)
+
+    def body(mat, reads):
+        locs = plan.locations(reads)
+        rows = mat[locs.astype(jnp.int32)]                  # (B, η, n_k, W/s)
+        return jax.lax.reduce(rows, _FULL, jax.lax.bitwise_and, dimensions=(1,))
+
+    pad = words_per_shard * n_shards - w
+
+    def run(matrix, reads):
+        matrix = jnp.reshape(matrix, plan.matrix_shape)
+        if pad:
+            matrix = jnp.pad(matrix, ((0, 0), (0, pad)))
+        out = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, MESH_AXIS), P()),
+            out_specs=P(None, None, MESH_AXIS),
+        )(matrix, reads)
+        return out[..., :w]
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# Shared coverage reductions (MSMT postludes).
+# ---------------------------------------------------------------------------
+
+def coverage_need(theta: float, n_kmers: int) -> int:
+    """Integer hit threshold for kmer-coverage >= theta (exact at 1.0)."""
+    return int(np.ceil(theta * n_kmers - 1e-9))
+
+
+def member_coverage(member: jax.Array, theta: float) -> jax.Array:
+    """(B, n_kmers[, ...]) bool kmer hits -> (B[, ...]) bool coverage >= θ."""
+    need = coverage_need(theta, member.shape[1])
+    return jnp.sum(member.astype(jnp.int32), axis=1) >= need
+
+
+def file_match_mask(per_kmer: jax.Array, theta: float) -> jax.Array:
+    """(B, n_kmers, W) uint32 kmer file-masks -> (B, W) uint32 match mask.
+
+    theta=1: pure AND over kmers. theta<1: per-file popcount against the
+    exact integer threshold (a float mean of n ones != 1.0 in f32 for many
+    n, which would flip boundary thetas).
+    """
+    if theta >= 1.0:
+        return jax.lax.reduce(per_kmer, _FULL, jax.lax.bitwise_and,
+                              dimensions=(1,))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (per_kmer[..., None] >> shifts) & jnp.uint32(1)
+    hits = jnp.sum(bits.astype(jnp.int32), axis=1)          # (B, W, 32)
+    match = (hits >= coverage_need(theta, per_kmer.shape[1])).astype(jnp.uint32)
+    return jnp.sum(match << shifts, axis=-1, dtype=jnp.uint32)

@@ -62,6 +62,87 @@ def _probe_kernel(
     out_ref[0, :] = jnp.where(valid, bit.astype(jnp.int32), 1)
 
 
+def _probe_rows_kernel(
+    block_ids_ref,   # scalar-prefetch: (R,) int32 — matrix row-block per run
+    offsets_ref,     # (1, C) int32 — row offsets within the block (-1 = pad)
+    mat_ref,         # (rows_per_block, W) uint32 — the resident tile (VMEM)
+    out_ref,         # (1, C, W) uint32 — gathered row per lane
+):
+    del block_ids_ref  # consumed by the index_map only
+    offsets = offsets_ref[0, :]                      # (C,)
+    off = jnp.where(offsets >= 0, offsets, 0)        # pad lanes read row 0
+
+    tile = mat_ref[...]                              # (RPB, W) uint32
+    rpb, w = tile.shape
+    # unpack the tile -> (RPB, W*32) bit image {0,1} (vector shifts only)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (rpb, w, 32), 2)
+    bits = ((tile[:, :, None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    bits2d = bits.reshape(rpb, w * 32)
+
+    c = offsets.shape[0]
+    # row gather via one one-hot matmul (MXU-native; {0,1} values are exact
+    # in f32), then an integer repack — f32 cannot hold full uint32 words
+    row_onehot = (
+        off[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, rpb), 1)
+    ).astype(jnp.float32)                            # (C, RPB)
+    picked = jnp.dot(
+        row_onehot, bits2d, preferred_element_type=jnp.float32
+    )                                                # (C, W*32) {0,1}
+    picked = picked.reshape(c, w, 32).astype(jnp.uint32)
+    sh = jax.lax.broadcasted_iota(jnp.uint32, (c, w, 32), 2)
+    out_ref[0, :, :] = jnp.sum(picked << sh, axis=2, dtype=jnp.uint32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rows_per_block", "probes_per_run", "interpret")
+)
+def probe_rows(
+    matrix: jax.Array,       # (n_rows, W) uint32 packed bit-matrix
+    block_ids: jax.Array,    # (R,) int32 row-block id per run
+    offsets: jax.Array,      # (R, C) int32 row offset in block, -1 padded
+    *,
+    rows_per_block: int,
+    probes_per_run: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run-coalesced row gather over an arbitrary packed bit-matrix.
+
+    The generalization of :func:`probe_runs` that serves every engine: one
+    grid step per run, one ``(rows_per_block, W)`` tile DMA'd per step (the
+    next tile double-buffers while the current one is probed), C row
+    gathers resolved MXU-natively inside the resident tile. Returns
+    ``(R, C, W)`` uint32 — the W-word row each probe hit (pad lanes
+    replicate row 0 of their block and must be masked by the caller's
+    ``probe_index`` scatter).
+    """
+    r = block_ids.shape[0]
+    c = probes_per_run
+    if offsets.shape != (r, c):
+        raise ValueError(f"offsets shape {offsets.shape} != {(r, c)}")
+    n_rows, w = matrix.shape
+    if n_rows % rows_per_block:
+        raise ValueError(
+            f"n_rows={n_rows} must be a multiple of rows_per_block="
+            f"{rows_per_block}"
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, bid: (i, 0)),
+            pl.BlockSpec((rows_per_block, w), lambda i, bid: (bid[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, w), lambda i, bid: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _probe_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, c, w), jnp.uint32),
+        interpret=interpret,
+    )(block_ids, offsets, matrix)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_words", "probes_per_run", "interpret")
 )

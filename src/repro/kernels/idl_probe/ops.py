@@ -10,6 +10,7 @@ kernel sees static shapes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,10 @@ class ProbePlan:
     block_ids: np.ndarray    # (R,) int32
     offsets: np.ndarray      # (R, C) int32, -1 padded
     probe_index: np.ndarray  # (R, C) int32 position in flattened (η·n) stream
+    gather_index: np.ndarray # (n_probes,) int32 flat (run, lane) per probe —
+                             # the inverse of probe_index, so executors can
+                             # realign with a cheap gather instead of a
+                             # scatter over padded lanes
     n_probes: int
     eta: int
     n_keys: int
@@ -32,60 +37,60 @@ class ProbePlan:
     @property
     def n_runs(self) -> int:
         return int(self.block_ids.shape[0])
-
-    @property
-    def dma_bytes(self) -> int:
-        return self.n_runs * (self.block_bits // 8)
+    # NOTE: per-run DMA bytes depend on the probed matrix's row width,
+    # which the plan does not know — see QueryPlan.run_dma_bytes.
 
 
 def plan_probe_runs(
     locs: np.ndarray, block_bits: int, probes_per_run: int = 128
 ) -> ProbePlan:
-    """Run-length-encode (η, n) bit locations into block-resident runs.
+    """Run-length-encode (P, n) probe streams into block-resident runs.
 
-    Rows (hash repetitions) are planned independently and concatenated, so a
-    run never crosses repetitions. Runs longer than C are split.
+    ``locs`` may be bit locations (``block_bits`` = bits per block, the
+    original flat-BF use) or matrix row indices (``block_bits`` = rows per
+    block — the generalized ``probe_rows`` path); the arithmetic is
+    identical. Leading rows (hash repetitions, or batch × η streams) are
+    planned independently and concatenated, so a run never crosses streams.
+    Runs longer than C are split.
     """
     locs = np.asarray(locs, dtype=np.int64)
     if locs.ndim == 1:
         locs = locs[None, :]
-    eta, n = locs.shape
+    p, n = locs.shape
     c = probes_per_run
 
-    all_bids, all_offs, all_pidx = [], [], []
-    for j in range(eta):
-        row = locs[j]
-        blocks = row // block_bits
-        # run starts: first element or block change
-        start = np.empty(n, dtype=bool)
-        start[0] = True
-        np.not_equal(blocks[1:], blocks[:-1], out=start[1:])
-        run_id = np.cumsum(start) - 1
-        # split runs longer than C
-        pos_in_run = np.arange(n) - np.maximum.accumulate(
-            np.where(start, np.arange(n), 0)
-        )
-        sub = pos_in_run // c
-        key = run_id * (n // c + 2) + sub
-        _, seg = np.unique(key, return_inverse=True)
-        n_runs = seg.max() + 1 if n else 0
-        pos = pos_in_run % c
-        offs = np.full((n_runs, c), -1, dtype=np.int32)
-        pidx = np.full((n_runs, c), -1, dtype=np.int32)
-        offs[seg, pos] = (row % block_bits).astype(np.int32)
-        pidx[seg, pos] = (j * n + np.arange(n)).astype(np.int32)
-        bids = np.zeros(n_runs, dtype=np.int32)
-        bids[seg] = blocks.astype(np.int32)
-        all_bids.append(bids)
-        all_offs.append(offs)
-        all_pidx.append(pidx)
+    # Vectorized over ALL streams at once (no per-stream Python loop): the
+    # whole (P, n) probe stream is planned in a handful of cumsum passes,
+    # which is what lets a (B·η, n_kmers) batch plan in ~ms on the host.
+    flat = locs.reshape(-1)
+    blocks = flat // block_bits
+    idx = np.arange(p * n, dtype=np.int64)
+    start = np.empty(p * n, dtype=bool)
+    start[0] = True
+    np.not_equal(blocks[1:], blocks[:-1], out=start[1:])
+    start[:: n] = True                       # a run never crosses streams
+    pos_in_run = idx - np.maximum.accumulate(np.where(start, idx, 0))
+    # new segment at a run start or every C probes (split long runs); run
+    # keys are nondecreasing along the stream so a cumsum IS the inverse
+    # np.unique used to compute
+    seg = np.cumsum(start | (pos_in_run % c == 0)) - 1
+    n_runs = int(seg[-1]) + 1
+    pos = pos_in_run % c
+
+    offs = np.full((n_runs, c), -1, dtype=np.int32)
+    pidx = np.full((n_runs, c), -1, dtype=np.int32)
+    offs[seg, pos] = (flat % block_bits).astype(np.int32)
+    pidx[seg, pos] = idx.astype(np.int32)
+    bids = np.zeros(n_runs, dtype=np.int32)
+    bids[seg] = blocks.astype(np.int32)
 
     return ProbePlan(
-        block_ids=np.concatenate(all_bids),
-        offsets=np.concatenate(all_offs),
-        probe_index=np.concatenate(all_pidx),
-        n_probes=eta * n,
-        eta=eta,
+        block_ids=bids,
+        offsets=offs,
+        probe_index=pidx,
+        gather_index=(seg * c + pos).astype(np.int32),
+        n_probes=p * n,
+        eta=p,
         n_keys=n,
         block_bits=block_bits,
         probes_per_run=c,
@@ -115,6 +120,57 @@ def probe_membership(
             interpret=interpret,
         )
     return scatter_and_reduce(bits, plan)
+
+
+def gather_planned_rows(
+    matrix: jax.Array, plan: ProbePlan, *, interpret: bool = True,
+    use_ref: bool = False,
+) -> jax.Array:
+    """Execute a row plan; return (n_probes, W) uint32 rows in probe order.
+
+    ``plan.block_bits`` is interpreted as rows-per-block. ``use_ref`` swaps
+    the Pallas kernel for the fused pure-jnp oracle — same plan, same
+    result; the default executor on hosts without a Mosaic target.
+
+    The run count is padded to a power of two (pad runs are all-pad lanes
+    of block 0) so the executor's compile cache stays small even though
+    the true run count is data-dependent.
+    """
+    r = plan.n_runs
+    r_pad = 1 << max(r - 1, 1).bit_length()
+    bids = np.zeros((r_pad,), dtype=np.int32)
+    bids[:r] = plan.block_ids
+    offs = np.full((r_pad, plan.probes_per_run), -1, dtype=np.int32)
+    offs[:r] = plan.offsets
+    return _planned_gather(
+        matrix, jnp.asarray(bids), jnp.asarray(offs),
+        jnp.asarray(plan.gather_index),
+        rows_per_block=plan.block_bits,
+        probes_per_run=plan.probes_per_run,
+        row_words=int(matrix.shape[-1]) if matrix.ndim > 1 else 1,
+        interpret=interpret,
+        use_ref=use_ref,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rows_per_block", "probes_per_run", "row_words", "interpret", "use_ref",
+))
+def _planned_gather(matrix, bids, offs, gidx, *, rows_per_block,
+                    probes_per_run, row_words, interpret, use_ref):
+    """One fused call: run the kernel (or ref), then realign to probe order
+    with the plan's precomputed inverse permutation (a cheap gather — pad
+    lanes are never referenced by ``gather_index``)."""
+    matrix = jnp.reshape(matrix, (-1, row_words))
+    if use_ref:
+        runs = ref.probe_rows_ref(
+            matrix, bids, offs, rows_per_block=rows_per_block)
+    else:
+        runs = kernel.probe_rows(
+            matrix, bids, offs, rows_per_block=rows_per_block,
+            probes_per_run=probes_per_run, interpret=interpret,
+        )
+    return runs.reshape(-1, row_words)[gidx]
 
 
 def scatter_and_reduce(bits: jax.Array, plan: ProbePlan) -> jax.Array:

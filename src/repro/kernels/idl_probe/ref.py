@@ -26,6 +26,19 @@ def probe_runs_ref(
     return jnp.where(valid, bit, 1)
 
 
+def probe_rows_ref(
+    matrix: jax.Array,
+    block_ids: jax.Array,
+    offsets: jax.Array,
+    *,
+    rows_per_block: int,
+) -> jax.Array:
+    """(R, C, W) uint32 gathered rows; pad lanes (offset < 0) read row 0."""
+    off = jnp.where(offsets >= 0, offsets, 0)
+    rows = block_ids[:, None] * rows_per_block + off
+    return matrix[rows]
+
+
 def query_membership_ref(bf_words: jax.Array, locs: jax.Array) -> jax.Array:
     """Direct packed query on (η, n) locations (matches core.bloom.query_packed)."""
     word_idx = (locs >> np.uint32(5)).astype(jnp.int32)

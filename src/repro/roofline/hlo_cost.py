@@ -303,6 +303,14 @@ class Analyzer:
 
         if op in ("fusion", "call"):
             m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs)
+            # a `call` is not a materialization boundary — XLA:CPU wraps
+            # parallel fusions in call computations whose parameters are
+            # forwarded untouched. Recurse with the caller's top_level so
+            # the callee's own fusions charge (discounted) boundary bytes;
+            # charging the call's operands here would re-bill a gathered
+            # table at full size.
+            if op == "call" and m and m.group(1) in self.comps:
+                return self.comp_cost(m.group(1), top_level=top_level)
             called = self.comps.get(m.group(1)) if m else None
             if m:
                 c += self.comp_cost(m.group(1), top_level=False)

@@ -9,10 +9,12 @@ roofline analysis shows is optimal for MSMT.
 
 ``serve_step`` is the TPU-lowerable batched MSMT: queries arrive as raw
 base-code arrays; kmerization, rolling MinHash and scheme locations all run
-on-device on the registry's 32-bit lane path. Indexing goes through
-``insert_read_batch`` — one jit-compiled, donated, dedup'd scatter per
-batch of reads (``repro.index.packed``); ``repro.index.BitSlicedIndex`` is
-the protocol-level engine over the same storage.
+on-device on the registry's 32-bit lane path, and the probe itself routes
+through the shared planner/executor layer (``repro.index.query``) — the
+same planned Pallas / sharded backends every engine uses. Indexing goes
+through ``insert_read_batch`` — one jit-compiled, donated, dedup'd scatter
+per batch of reads (``repro.index.packed``); ``repro.index.BitSlicedIndex``
+is the protocol-level engine over the same storage.
 """
 
 from __future__ import annotations
@@ -25,7 +27,7 @@ import numpy as np
 
 from repro.core import idl as idl_mod
 from repro.distributed.sharding import shard
-from repro.index import packed
+from repro.index import packed, query
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,41 +86,34 @@ def insert_read(
         index, cfg, codes[None, :], jnp.asarray([file_id], dtype=jnp.int32))
 
 
-def _query_locations(cfg: GeneSearchConfig, codes: jax.Array) -> jax.Array:
-    from repro.index import registry
-
-    return registry.locations32(cfg.idl_config(), codes, cfg.scheme)
+def query_plan(
+    cfg: GeneSearchConfig, batch: int, index_shape: tuple[int, int]
+) -> query.QueryPlan:
+    """The cached shared-layer plan for this service's query geometry."""
+    return query.plan_query(
+        cfg.idl_config(), cfg.scheme, (batch, cfg.read_len),
+        tuple(index_shape), bit_probe=False, lane32=True,
+    )
 
 
 def serve_step(
-    index: jax.Array, queries: jax.Array, cfg: GeneSearchConfig
+    index: jax.Array, queries: jax.Array, cfg: GeneSearchConfig,
+    *, backend: str = "jnp",
 ) -> jax.Array:
-    """Batched MSMT.
+    """Batched MSMT — a thin call into :mod:`repro.index.query`.
 
     index: (m, n_files/32) uint32; queries: (B, read_len) uint8 base codes.
     Returns (B, n_files/32) uint32 — bitmask of matching files per query
-    (theta=1: AND over all kmers; theta<1: per-file kmer-coverage >= theta).
+    (theta=1: AND over all kmers; theta<1: per-file kmer-coverage >= theta,
+    with the exact integer threshold every engine uses). ``backend`` picks
+    the shared executor: ``"jnp"`` (traceable — safe under an outer
+    ``jax.jit``), ``"idl_probe"`` (host-planned Pallas run kernel) or
+    ``"sharded"`` (``shard_map`` splitting the file-words axis).
     """
-    locs = jax.vmap(lambda q: _query_locations(cfg, q))(queries)  # (B, η, n_k)
-    locs = shard(locs, ("batch", None, None))
-    rows = index[locs.astype(jnp.int32)]       # (B, η, n_k, F/32) gather
-    rows = shard(rows, ("batch", None, None, "files"))
-    per_kmer = jax.lax.reduce(
-        rows, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, dimensions=(1,)
-    )                                           # AND over η -> (B, n_k, F/32)
-    if cfg.theta >= 1.0:
-        out = jax.lax.reduce(
-            per_kmer, jnp.uint32(0xFFFFFFFF), jax.lax.bitwise_and, dimensions=(1,)
-        )                                       # AND over kmers -> (B, F/32)
-        return shard(out, ("batch", "files"))
-    # fractional coverage: popcount per file via bit unpack, compared with
-    # the exact integer threshold every engine uses (a float mean of n ones
-    # != 1.0 in f32 for many n, which would flip boundary thetas)
-    bits = (per_kmer[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
-    hits = jnp.sum(bits.astype(jnp.int32), axis=1)        # (B, F/32, 32)
-    need = packed.coverage_need(cfg.theta, per_kmer.shape[1])
-    match = (hits >= need).astype(jnp.uint32)
-    out = jnp.sum(match << jnp.arange(32, dtype=jnp.uint32), axis=-1, dtype=jnp.uint32)
+    plan = query_plan(cfg, queries.shape[0], index.shape)
+    per_kmer = plan.execute(index, queries, backend=backend)  # (B, n_k, F/32)
+    per_kmer = shard(per_kmer, ("batch", None, "files"))
+    out = query.file_match_mask(per_kmer, cfg.theta)
     return shard(out, ("batch", "files"))
 
 

@@ -1,16 +1,19 @@
 """Golden parity: the new ``repro.index`` engines must be bit-identical to
 the seed semantics (uint8 scatter/gather primitives + per-read loops), for
-all registered schemes × ``align`` × theta; plus kernel-backend equivalence
-and the one-jit-call batched-insert guarantee."""
+all registered schemes × ``align`` × theta; plus the backend-parity matrix
+(``idl_probe`` and ``sharded`` bit-identical to ``jnp`` for all four
+engines), adapter deprecation warnings, and the one-jit-call
+batched-insert guarantee."""
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import bloom, idl
+from repro.core import bloom, cobs as cobs_mod, idl, rambo as rambo_mod
 from repro.data import genome
 from repro.index import (
     BitSlicedIndex,
@@ -19,6 +22,7 @@ from repro.index import (
     PackedBloomIndex,
     RamboIndex,
     packed,
+    query,
     registry,
 )
 from repro.serving import genesearch as gs
@@ -77,6 +81,122 @@ class TestKernelBackend:
             locs = registry.locations(cfg, r, scheme)
             oracle = bloom.query_packed(eng.words, locs.astype(jnp.uint32))
             np.testing.assert_array_equal(got_jnp[i], np.asarray(oracle))
+
+
+def _matrix_cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+def _build_matrix_engine(name: str, scheme: str, reads) -> GeneIndex:
+    fids = np.arange(reads.shape[0])
+    if name == "bloom":
+        return PackedBloomIndex.build(_matrix_cfg(), scheme).insert_batch(
+            reads[:2])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _matrix_cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads, fids)
+    if name == "rambo":
+        return RamboIndex.build(
+            reads.shape[0] + 2, _matrix_cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads, fids)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _matrix_cfg(), scheme, n_files=40
+        ).insert_batch(reads, np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+class TestBackendParityMatrix:
+    """Acceptance matrix: every engine × scheme, ``idl_probe`` and
+    ``sharded`` bit-identical to ``jnp`` (sharded on the default 1-device
+    mesh here; the >1-device case is skip-guarded below)."""
+
+    @pytest.fixture(scope="class")
+    def qreads(self):
+        r = np.random.default_rng(7).integers(0, 4, size=(3, 120),
+                                              dtype=np.uint8)
+        return jnp.asarray(r)
+
+    @pytest.mark.parametrize("engine", ["bloom", "cobs", "rambo", "bitsliced"])
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    def test_backends_bit_identical(self, qreads, engine, scheme):
+        eng = _build_matrix_engine(engine, scheme, qreads)
+        want = np.asarray(eng.query_batch(qreads, backend="jnp"))
+        got_planned = np.asarray(eng.query_batch(qreads, backend="idl_probe"))
+        got_sharded = np.asarray(eng.query_batch(qreads, backend="sharded"))
+        np.testing.assert_array_equal(got_planned, want)
+        np.testing.assert_array_equal(got_sharded, want)
+
+    @pytest.mark.parametrize("scheme", ["lsh", "idl-bbf"])
+    def test_rolling_only_schemes_on_flat_engine(self, qreads, scheme):
+        eng = _build_matrix_engine("bloom", scheme, qreads)
+        want = np.asarray(eng.query_batch(qreads, backend="jnp"))
+        for backend in ("idl_probe", "sharded"):
+            np.testing.assert_array_equal(
+                np.asarray(eng.query_batch(qreads, backend=backend)), want)
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    @pytest.mark.parametrize("engine", ["bloom", "cobs", "rambo", "bitsliced"])
+    def test_msmt_backend_passthrough(self, qreads, engine, theta):
+        eng = _build_matrix_engine(engine, "idl", qreads)
+        want = np.asarray(eng.msmt(qreads, theta=theta))
+        for backend in ("idl_probe", "sharded"):
+            np.testing.assert_array_equal(
+                np.asarray(eng.msmt(qreads, theta=theta, backend=backend)),
+                want)
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    def test_serve_step_backends(self, qreads, theta):
+        cfg = gs.GeneSearchConfig(n_files=64, m=1 << 16, L=1 << 10,
+                                  read_len=120, eta=2, theta=theta)
+        idx = gs.insert_read_batch(gs.empty_index(cfg), cfg, qreads,
+                                   np.asarray([0, 31, 63]))
+        want = np.asarray(gs.serve_step(idx, qreads, cfg))
+        for backend in ("idl_probe", "sharded"):
+            np.testing.assert_array_equal(
+                np.asarray(gs.serve_step(idx, qreads, cfg, backend=backend)),
+                want)
+
+    def test_plans_are_cached(self, qreads):
+        query.clear_plan_cache()
+        eng = _build_matrix_engine("bloom", "idl", qreads)
+        eng.query_batch(qreads)
+        assert query.plan_cache_info().currsize == 1
+        eng.query_batch(qreads, backend="sharded")   # same geometry
+        eng.query_batch(qreads, backend="idl_probe")
+        assert query.plan_cache_info().currsize == 1
+        assert query.plan_cache_info().hits >= 2
+
+    @pytest.mark.skipif(jax.device_count() < 2,
+                        reason="needs a multi-device mesh")
+    @pytest.mark.parametrize("engine", ["bloom", "cobs", "rambo", "bitsliced"])
+    def test_sharded_multi_device(self, qreads, engine):
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.asarray(jax.devices()), (query.MESH_AXIS,))
+        eng = _build_matrix_engine(engine, "idl", qreads)
+        want = np.asarray(eng.query_batch(qreads, backend="jnp"))
+        got = np.asarray(
+            eng.query_batch(qreads, backend="sharded", mesh=mesh))
+        np.testing.assert_array_equal(got, want)
+
+
+class TestDeprecatedAdapters:
+    def test_adapter_constructors_warn(self):
+        cfg = _cfg(True)
+        with pytest.warns(DeprecationWarning, match="PackedBloomIndex"):
+            bloom.BloomFilter(cfg=cfg)
+        with pytest.warns(DeprecationWarning, match="CobsIndex"):
+            cobs_mod.Cobs.build([100, 200], cfg)
+        with pytest.warns(DeprecationWarning, match="RamboIndex"):
+            rambo_mod.Rambo.build(4, cfg, B=2, R=2)
+
+    def test_new_engines_do_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            PackedBloomIndex.build(_cfg(True), "idl")
+            RamboIndex.build(4, _cfg(True), B=2, R=2)
 
 
 def _seed_cobs_reference(file_sizes, base_cfg, scheme, genomes, theta):

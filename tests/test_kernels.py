@@ -67,6 +67,26 @@ class TestProbeKernel:
         direct = bloom.query_packed(words, jnp.asarray(locs.astype(np.uint32)))
         np.testing.assert_array_equal(np.asarray(got), np.asarray(direct))
 
+    @pytest.mark.parametrize("n_rows,w,rpb,C", [
+        (256, 3, 16, 32),      # odd word count (COBS group slice)
+        (1 << 12, 1, 64, 128), # flat packed BF as a (m/32, 1) matrix
+        (512, 8, 8, 64),       # RAMBO-transpose-like wide rows
+    ])
+    def test_probe_rows_sweep_vs_ref(self, rng, n_rows, w, rpb, C):
+        """The generalized (rows, W) row-gather kernel: Pallas == ref ==
+        direct numpy indexing, in probe order, for arbitrary matrices."""
+        matrix = jnp.asarray(
+            rng.integers(0, 2 ** 32, size=(n_rows, w), dtype=np.uint32))
+        rows = rng.integers(0, n_rows, size=(3, 97))
+        rows[1].sort()  # one stream with long block runs, two scattered
+        plan = probe_ops.plan_probe_runs(rows, block_bits=rpb,
+                                         probes_per_run=C)
+        got = probe_ops.gather_planned_rows(matrix, plan, interpret=True)
+        got_ref = probe_ops.gather_planned_rows(matrix, plan, use_ref=True)
+        want = np.asarray(matrix)[rows.reshape(-1)]
+        np.testing.assert_array_equal(np.asarray(got), want)
+        np.testing.assert_array_equal(np.asarray(got_ref), want)
+
     def test_dma_savings_idl_vs_rh(self, rng):
         """The kernel's DMA count IS the paper's cache-miss metric on TPU:
         IDL's plan must need far fewer block DMAs than RH's."""
