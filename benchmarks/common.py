@@ -23,8 +23,14 @@ import numpy as np
 from repro.core import cache_model
 
 
-def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds of fn(*args) after jit warmup."""
+def timeit(fn, *args, repeats: int = 7, warmup: int = 2) -> float:
+    """Median wall seconds of fn(*args) after jit warmup.
+
+    Two warmup calls (the first compiles, the second settles allocator and
+    cache state) and median-of-7 by default: medians of too few repeats on
+    a noisy shared CPU were the dominant error in early BENCH_query.json
+    numbers. Raise ``repeats`` further for sub-ms kernels.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -35,6 +41,11 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
+
+
+def timeit_ms(fn, *args, repeats: int = 7, warmup: int = 2) -> float:
+    """Median wall milliseconds of fn(*args) after warmup."""
+    return timeit(fn, *args, repeats=repeats, warmup=warmup) * 1e3
 
 
 def locality_metrics(locs: np.ndarray, L: int,

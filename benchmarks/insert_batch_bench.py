@@ -1,9 +1,10 @@
 """Batched donated insert vs the seed's per-read loop.
 
-Measures the acceptance-criterion path: 64 reads inserted into a
-partitioned IDL-BF as ONE jit-compiled, donated, dedup'd scatter
-(`repro.index.packed.insert_batch_words`) against the seed semantics of one
-`bf.at[locs].set(1)` full-array copy per read.
+Measures the original acceptance-criterion path: 64 reads inserted into a
+partitioned IDL-BF as ONE jit-compiled, donated, dedup'd scatter (the
+``jnp`` backend of `repro.index.ingest`) against the seed semantics of one
+`bf.at[locs].set(1)` full-array copy per read. See ``ingest_bench.py`` for
+the full per-backend ingest matrix.
 
     PYTHONPATH=src python -m benchmarks.insert_batch_bench
 """
@@ -17,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bloom, idl
-from repro.index import PackedBloomIndex, packed, registry
+from repro.index import PackedBloomIndex, ingest, registry
 
 
 def main() -> None:
@@ -28,12 +29,12 @@ def main() -> None:
     # --- new path: one jit call for the whole batch, donated buffer -------
     eng = PackedBloomIndex.build(cfg, "idl")
     eng.insert_batch(reads).words.block_until_ready()      # compile
-    packed.insert_batch_words.clear_cache()
+    ingest._execute_jnp.clear_cache()
     t0 = time.perf_counter()
     out = PackedBloomIndex.build(cfg, "idl").insert_batch(reads)
     out.words.block_until_ready()
     t_batch_cold = time.perf_counter() - t0
-    assert packed.insert_batch_words._cache_size() == 1    # ONE jit call
+    assert ingest._execute_jnp._cache_size() == 1          # ONE jit call
     t0 = time.perf_counter()
     out2 = PackedBloomIndex.build(cfg, "idl").insert_batch(reads)
     out2.words.block_until_ready()

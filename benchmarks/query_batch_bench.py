@@ -28,28 +28,21 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import timeit_ms
 from repro.core import bloom, idl
 from repro.index import PackedBloomIndex, query, registry
 
 
 def _time(fn, *, iters: int, result=None) -> float:
-    """Median wall time per call in ms (robust to noisy-neighbor CPUs)."""
-    out = fn()
-    jax.block_until_ready(out)
+    """Median wall ms per call via the hardened warmup+median harness."""
     if result is not None:
-        np.testing.assert_array_equal(np.asarray(out), result)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts)) * 1e3
+        np.testing.assert_array_equal(np.asarray(fn()), result)
+    return timeit_ms(fn, repeats=iters, warmup=2)
 
 
 def run(m: int, n_reads: int, iters: int) -> dict:

@@ -1,6 +1,8 @@
-"""End-to-end gene-search service: build a bit-sliced MSMT index over an
-archive of genomes with ONE batched, donated insert, then serve batched
-queries (the paper's COBS workload, via the TPU-lowerable serve_step).
+"""End-to-end gene-search service: stream an archive of genome files into
+a bit-sliced MSMT index through the shared ingest layer (one loop of
+jit-compiled, donated, chunked inserts — the same builder that handles
+FASTA archives of any size), then serve batched queries (the paper's COBS
+workload, via the TPU-lowerable serve_step).
 
     PYTHONPATH=src python examples/genesearch_service.py
 """
@@ -23,16 +25,15 @@ def main() -> None:
                                    seed=42)
 
     print(f"indexing {cfg.n_files} genome files ...")
-    index = gs.empty_index(cfg)
-    # equal-length genomes batch into a single jit-compiled scatter: no
-    # per-read Python loop, no per-file full-matrix copy
-    genomes = jnp.asarray(np.stack([np.asarray(f.genome) for f in archive]))
-    file_ids = jnp.asarray([f.file_id for f in archive], dtype=jnp.int32)
+    # the streaming archive builder: every genome is chopped into
+    # read_len windows overlapping by k-1 (no kmer lost), batched in
+    # chunks and fed to the cached InsertPlan — no per-read Python loop,
+    # no per-file full-matrix copy, one compile per window length
     t0 = time.perf_counter()
-    index = gs.insert_read_batch(index, cfg, genomes, file_ids)
+    index = gs.build_archive(cfg, archive, chunk_reads=64)
     index.block_until_ready()
     print(f"  index built in {time.perf_counter() - t0:.1f}s "
-          f"({index.nbytes / 1e6:.1f} MB bit-sliced, one insert_read_batch)")
+          f"({index.nbytes / 1e6:.1f} MB bit-sliced, streamed build_archive)")
 
     # batched MSMT: queries are reads from known files + poisoned decoys
     true_ids = [3, 17, 40, 59]

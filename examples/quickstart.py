@@ -7,16 +7,20 @@ through the unified `GeneIndex` API (`repro.index`).
 import jax.numpy as jnp
 import numpy as np
 
+import repro.index as index
 from repro.core import cache_model, idl
 from repro.data import genome
 from repro.index import PackedBloomIndex, registry
 
 
 def main() -> None:
-    # 1. synthesize a genome and build the IDL-BF over its 31-mers
+    # 1. synthesize a genome and build the IDL-BF over its 31-mers through
+    #    the streaming archive builder (chunked, jit-compiled donated
+    #    inserts — the same call scales to whole FASTA archives)
     g = genome.synthesize_genome(50_000, seed=0)
     cfg = idl.IDLConfig(k=31, t=16, L=1 << 15, eta=4, m=1 << 24)
-    bf = PackedBloomIndex.build(cfg, scheme="idl").insert_batch(jnp.asarray(g))
+    bf = PackedBloomIndex.build(cfg, scheme="idl")
+    bf = index.build_archive(bf, [(0, g)], read_len=230, chunk_reads=64)
     print(f"indexed {len(g) - cfg.k + 1} kmers into a {cfg.m // 8 // 1024} KiB "
           f"IDL-BF (fill = {float(bf.fill_fraction):.3f})")
 
@@ -46,6 +50,14 @@ def main() -> None:
           f"{bool(jnp.all(member_kernel == member))}")
     print(f"sharded backend agrees:   "
           f"{bool(jnp.all(member_sharded == member))}")
+
+    # 5. ... and the write side has the same backend choice: the planned
+    #    Pallas insert kernel builds a bit-identical filter
+    bf2 = PackedBloomIndex.build(cfg, scheme="idl")
+    bf2 = index.build_archive(bf2, [(0, g)], read_len=230, chunk_reads=64,
+                              backend="idl_insert")
+    print(f"idl_insert backend agrees: "
+          f"{bool(jnp.all(bf2.words == bf.words))}")
 
 
 if __name__ == "__main__":

@@ -58,6 +58,34 @@ def extract_reads(
     return np.stack([genome[s : s + read_len] for s in starts])
 
 
+def window_reads(codes: np.ndarray, read_len: int, k: int) -> np.ndarray:
+    """Fixed-length windows of ``codes`` covering every kmer exactly.
+
+    Consecutive windows overlap by ``k - 1`` bases so no boundary kmer is
+    lost; the final window is re-anchored to the sequence end (the extra
+    overlap re-inserts kmers, which is free — scatter-OR is idempotent).
+    Sequences shorter than ``read_len`` come back as one window of their
+    own length; sequences shorter than ``k`` (no kmers) as an empty batch.
+    This is the chunking unit of the streaming archive builder
+    (:func:`repro.index.ingest.build_archive`).
+    """
+    codes = np.asarray(codes)
+    if read_len < k:
+        raise ValueError(
+            f"read_len={read_len} must be >= k={k} (a window must hold at "
+            "least one kmer)")
+    n = len(codes)
+    if n < k:
+        return np.empty((0, n), dtype=codes.dtype)
+    if n <= read_len:
+        return codes[None, :]
+    stride = read_len - (k - 1)
+    starts = list(range(0, n - read_len + 1, stride))
+    if starts[-1] != n - read_len:
+        starts.append(n - read_len)
+    return np.stack([codes[s : s + read_len] for s in starts])
+
+
 def poison_queries(
     reads: np.ndarray, seed: int = 2, n_flips: int = 1
 ) -> np.ndarray:

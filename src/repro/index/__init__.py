@@ -3,19 +3,23 @@
 One protocol (:class:`GeneIndex`), one hash-family registry
 (:mod:`repro.index.registry`), one packed-word storage layer
 (:mod:`repro.index.packed`), one shared query planner/executor
-(:mod:`repro.index.query` — jnp / Pallas / sharded backends), four engines
-(:mod:`repro.index.engines`). See docs/API.md for the full API and
-migration notes from the deprecated ``core.bloom.BloomFilter`` /
-``core.cobs.Cobs`` / ``core.rambo.Rambo`` classes.
+(:mod:`repro.index.query` — jnp / Pallas / sharded backends), one shared
+ingest planner/executor with a streaming archive builder
+(:mod:`repro.index.ingest` — jnp / Pallas / sharded backends,
+``build_archive``), four engines (:mod:`repro.index.engines`). See
+docs/API.md for the full API and migration notes from the deprecated
+``core.bloom.BloomFilter`` / ``core.cobs.Cobs`` / ``core.rambo.Rambo``
+classes.
 """
 
-from repro.index import packed, query, registry
+from repro.index import ingest, packed, query, registry
 from repro.index.engines import (
     BitSlicedIndex,
     CobsIndex,
     PackedBloomIndex,
     RamboIndex,
 )
+from repro.index.ingest import InsertPlan, build_archive, plan_insert
 from repro.index.protocol import GeneIndex
 from repro.index.query import QueryPlan, plan_query
 from repro.index.registry import HashScheme
@@ -25,10 +29,14 @@ __all__ = [
     "CobsIndex",
     "GeneIndex",
     "HashScheme",
+    "InsertPlan",
     "PackedBloomIndex",
     "QueryPlan",
     "RamboIndex",
+    "build_archive",
+    "ingest",
     "packed",
+    "plan_insert",
     "plan_query",
     "query",
     "registry",

@@ -10,17 +10,24 @@ BitSlicedIndex         single bit-sliced matrix: ``(m, ⌈F/32⌉)`` (serving)
 =====================  =====================================================
 
 All engines resolve their hash family by name through
-:mod:`repro.index.registry` and mutate storage only through the batched,
-donated, dedup'd scatters in :mod:`repro.index.packed`. Engines are
-immutable dataclasses; ``insert_batch`` returns a new value and donates the
-old buffer (linear use — keep only the returned index).
+:mod:`repro.index.registry`. Engines are immutable dataclasses;
+``insert_batch`` returns a new value and donates the old buffer (linear
+use — keep only the returned index).
 
-Every query routes through the shared planner/executor layer of
-:mod:`repro.index.query`: each engine describes its storage as a packed
-``(n_rows, W)`` bit-matrix and picks a backend — ``"jnp"`` (pure-XLA
-gather), ``"idl_probe"`` (host run-length planner + the generalized Pallas
-``probe_rows`` kernel) or ``"sharded"`` (``shard_map`` over a 1-D device
-mesh). All backends are bit-identical (``tests/test_index_parity.py``).
+Both data paths route through shared planner/executor layers that treat
+every engine's storage as a packed ``(n_rows, W)`` bit-matrix:
+
+* queries through :mod:`repro.index.query` — backends ``"jnp"`` (pure-XLA
+  gather), ``"idl_probe"`` (host run-length planner + the generalized
+  Pallas ``probe_rows`` kernel), ``"sharded"`` (``shard_map`` over a 1-D
+  device mesh);
+* inserts through :mod:`repro.index.ingest` — backends ``"jnp"`` (one
+  donated sort-dedup scatter), ``"idl_insert"`` (host run planner + the
+  Pallas ``insert_runs`` kernel, one launch per batch), ``"sharded"``
+  (device-local scatters, no collectives).
+
+All backends of both paths are bit-identical
+(``tests/test_index_parity.py``, ``tests/test_ingest.py``).
 """
 
 from __future__ import annotations
@@ -33,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing, idl as idl_mod
-from repro.index import packed, query
+from repro.index import ingest, packed, query
 
 
 def _as_batch(reads: jax.Array) -> jax.Array:
@@ -74,12 +81,22 @@ class PackedBloomIndex:
     def build(cls, cfg: idl_mod.IDLConfig, scheme: str = "idl") -> "PackedBloomIndex":
         return cls(cfg=cfg, scheme=scheme)
 
-    def insert_batch(self, reads, file_ids=None) -> "PackedBloomIndex":
-        """Index a (B, read_len) batch; ``file_ids`` is ignored (single set)."""
+    def insert_batch(self, reads, file_ids=None, **kw) -> "PackedBloomIndex":
+        """Index a (B, read_len) batch; ``file_ids`` is ignored (single set).
+
+        Keyword args pick the shared ingest executor (see
+        :mod:`repro.index.ingest`): ``backend`` in {"jnp", "idl_insert",
+        "sharded"}, plus ``mesh`` / ``interpret`` / ``use_ref`` /
+        ``window_min`` passthroughs. All backends are bit-identical
+        (``window_min`` sub-sampling excepted — it inserts fewer kmers).
+        """
         del file_ids
-        words = packed.insert_batch_words(
-            self.words, _as_batch(reads), cfg=self.cfg, scheme=self.scheme
+        reads = _as_batch(reads)
+        plan = ingest.plan_insert(
+            self.cfg, self.scheme, reads.shape, (self.cfg.m // 32, 1),
+            kind="bits", window_min=kw.pop("window_min", None),
         )
+        words = plan.execute(self.words, reads, **kw)
         return dataclasses.replace(self, words=words)
 
     def _plan(self, reads: jax.Array) -> query.QueryPlan:
@@ -191,10 +208,15 @@ class CobsIndex:
                 return gi, g.file_ids.index(file_id)
         raise KeyError(f"file {file_id} not in any group")
 
-    def insert_batch(self, reads, file_ids=None) -> "CobsIndex":
-        """Index reads into their files' group columns (one scatter/group)."""
+    def insert_batch(self, reads, file_ids=None, **kw) -> "CobsIndex":
+        """Index reads into their files' group columns (one scatter/group).
+
+        Keyword args pick the shared ingest executor (see
+        :mod:`repro.index.ingest`).
+        """
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
+        window_min = kw.pop("window_min", None)
         slots = [self._slot(int(f)) for f in fids]
         groups = list(self.groups)
         for gi in sorted({gi for gi, _ in slots}):
@@ -202,10 +224,12 @@ class CobsIndex:
             cols = jnp.asarray(
                 np.array([slots[i][1] for i in sel], dtype=np.int32))
             g = groups[gi]
-            words = packed.insert_batch_bitsliced(
-                g.words, jnp.take(reads, jnp.asarray(sel), axis=0), cols,
-                cfg=g.cfg, scheme=self.scheme,
+            sub = jnp.take(reads, jnp.asarray(sel), axis=0)
+            plan = ingest.plan_insert(
+                g.cfg, self.scheme, sub.shape, g.words.shape,
+                kind="cols", window_min=window_min,
             )
+            words = plan.execute(g.words, sub, cols, **kw)
             groups[gi] = dataclasses.replace(g, words=words)
         return dataclasses.replace(self, groups=tuple(groups))
 
@@ -311,13 +335,15 @@ class RamboIndex:
             object.__setattr__(self, "_words_t_cache", cached)
         return cached[1]
 
-    def insert_batch(self, reads, file_ids=None) -> "RamboIndex":
+    def insert_batch(self, reads, file_ids=None, **kw) -> "RamboIndex":
+        """Index reads into their R bucket filters (shared ingest layer)."""
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
-        words = packed.insert_batch_rows(
-            self.words, reads, self._filter_rows(fids),
-            cfg=self.cfg, scheme=self.scheme,
+        plan = ingest.plan_insert(
+            self.cfg, self.scheme, reads.shape, self.words.shape,
+            kind="rows", window_min=kw.pop("window_min", None),
         )
+        words = plan.execute(self.words, reads, self._filter_rows(fids), **kw)
         return dataclasses.replace(self, words=words)
 
     def query_grid(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
@@ -381,13 +407,15 @@ class BitSlicedIndex:
     ) -> "BitSlicedIndex":
         return cls(cfg=cfg, scheme=scheme, n_files=n_files)
 
-    def insert_batch(self, reads, file_ids=None) -> "BitSlicedIndex":
+    def insert_batch(self, reads, file_ids=None, **kw) -> "BitSlicedIndex":
+        """Index reads into their file columns (shared ingest layer)."""
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
-        words = packed.insert_batch_bitsliced(
-            self.words, reads, jnp.asarray(fids),
-            cfg=self.cfg, scheme=self.scheme, lane32=True,
+        plan = ingest.plan_insert(
+            self.cfg, self.scheme, reads.shape, self.words.shape,
+            kind="cols", lane32=True, window_min=kw.pop("window_min", None),
         )
+        words = plan.execute(self.words, reads, jnp.asarray(fids), **kw)
         return dataclasses.replace(self, words=words)
 
     def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:

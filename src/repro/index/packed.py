@@ -1,34 +1,39 @@
-"""Packed-uint32 word storage + batched, donated, dedup'd scatter inserts.
+"""Packed-uint32 word storage + the ONE dedup'd scatter-OR primitive.
 
 Canonical storage for every engine behind the :class:`~repro.index.protocol.
 GeneIndex` protocol: Bloom-filter bits live packed 32-per-``uint32`` word
 (the layout the Pallas kernels and the serving index already use), not as
-one byte per bit. All mutation goes through the jit-compiled entry points
-here, which share one structure:
+one byte per bit.
 
-1. locations for a whole ``(B, read_len)`` batch of reads are computed
-   in-graph with ``vmap`` over the registry's rolling path — no per-read
-   Python loop;
-2. duplicate (target, bit) pairs are removed with a sort-based dedup
-   (``lexsort`` + neighbour compare — no ``jnp.unique``, whose output shape
-   is data-dependent and would break jit); duplicates are routed to an
-   out-of-range row and dropped by the ``mode="drop"`` scatter;
-3. the deduped bits are scatter-added into a zero delta (safe: each bit
-   appears at most once, so add == or) and OR-ed into the donated
-   destination buffer — one fused scatter per batch instead of a full
-   ``m``-bit array copy per read.
+Since the ingest refactor all mutation flows through
+:mod:`repro.index.ingest` (the shared ``InsertPlan`` layer), and the three
+storage-specific scatter bodies this module used to carry (flat words,
+bit-sliced, RAMBO rows) collapsed into one: :func:`scatter_or_matrix`, a
+sort-deduplicated scatter-OR of single bits at ``(row, word_col, bit)``
+targets of any packed ``(n_rows, W)`` matrix —
 
-The destination buffer is donated (``donate_argnums=0``): on accelerators
-the update is in-place; CPU falls back to a copy with a one-time warning.
+1. targets are ``lexsort``-ed and duplicates removed with a neighbour
+   compare (no ``jnp.unique``, whose output shape is data-dependent and
+   would break jit); duplicates are routed to an out-of-range row and
+   dropped by the ``mode="drop"`` scatter;
+2. the deduped bits are scatter-added into a zero delta (safe: each
+   (row, word, bit) appears at most once, so add == or) and OR-ed into
+   the destination.
+
+The old per-layout helpers remain: ``scatter_or_bitsliced`` and
+``scatter_or_rows`` as thin views of the one body, ``scatter_or`` as its
+W == 1 single-sort-key specialization (the flat-BF fast path), and the legacy
+jit entry points (``insert_batch_words`` / ``insert_batch_bitsliced`` /
+``insert_batch_rows``) are deprecated adapters over ``ingest.InsertPlan``
+(bit-identical; they emit a ``DeprecationWarning``).
 """
 
 from __future__ import annotations
 
-import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bloom as bloom_mod
 from repro.core import idl as idl_mod
@@ -44,10 +49,10 @@ def batch_locations(
 
 
 # ---------------------------------------------------------------------------
-# Dedup'd scatter-or primitives (pure jnp, jit/vmap safe).
+# The one dedup'd scatter-OR body (pure jnp, jit/vmap safe).
 # ---------------------------------------------------------------------------
 
-def _mask_duplicates(sort_key_rows: jax.Array, primary: jax.Array, oob) -> jax.Array:
+def _mask_duplicates(sort_key_rows, primary: jax.Array, oob) -> jax.Array:
     """Return ``primary`` with duplicate entries replaced by ``oob``.
 
     ``sort_key_rows``: tuple-like (k, P) stack of already-sorted key rows;
@@ -61,10 +66,37 @@ def _mask_duplicates(sort_key_rows: jax.Array, primary: jax.Array, oob) -> jax.A
     return jnp.where(same, oob, primary)
 
 
+def scatter_or_matrix(
+    matrix: jax.Array,
+    rows: jax.Array,
+    word_cols: jax.Array,
+    bits: jax.Array,
+) -> jax.Array:
+    """OR bit ``bits[i]`` of word ``(rows[i], word_cols[i])`` into ``matrix``.
+
+    One lexsort + one scatter for the whole target stream, duplicate-safe;
+    out-of-range targets (including deliberately masked ones routed to
+    ``row == n_rows``) are dropped. This is the single scatter body behind
+    every engine's insert path.
+    """
+    r = rows.reshape(-1).astype(jnp.int32)
+    c = word_cols.reshape(-1).astype(jnp.int32)
+    b = bits.reshape(-1).astype(jnp.uint32)
+    order = jnp.lexsort((b, c, r))
+    r, c, b = r[order], c[order], b[order]
+    r = _mask_duplicates((r, c, b), r, matrix.shape[0])
+    delta = jnp.zeros_like(matrix).at[r, c].add(
+        jnp.uint32(1) << b, mode="drop")
+    return matrix | delta
+
+
 def scatter_or(words: jax.Array, locs: jax.Array) -> jax.Array:
     """OR the bits at flat bit-locations ``locs`` into packed ``words``.
 
-    One sort + one scatter for the whole location stream, duplicate-safe.
+    The W == 1 specialization of :func:`scatter_or_matrix`: flat bit
+    locations are one key, so a single ``sort`` replaces the 3-key
+    ``lexsort`` (the fast path every flat-BF insert takes). Out-of-range
+    locations are dropped.
     """
     flat = jnp.sort(locs.reshape(-1).astype(jnp.uint32))
     word_idx = (flat >> jnp.uint32(5)).astype(jnp.int32)
@@ -78,46 +110,45 @@ def scatter_or_bitsliced(
     matrix: jax.Array, rows: jax.Array, file_ids: jax.Array
 ) -> jax.Array:
     """Set file bits at (row, file) pairs in a bit-sliced (m, F/32) matrix."""
-    rows = rows.reshape(-1).astype(jnp.int32)
     fids = file_ids.reshape(-1).astype(jnp.int32)
-    order = jnp.lexsort((fids, rows))
-    r, f = rows[order], fids[order]
-    r = _mask_duplicates((r, f), r, matrix.shape[0])
-    bit = jnp.uint32(1) << (f & 31).astype(jnp.uint32)
-    delta = jnp.zeros_like(matrix).at[r, f >> 5].add(bit, mode="drop")
-    return matrix | delta
+    return scatter_or_matrix(matrix, rows, fids >> 5, fids & 31)
 
 
 def scatter_or_rows(
     filters: jax.Array, filter_rows: jax.Array, locs: jax.Array
 ) -> jax.Array:
     """Set bit ``locs[i]`` of packed filter row ``filter_rows[i]`` (RAMBO)."""
-    frows = filter_rows.reshape(-1).astype(jnp.int32)
-    flat = locs.reshape(-1).astype(jnp.uint32)
-    order = jnp.lexsort((flat, frows))
-    fr, lc = frows[order], flat[order]
-    fr = _mask_duplicates((fr, lc), fr, filters.shape[0])
-    word_idx = (lc >> jnp.uint32(5)).astype(jnp.int32)
-    bit = jnp.uint32(1) << (lc & jnp.uint32(31))
-    delta = jnp.zeros_like(filters).at[fr, word_idx].add(bit, mode="drop")
-    return filters | delta
+    flat = locs.reshape(-1).astype(jnp.int32)
+    return scatter_or_matrix(filters, filter_rows, flat >> 5, flat & 31)
 
 
 # ---------------------------------------------------------------------------
-# Jitted batched entry points (donated destination, static cfg + scheme).
+# Legacy batched entry points — deprecated adapters over the ingest layer.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme"))
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"packed.{name} is a deprecated entry point; build an "
+        "ingest.InsertPlan (repro.index.ingest.plan_insert) or call the "
+        "engine's insert_batch instead — one planned, donated scatter with "
+        "jnp / idl_insert / sharded backends.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 def insert_batch_words(
     words: jax.Array, reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str
 ) -> jax.Array:
-    """Insert a (B, read_len) batch into a flat packed BF — one jit call."""
-    return scatter_or(words, batch_locations(cfg, reads, scheme))
+    """Deprecated: insert a (B, read_len) batch into a flat packed BF."""
+    _deprecated("insert_batch_words")
+    from repro.index import ingest
+
+    plan = ingest.plan_insert(
+        cfg, scheme, tuple(reads.shape), (words.shape[0], 1), kind="bits")
+    return plan.execute(words, reads)
 
 
-@functools.partial(
-    jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme", "lane32")
-)
 def insert_batch_bitsliced(
     matrix: jax.Array,
     reads: jax.Array,
@@ -127,15 +158,16 @@ def insert_batch_bitsliced(
     scheme: str,
     lane32: bool = False,
 ) -> jax.Array:
-    """Insert a batch of reads into columns ``cols`` of a bit-sliced matrix."""
-    locs = batch_locations(cfg, reads, scheme, lane32=lane32)
-    b = reads.shape[0]
-    rows = locs.reshape(b, -1)
-    fids = jnp.broadcast_to(cols.reshape(b, 1), rows.shape)
-    return scatter_or_bitsliced(matrix, rows, fids)
+    """Deprecated: insert reads into columns ``cols`` of a bit-sliced matrix."""
+    _deprecated("insert_batch_bitsliced")
+    from repro.index import ingest
+
+    plan = ingest.plan_insert(
+        cfg, scheme, tuple(reads.shape), tuple(matrix.shape),
+        kind="cols", lane32=lane32)
+    return plan.execute(matrix, reads, jnp.asarray(cols))
 
 
-@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("cfg", "scheme"))
 def insert_batch_rows(
     filters: jax.Array,
     reads: jax.Array,
@@ -144,16 +176,13 @@ def insert_batch_rows(
     cfg: idl_mod.IDLConfig,
     scheme: str,
 ) -> jax.Array:
-    """Insert each read into ``R`` packed filter rows (RAMBO buckets).
+    """Deprecated: insert each read into ``R`` packed filter rows (RAMBO)."""
+    _deprecated("insert_batch_rows")
+    from repro.index import ingest
 
-    ``filter_rows``: (B, R) int32 — the stacked-filter rows read b lands in.
-    """
-    locs = batch_locations(cfg, reads, scheme)          # (B, η, n_k)
-    b, r = filter_rows.shape
-    per_read = locs.reshape(b, 1, -1)                   # (B, 1, η·n_k)
-    lf = jnp.broadcast_to(per_read, (b, r, per_read.shape[-1]))
-    ff = jnp.broadcast_to(filter_rows.reshape(b, r, 1), lf.shape)
-    return scatter_or_rows(filters, ff, lf)
+    plan = ingest.plan_insert(
+        cfg, scheme, tuple(reads.shape), tuple(filters.shape), kind="rows")
+    return plan.execute(filters, reads, jnp.asarray(filter_rows))
 
 
 # ---------------------------------------------------------------------------
@@ -182,13 +211,13 @@ def unpack_file_bits(masks: jax.Array, n_files: int) -> jax.Array:
     return (bits.reshape(masks.shape[:-1] + (-1,))[..., :n_files]) == 1
 
 
-def coverage_need(theta: float, n_kmers: int) -> int:
-    """Integer hit threshold for kmer-coverage >= theta.
+def __getattr__(name: str):
+    # coverage_need's single definition lives with the rest of the
+    # query-side math (repro.index.query); re-exported here lazily so the
+    # storage module keeps its historical surface without a duplicate body
+    # or an import cycle.
+    if name == "coverage_need":
+        from repro.index import query
 
-    Canonical implementation lives with the rest of the query-side math in
-    :func:`repro.index.query.coverage_need`; re-exported here for storage
-    users.
-    """
-    from repro.index import query
-
-    return query.coverage_need(theta, n_kmers)
+        return query.coverage_need
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

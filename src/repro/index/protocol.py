@@ -5,8 +5,14 @@ RAMBO, the bit-sliced serving index) speaks the same four-method protocol:
 
 * ``build(cfg, ...)``                  — classmethod constructor;
 * ``insert_batch(reads, file_ids)``    — index a ``(B, read_len)`` batch of
-  base-code reads (one jit-compiled, donated scatter — no per-read Python
-  loop). ``file_ids`` is ignored by single-set engines;
+  base-code reads. Every engine routes through the shared ingest layer
+  (:mod:`repro.index.ingest`): ``backend="jnp"`` is one jit-compiled,
+  donated, dedup'd scatter (no per-read Python loop),
+  ``backend="idl_insert"`` the host run-length planner + generalized
+  Pallas ``insert_runs`` kernel (one launch per batch),
+  ``backend="sharded"`` a collective-free ``shard_map`` over a 1-D device
+  mesh. All three are bit-identical. ``file_ids`` is ignored by
+  single-set engines;
 * ``query_batch(reads, backend=...)``  — per-kmer membership for a batch.
   Every engine routes through the shared planner/executor layer
   (:mod:`repro.index.query`): ``backend="jnp"`` is the pure-XLA reference,

@@ -1,11 +1,22 @@
-"""Pallas TPU kernel: block-resident Bloom-filter insert (scatter-OR).
+"""Pallas TPU kernel: block-resident scatter-OR insert.
 
-Indexing-side twin of idl_probe. The host planner groups insert locations by
-BF block such that **each block appears at most once per call** (rounds, see
-ops.plan_insert_rounds) — no read-after-write hazards. Each grid step DMAs
-one resident tile, ORs in the bit-image of up to C insertions (built
-MXU-natively from two one-hot matmuls), and emits the updated tile; the
-wrapper block-scatters updated tiles back (conflict-free by construction).
+Indexing-side twin of idl_probe, in two generations:
+
+* :func:`insert_round` — the original flat-BF kernel. The host planner
+  groups insert locations by BF block such that **each block appears at
+  most once per call** (rounds, see ops.plan_insert_rounds) — no
+  read-after-write hazards, but one launch per round.
+* :func:`insert_runs` — the generalized single-launch kernel behind
+  ``repro.index.ingest``: inserts into an arbitrary packed ``(rows, W)``
+  bit-matrix, planned as **sorted, deduplicated runs** (ops.plan_insert_runs).
+  Runs of the same tile are consecutive, so the output tile is *revisited*:
+  the first run of a tile initializes it from the resident input tile, the
+  following runs OR into it while it stays in VMEM, and Pallas flushes it
+  exactly once when the next tile begins. One tile read + one tile write
+  per *touched block* for the whole batch, however many runs land in it.
+
+Either way each grid step ORs in the bit-image of up to C insertions,
+built MXU-natively from two one-hot matmuls.
 """
 
 from __future__ import annotations
@@ -25,30 +36,8 @@ def _insert_kernel(
     out_ref,         # (1, block_words) uint32 updated tile
 ):
     del block_ids_ref
-    offsets = offsets_ref[0, :]
-    valid = offsets >= 0
-    off = jnp.where(valid, offsets, 0)
-    word_idx = (off >> 5).astype(jnp.int32)
-    bit_idx = (off & 31).astype(jnp.int32)
-
     words = bf_ref[:]
-    w = words.shape[0]
-    c = offsets.shape[0]
-    # bit image of the insertions: counts (W, 32) = rows^T @ cols, then clip
-    row_onehot = (
-        (word_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, w), 1))
-        & valid[:, None]
-    ).astype(jnp.float32)                            # (C, W)
-    col_onehot = (
-        bit_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, 32), 1)
-    ).astype(jnp.float32)                            # (C, 32)
-    counts = jnp.dot(
-        row_onehot.T, col_onehot, preferred_element_type=jnp.float32
-    )                                                # (W, 32)
-    add_bits = (counts > 0.5).astype(jnp.uint32)
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (w, 32), 1)
-    add_words = jnp.sum(add_bits << shifts, axis=1).astype(jnp.uint32)
-    out_ref[0, :] = words | add_words
+    out_ref[0, :] = words | _bit_image(offsets_ref[0, :], words.shape[0])
 
 
 @functools.partial(
@@ -81,3 +70,107 @@ def insert_round(
         out_shape=jax.ShapeDtypeStruct((r, block_words), jnp.uint32),
         interpret=interpret,
     )(block_ids, offsets, bf_words)
+
+
+def _bit_image(offsets: jax.Array, n_words: int) -> jax.Array:
+    """(C,) -1-padded bit offsets -> (n_words,) uint32 OR-image (MXU path)."""
+    valid = offsets >= 0
+    off = jnp.where(valid, offsets, 0)
+    word_idx = (off >> 5).astype(jnp.int32)
+    bit_idx = (off & 31).astype(jnp.int32)
+    c = offsets.shape[0]
+    row_onehot = (
+        (word_idx[:, None]
+         == jax.lax.broadcasted_iota(jnp.int32, (c, n_words), 1))
+        & valid[:, None]
+    ).astype(jnp.float32)                            # (C, NW)
+    col_onehot = (
+        bit_idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (c, 32), 1)
+    ).astype(jnp.float32)                            # (C, 32)
+    counts = jnp.dot(
+        row_onehot.T, col_onehot, preferred_element_type=jnp.float32
+    )                                                # (NW, 32)
+    add_bits = (counts > 0.5).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (n_words, 32), 1)
+    return jnp.sum(add_bits << shifts, axis=1).astype(jnp.uint32)
+
+
+def _insert_runs_kernel(
+    block_ids_ref,   # scalar-prefetch (R,) int32 — matrix row-block per run
+    slot_ids_ref,    # scalar-prefetch (R,) int32 — output tile slot per run
+    offsets_ref,     # (1, C) int32 bit offsets within the tile, -1 padded
+    mat_ref,         # (rows_per_block, W) uint32 resident input tile
+    out_ref,         # (1, rows_per_block, W) uint32 accumulated output tile
+):
+    del block_ids_ref  # consumed by the index_map only
+    i = pl.program_id(0)
+    tile = mat_ref[...]                              # (RPB, W)
+    rpb, w = tile.shape
+    img = _bit_image(offsets_ref[0, :], rpb * w).reshape(rpb, w)
+
+    # Runs are sorted by tile, so revisits are consecutive: initialize the
+    # output tile on its first run, OR into the resident copy afterwards.
+    first = (i == 0) | (slot_ids_ref[i] != slot_ids_ref[jnp.maximum(i - 1, 0)])
+
+    @pl.when(first)
+    def _():
+        out_ref[0, :, :] = tile | img
+
+    @pl.when(jnp.logical_not(first))
+    def _():
+        out_ref[0, :, :] = out_ref[0, :, :] | img
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows_per_block", "inserts_per_run", "n_tiles",
+                     "interpret"),
+)
+def insert_runs(
+    matrix: jax.Array,       # (n_rows, W) uint32 packed bit-matrix
+    block_ids: jax.Array,    # (R,) int32 row-block id per run (nondecreasing)
+    slot_ids: jax.Array,     # (R,) int32 output slot per run (nondecreasing)
+    offsets: jax.Array,      # (R, C) int32 tile bit offsets, -1 padded
+    *,
+    rows_per_block: int,
+    inserts_per_run: int,
+    n_tiles: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Run-coalesced scatter-OR into an arbitrary packed bit-matrix.
+
+    One grid step per run; one ``(rows_per_block, W)`` input tile DMA per
+    *touched block* (consecutive runs of a block reuse the resident output
+    tile). Returns ``(n_tiles, rows_per_block, W)`` uint32 — the updated
+    tile per touched block, for the caller to scatter back (slots are
+    unique blocks, so the write-back is conflict-free).
+    """
+    r = block_ids.shape[0]
+    c = inserts_per_run
+    if offsets.shape != (r, c):
+        raise ValueError(f"offsets shape {offsets.shape} != {(r, c)}")
+    n_rows, w = matrix.shape
+    if n_rows % rows_per_block:
+        raise ValueError(
+            f"n_rows={n_rows} must be a multiple of rows_per_block="
+            f"{rows_per_block}"
+        )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, bid, sid: (i, 0)),
+            pl.BlockSpec((rows_per_block, w), lambda i, bid, sid: (bid[i], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, rows_per_block, w), lambda i, bid, sid: (sid[i], 0, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _insert_runs_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_tiles, rows_per_block, w), jnp.uint32),
+        interpret=interpret,
+    )(block_ids, slot_ids, offsets, matrix)

@@ -1,15 +1,28 @@
-"""Host-side planner + wrapper for block-resident BF insertion.
+"""Host-side planners + wrappers for block-resident scatter-OR insertion.
 
-plan_insert_rounds groups the (η, n) location grid by BF block and emits
-ROUNDS: within one round every block id is unique, so the kernel can process
-the whole round with zero write conflicts. IDL needs few blocks (locality!)
-→ few, densely-packed rounds; RH touches ~every block once → many sparse
-singleton tiles. The round structure is itself a locality measurement.
+Two generations of planner (mirroring kernel.py):
+
+* :func:`plan_insert_rounds` (legacy) groups the (η, n) location grid by BF
+  block and emits ROUNDS: within one round every block id is unique, so the
+  kernel can process the whole round with zero write conflicts — but each
+  round is its own launch.
+* :func:`plan_insert_runs` — the vectorized planner behind
+  ``repro.index.ingest``: the whole batch's (already flattened) bit
+  positions are **sorted and deduplicated once** (np.unique), run-length
+  encoded by matrix row-block in a handful of cumsum passes (the same
+  technique as idl_probe.plan_probe_runs), and emitted as ONE kernel
+  launch. Sorting makes runs of a block consecutive, so the kernel
+  accumulates into a resident output tile (revisiting) and each touched
+  block costs exactly one tile read + one tile write, however many runs
+  land in it. IDL needs few blocks (locality!) → few tiles; RH touches
+  ~every block once → many singleton tiles. The run/tile structure is
+  itself a locality measurement.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +77,147 @@ def plan_insert_rounds(
         rounds=rounds, block_bits=block_bits,
         inserts_per_round=c, n_locs=len(flat),
     )
+
+
+_PAD_BLOCK = np.int32(np.iinfo(np.int32).max)  # never a real block id
+
+
+@dataclasses.dataclass
+class InsertRunPlan:
+    """One-launch, sorted-run plan over a flattened (rows*W*32)-bit space."""
+
+    block_ids: np.ndarray    # (R_pad,) int32 row-block per run, nondecreasing
+    slot_ids: np.ndarray     # (R_pad,) int32 output tile slot, nondecreasing
+    offsets: np.ndarray      # (R_pad, C) int32 tile bit offsets, -1 padded
+    uniq_blocks: np.ndarray  # (S_pad,) int32 touched blocks, sorted unique,
+                             # padded with _PAD_BLOCK (dropped at write-back)
+    n_locs: int              # deduplicated insert count
+    n_runs: int              # true run count (before pow2 padding)
+    n_tiles: int             # true touched-block count (before pow2 padding)
+    block_bits: int          # bits per tile (rows_per_block * W * 32)
+    inserts_per_run: int
+
+    @property
+    def n_slots(self) -> int:
+        """Pow2-padded output tile count (the executor's static shape)."""
+        return int(self.uniq_blocks.shape[0])
+
+    @property
+    def dma_bytes(self) -> int:
+        # one tile read + one tile write per touched block, for the batch
+        return 2 * self.n_tiles * (self.block_bits // 8)
+
+
+def plan_insert_runs(
+    flat_bits: np.ndarray, block_bits: int, inserts_per_run: int = 128
+) -> InsertRunPlan | None:
+    """Sort + dedup flat bit positions, run-length encode by block.
+
+    ``flat_bits``: any-shape int array of global bit positions within the
+    flattened matrix (``(row * W + word) * 32 + bit``); int64 on the host,
+    so arbitrarily large matrices are fine. Negative positions are dropped
+    (masked inserts). Returns None when nothing survives.
+
+    Both data-dependent sizes are padded to powers of two so the
+    executor's compile cache stays small: the run count (pad runs are
+    all-pad lanes of the last block/slot — bit-exact no-ops) and the
+    output tile count (pad slots carry the ``_PAD_BLOCK`` sentinel and
+    are dropped by the write-back scatter).
+    """
+    flat = np.asarray(flat_bits, dtype=np.int64).reshape(-1)
+    flat = np.unique(flat[flat >= 0])        # sorted + deduplicated
+    n = int(flat.shape[0])
+    if n == 0:
+        return None
+    c = inserts_per_run
+    blocks = flat // block_bits
+    idx = np.arange(n, dtype=np.int64)
+    start = np.empty(n, dtype=bool)
+    start[0] = True
+    np.not_equal(blocks[1:], blocks[:-1], out=start[1:])
+    pos_in_block = idx - np.maximum.accumulate(np.where(start, idx, 0))
+    # new run at a block start or every C inserts (split long runs); block
+    # keys are nondecreasing so a cumsum numbers runs and slots directly
+    run = np.cumsum(start | (pos_in_block % c == 0)) - 1
+    slot = np.cumsum(start) - 1
+    n_runs = int(run[-1]) + 1
+    r_pad = 1 << max(n_runs - 1, 1).bit_length()
+    pos = pos_in_block % c
+
+    offs = np.full((r_pad, c), -1, dtype=np.int32)
+    offs[run, pos] = (flat % block_bits).astype(np.int32)
+    uniq = blocks[start].astype(np.int32)
+    bids = np.full(r_pad, uniq[-1], dtype=np.int32)
+    bids[run] = blocks.astype(np.int32)
+    sids = np.full(r_pad, len(uniq) - 1, dtype=np.int32)
+    sids[run] = slot.astype(np.int32)
+    n_tiles = len(uniq)
+    s_pad = 1 << max(n_tiles - 1, 1).bit_length()
+    uniq = np.concatenate(
+        [uniq, np.full(s_pad - n_tiles, _PAD_BLOCK, dtype=np.int32)])
+
+    return InsertRunPlan(
+        block_ids=bids, slot_ids=sids, offsets=offs, uniq_blocks=uniq,
+        n_locs=n, n_runs=n_runs, n_tiles=n_tiles,
+        block_bits=block_bits, inserts_per_run=c,
+    )
+
+
+def insert_planned(
+    matrix: jax.Array, plan: InsertRunPlan | None, *,
+    interpret: bool = True, use_ref: bool = False,
+) -> jax.Array:
+    """Execute a run plan against a packed (n_rows, W) matrix — ONE launch.
+
+    The matrix buffer is donated: on accelerators the tile write-back is
+    in-place. ``use_ref`` swaps the Pallas kernel for its fused jnp oracle
+    (same plan, bit-identical — the executor on hosts without Mosaic).
+    """
+    if plan is None:
+        return matrix
+    w = int(matrix.shape[-1]) if matrix.ndim > 1 else 1
+    if plan.block_bits % (w * 32):
+        raise ValueError(
+            f"block_bits={plan.block_bits} not a row multiple of W={w}")
+    return _planned_insert(
+        matrix,
+        jnp.asarray(plan.block_ids), jnp.asarray(plan.slot_ids),
+        jnp.asarray(plan.offsets), jnp.asarray(plan.uniq_blocks),
+        rows_per_block=plan.block_bits // (w * 32),
+        inserts_per_run=plan.inserts_per_run,
+        n_tiles=plan.n_slots,
+        row_words=w,
+        interpret=interpret,
+        use_ref=use_ref,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=("rows_per_block", "inserts_per_run", "n_tiles",
+                     "row_words", "interpret", "use_ref"),
+)
+def _planned_insert(matrix, bids, sids, offs, uniq, *, rows_per_block,
+                    inserts_per_run, n_tiles, row_words, interpret, use_ref):
+    """One fused call: run the kernel (or ref) over all runs, then scatter
+    the updated tiles back (slots are unique blocks — conflict-free)."""
+    shape = matrix.shape
+    matrix = jnp.reshape(matrix, (-1, row_words))
+    if use_ref:
+        tiles = ref.insert_runs_ref(
+            matrix, bids, sids, offs,
+            rows_per_block=rows_per_block, n_tiles=n_tiles,
+        )
+    else:
+        tiles = kernel.insert_runs(
+            matrix, bids, sids, offs,
+            rows_per_block=rows_per_block,
+            inserts_per_run=inserts_per_run,
+            n_tiles=n_tiles,
+            interpret=interpret,
+        )
+    return ref.apply_tiles_to_matrix(matrix, uniq, tiles).reshape(shape)
 
 
 def insert_with_plan(

@@ -11,15 +11,19 @@ roofline analysis shows is optimal for MSMT.
 base-code arrays; kmerization, rolling MinHash and scheme locations all run
 on-device on the registry's 32-bit lane path, and the probe itself routes
 through the shared planner/executor layer (``repro.index.query``) — the
-same planned Pallas / sharded backends every engine uses. Indexing goes
-through ``insert_read_batch`` — one jit-compiled, donated, dedup'd scatter
-per batch of reads (``repro.index.packed``); ``repro.index.BitSlicedIndex``
-is the protocol-level engine over the same storage.
+same planned Pallas / sharded backends every engine uses. Indexing routes
+through the shared ingest layer (``repro.index.ingest``): a cached
+``InsertPlan`` turns a batch of reads into one jit-compiled, donated,
+dedup'd scatter — or one planned Pallas ``insert_runs`` launch, or a
+``shard_map`` over the file-words axis — and ``build_archive`` streams a
+whole archive through it. ``repro.index.BitSlicedIndex`` is the
+protocol-level engine over the same storage.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +31,7 @@ import numpy as np
 
 from repro.core import idl as idl_mod
 from repro.distributed.sharding import shard
-from repro.index import packed, query
+from repro.index import ingest, query
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,20 +66,58 @@ def empty_index(cfg: GeneSearchConfig) -> jax.Array:
     return jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
 
 
+def insert_plan(
+    cfg: GeneSearchConfig, batch: int, index_shape: tuple[int, int],
+    read_len: Optional[int] = None,
+) -> ingest.InsertPlan:
+    """The cached shared-layer plan for this service's insert geometry.
+
+    ``read_len`` defaults to the service's query read length; pass the
+    actual sequence length when indexing whole genomes.
+    """
+    return ingest.plan_insert(
+        cfg.idl_config(), cfg.scheme,
+        (batch, cfg.read_len if read_len is None else read_len),
+        tuple(index_shape), kind="cols", lane32=True,
+    )
+
+
 def insert_read_batch(
     index: jax.Array, cfg: GeneSearchConfig, reads: jax.Array,
-    file_ids: jax.Array,
+    file_ids: jax.Array, *, backend: str = "jnp", **kw,
 ) -> jax.Array:
     """Index a (B, read_len) batch of reads into their files — ONE jit call.
 
-    Locations for the whole batch are vmapped in-graph, duplicate (row, file)
-    targets are dedup'd with a sort, and the index buffer is donated: no
-    per-read Python loop and no full-matrix copy per read.
+    A thin call into :mod:`repro.index.ingest`: locations for the whole
+    batch are vmapped in-graph, duplicate (row, file) targets are dedup'd
+    with a sort, and the index buffer is donated — no per-read Python loop
+    and no full-matrix copy per read. ``backend`` picks the shared
+    executor: ``"jnp"`` (reference scatter), ``"idl_insert"`` (host-planned
+    Pallas run kernel, one launch per batch) or ``"sharded"`` (``shard_map``
+    splitting the file-words axis; kw ``mesh``).
     """
-    return packed.insert_batch_bitsliced(
-        index, reads, jnp.asarray(file_ids),
-        cfg=cfg.idl_config(), scheme=cfg.scheme, lane32=True,
-    )
+    plan = insert_plan(cfg, reads.shape[0], index.shape,
+                       read_len=reads.shape[1])
+    return plan.execute(
+        index, reads, jnp.asarray(file_ids), backend=backend, **kw)
+
+
+def build_archive(
+    cfg: GeneSearchConfig, files, *, backend: str = "jnp", **kw
+) -> jax.Array:
+    """Stream a whole archive into a fresh serving index.
+
+    Drives :func:`repro.index.ingest.build_archive` over the protocol-level
+    ``BitSlicedIndex`` engine and returns the raw ``(m, n_files/32)``
+    serving matrix. Accepts the builder's knobs (``chunk_reads``, ``mesh``,
+    ``window_min``, ...).
+    """
+    from repro.index.engines import BitSlicedIndex
+
+    eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme, cfg.n_files)
+    eng = ingest.build_archive(
+        eng, files, read_len=cfg.read_len, backend=backend, **kw)
+    return eng.words
 
 
 def insert_read(

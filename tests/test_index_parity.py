@@ -336,14 +336,16 @@ class TestBitSlicedEngineParity:
 
 class TestBatchedInsert:
     def test_64_reads_one_jit_call_and_sequential_parity(self, rng):
+        from repro.index import ingest
+
         cfg = _cfg(True)
         reads = jnp.asarray(rng.integers(0, 4, size=(64, 230), dtype=np.uint8))
-        packed.insert_batch_words.clear_cache()
+        ingest._execute_jnp.clear_cache()
         eng = PackedBloomIndex.build(cfg, "idl").insert_batch(reads)
-        assert packed.insert_batch_words._cache_size() == 1  # one compilation
+        assert ingest._execute_jnp._cache_size() == 1  # one compilation
         eng2 = PackedBloomIndex.build(cfg, "idl").insert_batch(reads[:32])
         eng2 = eng2.insert_batch(reads[32:])
-        assert packed.insert_batch_words._cache_size() == 2  # new shape only
+        assert ingest._execute_jnp._cache_size() == 2  # new shape only
         np.testing.assert_array_equal(np.asarray(eng.words),
                                       np.asarray(eng2.words))
         # and equals one-read-at-a-time insertion

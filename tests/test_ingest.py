@@ -1,0 +1,291 @@
+"""Ingest-layer acceptance: every engine's ``insert_batch`` (and
+``serving.insert_read_batch``) routes through ``ingest.InsertPlan``; the
+``idl_insert`` and ``sharded`` backends are bit-identical to the ``jnp``
+reference across 4 engines × {idl, rh, lsh} under interleaved insert/query
+rounds; the legacy ``packed.insert_batch_*`` entry points warn; streaming
+archive builds are bit-identical to direct batch inserts; minimizer
+sub-sampling inserts a strict subset."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.data import genome
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    ingest,
+    packed,
+    query,
+)
+from repro.serving import genesearch as gs
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+SCHEMES = ["idl", "rh", "lsh"]
+BACKENDS = ["jnp", "idl_insert", "sharded"]
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+def _empty_engine(name: str, scheme: str, n_files: int):
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme)
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150, 90, 400, 250][:n_files], _cfg(), scheme=scheme,
+            n_groups=2)
+    if name == "rambo":
+        return RamboIndex.build(n_files, _cfg(1 << 14), scheme=scheme,
+                                B=2, R=2)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(_cfg(), scheme, n_files=n_files)
+    raise KeyError(name)
+
+
+def _words_of(eng):
+    if isinstance(eng, CobsIndex):
+        return [np.asarray(g.words) for g in eng.groups]
+    return [np.asarray(eng.words)]
+
+
+@pytest.fixture(scope="module")
+def reads():
+    r = np.random.default_rng(11).integers(0, 4, size=(6, 120),
+                                           dtype=np.uint8)
+    return jnp.asarray(r)
+
+
+class TestInsertBackendParityMatrix:
+    """Acceptance matrix: 4 engines × {idl, rh, lsh} × {jnp, idl_insert,
+    sharded}, bit-identical ``words`` after interleaved insert/query rounds
+    (sharded on the default 1-device mesh here; the >1-device case is
+    skip-guarded below)."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    @pytest.mark.parametrize("scheme", SCHEMES)
+    @pytest.mark.parametrize("backend", ["idl_insert", "sharded"])
+    def test_backends_bit_identical_interleaved(self, reads, engine, scheme,
+                                                backend):
+        if engine == "bitsliced" and scheme == "lsh":
+            pytest.skip("lsh has no 32-bit lane path (bit-sliced engines "
+                        "run on the lane32 serving path)")
+        fids = np.arange(reads.shape[0], dtype=np.int32)
+        ref = _empty_engine(engine, scheme, reads.shape[0])
+        got = _empty_engine(engine, scheme, reads.shape[0])
+        for lo, hi in ((0, 3), (3, 6)):     # interleaved insert/query rounds
+            ref = ref.insert_batch(reads[lo:hi], fids[lo:hi])
+            got = got.insert_batch(reads[lo:hi], fids[lo:hi],
+                                   backend=backend)
+            for a, b in zip(_words_of(got), _words_of(ref)):
+                np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(
+                np.asarray(got.query_batch(reads)),
+                np.asarray(ref.query_batch(reads)))
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_idl_insert_ref_oracle_matches_kernel(self, reads, engine):
+        fids = np.arange(reads.shape[0], dtype=np.int32)
+        a = _empty_engine(engine, "idl", reads.shape[0]).insert_batch(
+            reads, fids, backend="idl_insert")
+        b = _empty_engine(engine, "idl", reads.shape[0]).insert_batch(
+            reads, fids, backend="idl_insert", use_ref=True)
+        for wa, wb in zip(_words_of(a), _words_of(b)):
+            np.testing.assert_array_equal(wa, wb)
+
+    def test_serving_insert_backends(self, reads):
+        cfg = gs.GeneSearchConfig(n_files=32, m=1 << 16, L=1 << 10,
+                                  read_len=120, eta=2)
+        fids = np.asarray([0, 7, 13, 21, 30, 31], dtype=np.int32)
+        want = np.asarray(gs.insert_read_batch(
+            gs.empty_index(cfg), cfg, reads, fids))
+        for backend in ("idl_insert", "sharded"):
+            got = np.asarray(gs.insert_read_batch(
+                gs.empty_index(cfg), cfg, reads, fids, backend=backend))
+            np.testing.assert_array_equal(got, want)
+
+    def test_unknown_backend_raises(self, reads):
+        eng = _empty_engine("bloom", "idl", 1)
+        with pytest.raises(ValueError, match="unknown ingest backend"):
+            eng.insert_batch(reads, backend="sse2")
+
+    def test_idl_insert_compile_cache_bounded(self):
+        # both data-dependent sizes (run count, slot count) are pow2-padded,
+        # so streaming many same-shaped batches through the planned backend
+        # compiles a handful of bucket shapes, not one per batch
+        from repro.kernels.idl_insert import ops as ins_ops
+
+        cfg = _cfg()
+        ins_ops._planned_insert.clear_cache()
+        for seed in range(5):
+            reads = jnp.asarray(np.random.default_rng(seed).integers(
+                0, 4, size=(3, 120), dtype=np.uint8))
+            PackedBloomIndex.build(cfg, "idl").insert_batch(
+                reads, backend="idl_insert")
+        assert ins_ops._planned_insert._cache_size() <= 3
+
+    def test_plans_are_cached(self, reads):
+        ingest.clear_plan_cache()
+        eng = _empty_engine("bloom", "idl", 1)
+        eng = eng.insert_batch(reads)
+        assert ingest.plan_cache_info().currsize == 1
+        eng = eng.insert_batch(reads, backend="sharded")  # same geometry
+        eng = eng.insert_batch(reads, backend="idl_insert")
+        assert ingest.plan_cache_info().currsize == 1
+        assert ingest.plan_cache_info().hits >= 2
+
+    @pytest.mark.skipif(jax.device_count() < 2,
+                        reason="needs a multi-device mesh")
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_sharded_multi_device(self, reads, engine):
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.asarray(jax.devices()), (query.MESH_AXIS,))
+        fids = np.arange(reads.shape[0], dtype=np.int32)
+        ref = _empty_engine(engine, "idl", reads.shape[0]).insert_batch(
+            reads, fids)
+        got = _empty_engine(engine, "idl", reads.shape[0]).insert_batch(
+            reads, fids, backend="sharded", mesh=mesh)
+        for a, b in zip(_words_of(got), _words_of(ref)):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestDeprecatedPackedEntryPoints:
+    def test_legacy_insert_batch_warn_and_match(self, reads):
+        cfg = _cfg()
+        with pytest.warns(DeprecationWarning, match="InsertPlan"):
+            words = packed.insert_batch_words(
+                jnp.zeros((cfg.m // 32,), dtype=jnp.uint32), reads,
+                cfg=cfg, scheme="idl")
+        np.testing.assert_array_equal(
+            np.asarray(words),
+            np.asarray(PackedBloomIndex.build(cfg, "idl")
+                       .insert_batch(reads).words))
+        with pytest.warns(DeprecationWarning, match="InsertPlan"):
+            packed.insert_batch_bitsliced(
+                jnp.zeros((cfg.m, 1), dtype=jnp.uint32), reads,
+                jnp.arange(reads.shape[0], dtype=jnp.int32),
+                cfg=cfg, scheme="idl")
+        with pytest.warns(DeprecationWarning, match="InsertPlan"):
+            packed.insert_batch_rows(
+                jnp.zeros((4, cfg.m // 32), dtype=jnp.uint32), reads,
+                jnp.zeros((reads.shape[0], 2), dtype=jnp.int32),
+                cfg=cfg, scheme="idl")
+
+    def test_engine_path_does_not_warn(self, reads):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            _empty_engine("bloom", "idl", 1).insert_batch(reads)
+            _empty_engine("rambo", "idl", reads.shape[0]).insert_batch(
+                reads, np.arange(reads.shape[0]))
+
+    def test_coverage_need_single_definition(self):
+        assert packed.coverage_need is query.coverage_need
+
+
+class TestBuildArchive:
+    @pytest.fixture(scope="class")
+    def archive(self):
+        return genome.synth_archive(n_files=5, genome_len=700, seed=3)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_bit_identical_to_direct_insert(self, archive, backend):
+        cfg = _cfg()
+        genomes = jnp.asarray(np.stack([f.genome for f in archive]))
+        want = BitSlicedIndex.build(cfg, "idl", n_files=5).insert_batch(
+            genomes, np.arange(5))
+        got = ingest.build_archive(
+            BitSlicedIndex.build(cfg, "idl", n_files=5), archive,
+            read_len=230, chunk_reads=4, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got.words),
+                                      np.asarray(want.words))
+
+    def test_every_engine_and_ragged_lengths(self, archive):
+        # a short ragged file (no full window) + pairs as input items
+        items = [(f.file_id, f.genome) for f in archive]
+        items.append((5, genome.synthesize_genome(150, seed=99)))
+        for name in ENGINES:
+            eng = _empty_engine(name, "idl", 6)
+            eng = ingest.build_archive(eng, items, read_len=230,
+                                       chunk_reads=3)
+            ref = _empty_engine(name, "idl", 6)
+            for fid, codes in items:
+                ref = ref.insert_batch(
+                    jnp.asarray(codes)[None, :], np.asarray([fid]))
+            for a, b in zip(_words_of(eng), _words_of(ref)):
+                np.testing.assert_array_equal(a, b)
+
+    def test_fasta_path_input(self, archive, tmp_path):
+        cfg = _cfg()
+        path = str(tmp_path / "arc.fasta")
+        genome.write_fasta(
+            path, {f"g{i}": f.genome for i, f in enumerate(archive[:2])})
+        eng = ingest.build_archive(
+            PackedBloomIndex.build(cfg, "idl"), [path], read_len=230)
+        ref = PackedBloomIndex.build(cfg, "idl").insert_batch(
+            jnp.asarray(np.stack([f.genome for f in archive[:2]])))
+        np.testing.assert_array_equal(np.asarray(eng.words),
+                                      np.asarray(ref.words))
+
+    def test_window_reads_covers_all_kmers(self):
+        codes = genome.synthesize_genome(1000, seed=5)
+        wins = genome.window_reads(codes, 230, 31)
+        got = set()
+        for w in wins:
+            for i in range(len(w) - 30):
+                got.add(bytes(w[i:i + 31]))
+        want = {bytes(codes[i:i + 31]) for i in range(len(codes) - 30)}
+        assert got == want
+        assert genome.window_reads(codes[:20], 230, 31).shape[0] == 0
+
+    def test_window_min_subsamples(self, archive):
+        cfg = _cfg()
+        genomes = jnp.asarray(np.stack([f.genome for f in archive]))
+        full = PackedBloomIndex.build(cfg, "idl").insert_batch(genomes)
+        mini = PackedBloomIndex.build(cfg, "idl").insert_batch(
+            genomes, window_min=8)
+        wf, wm = np.asarray(full.words), np.asarray(mini.words)
+        pop_f = int(np.unpackbits(wf.view(np.uint8)).sum())
+        pop_m = int(np.unpackbits(wm.view(np.uint8)).sum())
+        assert np.array_equal(wf & wm, wm)      # strict subset of the bits
+        assert 0 < pop_m < pop_f
+        # the subsample is deterministic and backend-independent
+        for backend in ("idl_insert", "sharded"):
+            again = PackedBloomIndex.build(cfg, "idl").insert_batch(
+                genomes, window_min=8, backend=backend)
+            np.testing.assert_array_equal(np.asarray(again.words), wm)
+
+
+class TestInsertPlanMetrics:
+    def test_idl_needs_fewer_tiles_than_rh(self):
+        # paper-scale geometry (m/L = 2048 tiles): RH scatters a batch over
+        # ~every tile, IDL's windows keep the touched-tile footprint small
+        cfg = idl.IDLConfig(k=31, t=16, L=1 << 15, eta=4, m=1 << 26)
+        reads = jnp.asarray(np.random.default_rng(0).integers(
+            0, 4, size=(4, 230), dtype=np.uint8))
+        plans = {}
+        for scheme in ("idl", "rh"):
+            p = ingest.plan_insert(cfg, scheme, reads.shape,
+                                   (cfg.m // 32, 1), kind="bits")
+            plans[scheme] = p.plan_runs(reads)
+        assert plans["rh"].n_tiles > 4 * plans["idl"].n_tiles
+        assert plans["rh"].dma_bytes > 4 * plans["idl"].dma_bytes
+
+    def test_short_reads_keep_all_kmers_and_dma_accounting(self):
+        cfg = _cfg()
+        reads = jnp.asarray(np.random.default_rng(1).integers(
+            0, 4, size=(1, 40), dtype=np.uint8))
+        # minimizer window longer than the kmer count keeps everything
+        plan = ingest.plan_insert(cfg, "idl", reads.shape,
+                                  (cfg.m // 32, 1), kind="bits",
+                                  window_min=1 << 10)
+        rplan = plan.plan_runs(reads)
+        assert rplan is not None and rplan.n_locs > 0
+        assert plan.run_dma_bytes(rplan) == rplan.dma_bytes
