@@ -1,0 +1,141 @@
+"""Serving-v2 benchmark: requests/sec and latency under ragged streams.
+
+Drives :class:`repro.serving.service.GeneSearchService` over a bit-sliced
+archive index with a mixed-length request stream (short amplicon reads up
+to full-length reads, three pow2 kmer buckets) and reports:
+
+* **throughput** — requests/sec of the steady-state stream (median wall of
+  the whole stream via the hardened ``benchmarks.common.timeit`` harness);
+* **latency** — per-request p50/p95 in ms (each request charged the wall
+  of the batch that served it — what a caller actually waits);
+* **batching** — bucket occupancy, padding waste, and the compile-once
+  proof: each (bucket, backend) pair must show exactly ONE compiled
+  executable after the whole ragged stream.
+
+``--smoke`` (CI) runs a small config and asserts the service is
+bit-identical to direct engine ``msmt`` for both the ``jnp`` and
+``idl_probe`` backends, so serving can't silently drift from the engines.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+Writes ``BENCH_serve.json`` (full mode) next to the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core import idl
+from repro.data import genome
+from repro.index import BitSlicedIndex, ingest
+from repro.serving import GeneSearchService, ServiceConfig
+
+
+def _build_index(m: int, n_files: int, genome_len: int) -> BitSlicedIndex:
+    cfg = idl.IDLConfig(k=31, t=16, L=1 << 12, eta=3, m=m)
+    eng = BitSlicedIndex.build(cfg, "idl", n_files=n_files)
+    archive = genome.synth_archive(n_files=n_files, genome_len=genome_len,
+                                   seed=42)
+    return ingest.build_archive(eng, archive, read_len=230, chunk_reads=64)
+
+
+def _request_stream(archive_reads, n_requests: int, seed: int):
+    """Ragged stream: read lengths drawn from amplicon-to-full mix."""
+    rng = np.random.default_rng(seed)
+    lens = rng.choice([70, 110, 150, 230], size=n_requests,
+                      p=[0.3, 0.3, 0.2, 0.2])
+    picks = rng.integers(0, len(archive_reads), size=n_requests)
+    return [np.asarray(archive_reads[p][:n]) for p, n in zip(picks, lens)]
+
+
+def run(m: int, n_files: int, n_requests: int, iters: int,
+        backend: str) -> dict:
+    eng = _build_index(m, n_files, genome_len=3_000)
+    archive = genome.synth_archive(n_files=n_files, genome_len=3_000, seed=42)
+    pool = [f.reads(230, 4)[i % 4] for i, f in enumerate(archive)]
+    stream = _request_stream(pool, n_requests, seed=7)
+    svc = GeneSearchService(eng, ServiceConfig(backend=backend, max_batch=16))
+
+    def serve_stream():
+        svc.search(stream)
+        return svc.state.words[0]          # block target for the harness
+
+    stream_s = timeit(serve_stream, repeats=iters, warmup=2)
+    lat = np.asarray(svc.request_latencies_ms()[-n_requests:])
+    buckets = sorted({s.bucket for s in svc.batch_stats})
+    compiles = svc.compile_counts()
+    assert all(c == 1 for c in compiles.values()), (
+        f"a bucket recompiled: {compiles}")
+    return {
+        "config": {
+            "engine": "bitsliced", "scheme": "idl", "m": m,
+            "n_files": n_files, "n_requests": n_requests,
+            "backend": backend, "max_batch": 16,
+            "device": jax.default_backend(),
+        },
+        "throughput_rps": round(n_requests / stream_s, 1),
+        "latency_ms": {
+            "p50": round(float(np.percentile(lat, 50)), 3),
+            "p95": round(float(np.percentile(lat, 95)), 3),
+            "mean": round(float(lat.mean()), 3),
+        },
+        "batching": {
+            "buckets": buckets,
+            "compiles_per_bucket": {str(b): c for b, c in compiles.items()},
+            "occupancy": round(svc.occupancy(), 3),
+            "batches": len(svc.batch_stats),
+        },
+    }
+
+
+def _assert_parity(m: int) -> None:
+    """Service answers == direct engine msmt, jnp and idl_probe backends."""
+    eng = _build_index(m, n_files=16, genome_len=1_200)
+    archive = genome.synth_archive(n_files=16, genome_len=1_200, seed=42)
+    stream = _request_stream([f.reads(230, 2)[0] for f in archive], 12,
+                             seed=3)
+    for backend in ("jnp", "idl_probe"):
+        svc = GeneSearchService(eng, ServiceConfig(backend=backend,
+                                                   max_batch=4))
+        for q, res in zip(stream, svc.search(stream)):
+            want = np.asarray(eng.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+        assert all(c == 1 for c in svc.compile_counts().values())
+    print("parity: service == engine msmt (jnp, idl_probe); "
+          "one compile per bucket")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config; assert parity; no JSON written")
+    args = ap.parse_args()
+
+    if args.smoke:
+        _assert_parity(m=1 << 18)
+        res = run(m=1 << 18, n_files=16, n_requests=24, iters=2,
+                  backend="jnp")
+        print("smoke:", json.dumps(res["latency_ms"]))
+        return
+
+    _assert_parity(m=1 << 20)
+    res = {
+        backend: run(m=1 << 21, n_files=64, n_requests=96, iters=3,
+                     backend=backend)
+        for backend in ("jnp", "idl_probe")
+    }
+    out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    out_path.write_text(json.dumps(res, indent=2) + "\n")
+    print(json.dumps(res, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

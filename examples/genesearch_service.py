@@ -1,68 +1,91 @@
-"""End-to-end gene-search service: stream an archive of genome files into
-a bit-sliced MSMT index through the shared ingest layer (one loop of
-jit-compiled, donated, chunked inserts — the same builder that handles
-FASTA archives of any size), then serve batched queries (the paper's COBS
-workload, via the TPU-lowerable serve_step).
+"""End-to-end gene-search service, serving-v2 edition: stream an archive
+into a bit-sliced MSMT index (shared ingest layer), snapshot it to disk
+(versioned store), boot a :class:`GeneSearchService` straight from the
+snapshot, and serve a RAGGED query stream — reads of many lengths — through
+pow2 shape buckets, so the whole stream compiles once per bucket instead of
+once per length.
 
     PYTHONPATH=src python examples/genesearch_service.py
 """
 
+import tempfile
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import idl
 from repro.data import genome
-from repro.serving import genesearch as gs
+from repro.index import BitSlicedIndex, ingest, store
+from repro.serving import GeneSearchService, ServiceConfig
 
 
 def main() -> None:
-    cfg = gs.GeneSearchConfig(
-        n_files=64, m=1 << 20, k=31, t=16, L=1 << 12, eta=3, read_len=230,
-        scheme="idl")
-    archive = genome.synth_archive(n_files=cfg.n_files, genome_len=3_000,
-                                   seed=42)
+    n_files = 64
+    cfg = idl.IDLConfig(k=31, t=16, L=1 << 12, eta=3, m=1 << 20)
+    archive = genome.synth_archive(n_files=n_files, genome_len=3_000, seed=42)
 
-    print(f"indexing {cfg.n_files} genome files ...")
-    # the streaming archive builder: every genome is chopped into
-    # read_len windows overlapping by k-1 (no kmer lost), batched in
-    # chunks and fed to the cached InsertPlan — no per-read Python loop,
-    # no per-file full-matrix copy, one compile per window length
+    print(f"indexing {n_files} genome files ...")
+    # the streaming archive builder: every genome is chopped into read_len
+    # windows overlapping by k-1 (no kmer lost), batched in chunks and fed
+    # to the cached InsertPlan — one compile per window length
     t0 = time.perf_counter()
-    index = gs.build_archive(cfg, archive, chunk_reads=64)
-    index.block_until_ready()
+    eng = BitSlicedIndex.build(cfg, "idl", n_files=n_files)
+    eng = ingest.build_archive(eng, archive, read_len=230, chunk_reads=64)
+    state = eng.state
+    state.block_until_ready()
     print(f"  index built in {time.perf_counter() - t0:.1f}s "
-          f"({index.nbytes / 1e6:.1f} MB bit-sliced, streamed build_archive)")
+          f"({state.nbytes / 1e6:.1f} MB bit-sliced IndexState)")
 
-    # batched MSMT: queries are reads from known files + poisoned decoys
-    true_ids = [3, 17, 40, 59]
-    queries, labels = [], []
-    for fid in true_ids:
-        read = archive[fid].reads(cfg.read_len, 6)[5]
-        queries.append(read)
-        labels.append(fid)
-    decoys = genome.poison_queries(np.stack(queries), seed=7)
+    # persistence: versioned snapshot -> disk -> snapshot-backed service
+    with tempfile.TemporaryDirectory() as snap_dir:
+        store.save(state, snap_dir)
+        svc = GeneSearchService.from_snapshot(
+            snap_dir, ServiceConfig(theta=1.0, max_batch=8))
+        print(f"  snapshot saved + service booted from {snap_dir!r}")
 
-    serve = jax.jit(lambda i, q: gs.serve_step(i, q, cfg))
-    out = serve(index, jnp.asarray(np.stack(queries)))
-    out_decoy = serve(index, jnp.asarray(decoys))
+        # ragged query stream: full reads, amplicon-length fragments and
+        # poisoned decoys — the service buckets them by kmer count
+        true_ids = [3, 17, 40, 59]
+        queries, labels = [], []
+        for i, fid in enumerate(true_ids):
+            read = archive[fid].reads(230, 6)[5]
+            frag_len = (80, 120, 160, 230)[i % 4]
+            queries.append(np.asarray(read[:frag_len]))
+            labels.append(fid)
+        decoys = [np.asarray(d) for d in
+                  genome.poison_queries(np.stack([q[:80] for q in queries]),
+                                        seed=7)]
 
-    hits = misses = fps = 0
-    for i, fid in enumerate(labels):
-        got = gs.match_file_ids(np.asarray(out[i]))
-        hits += int(fid in got)
-        fps += len(got) - int(fid in got)
-        got_d = gs.match_file_ids(np.asarray(out_decoy[i]))
-        misses += len(got_d)
-        print(f"query from file {fid:2d}: matched {got}; poisoned -> {got_d}")
-    print(f"recall {hits}/{len(labels)}, false positives {fps}, "
-          f"poisoned matches {misses}")
+        results = svc.search(queries + decoys)
+        hits = fps = decoy_hits = 0
+        for i, fid in enumerate(labels):
+            got = results[i].file_ids
+            hits += int(fid in got)
+            fps += len(got) - int(fid in got)
+            got_d = results[len(labels) + i].file_ids
+            decoy_hits += len(got_d)
+            print(f"query from file {fid:2d} (len {len(queries[i])}, "
+                  f"bucket {results[i].bucket}): matched {list(got)}; "
+                  f"poisoned -> {list(got_d)}")
+        print(f"recall {hits}/{len(labels)}, false positives {fps}, "
+              f"poisoned matches {decoy_hits}")
 
-    t0 = time.perf_counter()
-    serve(index, jnp.asarray(np.stack(queries))).block_until_ready()
-    print(f"serve_step latency (batch=4): "
-          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+        # serving telemetry: one compile per (bucket, backend), occupancy,
+        # per-request latency
+        lat = np.asarray(svc.request_latencies_ms())
+        print(f"buckets/compiles: {svc.compile_counts()} "
+              f"(ragged stream, compiled once per bucket)")
+        print(f"occupancy {svc.occupancy():.2f}, "
+              f"latency p50 {np.percentile(lat, 50):.1f} ms "
+              f"p95 {np.percentile(lat, 95):.1f} ms")
+
+        # the direct engine view answers identically (bit-exact parity)
+        view = store.load_engine(snap_dir)
+        q0 = jnp.asarray(queries[0])[None]
+        same = bool(np.all(np.asarray(view.msmt(q0))[0]
+                           == np.asarray(results[0].matches)))
+        print(f"snapshot engine view agrees with the service: {same}")
 
 
 if __name__ == "__main__":

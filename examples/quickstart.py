@@ -59,6 +59,25 @@ def main() -> None:
     print(f"idl_insert backend agrees: "
           f"{bool(jnp.all(bf2.words == bf.words))}")
 
+    # 6. protocol v2: the engine is a thin view over a pytree IndexState —
+    #    snapshot it to disk and serve ragged-length queries through the
+    #    dynamic-batching service (one compile per pow2 kmer bucket)
+    import tempfile
+
+    from repro.index import store
+    from repro.serving import GeneSearchService, ServiceConfig
+
+    with tempfile.TemporaryDirectory() as snap:
+        store.save(bf.state, snap)                 # versioned snapshot
+        svc = GeneSearchService.from_snapshot(snap, ServiceConfig())
+        ragged = [np.asarray(reads[0]), np.asarray(reads[1][:120]),
+                  np.asarray(reads[2][:90])]
+        results = svc.search(ragged)
+        print("served ragged lengths "
+              f"{[len(q) for q in ragged]} -> matches "
+              f"{[bool(r.matches) for r in results]} "
+              f"(buckets/compiles: {svc.compile_counts()})")
+
 
 if __name__ == "__main__":
     main()

@@ -1,18 +1,21 @@
 """Unified gene-sequence index subsystem.
 
-One protocol (:class:`GeneIndex`), one hash-family registry
+One protocol (:class:`GeneIndex`, v2: engines are views over a pytree
+:class:`IndexState` — :mod:`repro.index.state`), one hash-family registry
 (:mod:`repro.index.registry`), one packed-word storage layer
 (:mod:`repro.index.packed`), one shared query planner/executor
 (:mod:`repro.index.query` — jnp / Pallas / sharded backends), one shared
 ingest planner/executor with a streaming archive builder
 (:mod:`repro.index.ingest` — jnp / Pallas / sharded backends,
-``build_archive``), four engines (:mod:`repro.index.engines`). See
-docs/API.md for the full API and migration notes from the deprecated
+``build_archive``), one versioned snapshot store
+(:mod:`repro.index.store` — ``save``/``load`` round-trip every engine
+bit-exactly), four engines (:mod:`repro.index.engines`). See docs/API.md
+for the full API and migration notes from the deprecated
 ``core.bloom.BloomFilter`` / ``core.cobs.Cobs`` / ``core.rambo.Rambo``
 classes.
 """
 
-from repro.index import ingest, packed, query, registry
+from repro.index import ingest, packed, query, registry, state, store
 from repro.index.engines import (
     BitSlicedIndex,
     CobsIndex,
@@ -23,16 +26,22 @@ from repro.index.ingest import InsertPlan, build_archive, plan_insert
 from repro.index.protocol import GeneIndex
 from repro.index.query import QueryPlan, plan_query
 from repro.index.registry import HashScheme
+from repro.index.state import IndexState, StaleIndexError, StateMeta
+from repro.index.store import SnapshotError
 
 __all__ = [
     "BitSlicedIndex",
     "CobsIndex",
     "GeneIndex",
     "HashScheme",
+    "IndexState",
     "InsertPlan",
     "PackedBloomIndex",
     "QueryPlan",
     "RamboIndex",
+    "SnapshotError",
+    "StaleIndexError",
+    "StateMeta",
     "build_archive",
     "ingest",
     "packed",
@@ -40,4 +49,6 @@ __all__ = [
     "plan_query",
     "query",
     "registry",
+    "state",
+    "store",
 ]

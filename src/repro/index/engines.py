@@ -10,9 +10,13 @@ BitSlicedIndex         single bit-sliced matrix: ``(m, ⌈F/32⌉)`` (serving)
 =====================  =====================================================
 
 All engines resolve their hash family by name through
-:mod:`repro.index.registry`. Engines are immutable dataclasses;
-``insert_batch`` returns a new value and donates the old buffer (linear
-use — keep only the returned index).
+:mod:`repro.index.registry`. Engines are immutable dataclasses and thin
+*views* over a :class:`repro.index.state.IndexState` pytree (``.state`` /
+``.with_state()`` — protocol v2); ``insert_batch`` returns a new value and
+donates the old buffer (linear use). The donated input is marked consumed:
+using it again raises :class:`repro.index.state.StaleIndexError` with a
+clear message instead of a backend-dependent deleted-buffer crash; pass
+``donate=False`` to keep the input alive at the cost of one copy.
 
 Both data paths route through shared planner/executor layers that treat
 every engine's storage as a packed ``(n_rows, W)`` bit-matrix:
@@ -41,11 +45,30 @@ import numpy as np
 
 from repro.core import hashing, idl as idl_mod
 from repro.index import ingest, packed, query
+from repro.index import state as state_mod
 
 
 def _as_batch(reads: jax.Array) -> jax.Array:
     reads = jnp.asarray(reads)
     return reads[None, :] if reads.ndim == 1 else reads
+
+
+class _StateView:
+    """Protocol-v2 mixin: every engine is a thin view over an IndexState."""
+
+    @property
+    def state(self) -> state_mod.IndexState:
+        """The pytree-native storage behind this view."""
+        return state_mod.from_engine(self)
+
+    def with_state(self, state: state_mod.IndexState):
+        """Rebuild an engine view over ``state`` (same kind required)."""
+        kind = state_mod.from_engine(self).meta.engine
+        if state.meta.engine != kind:
+            raise ValueError(
+                f"with_state: state is for engine {state.meta.engine!r}, "
+                f"this view is {kind!r}")
+        return state_mod.to_engine(state)
 
 
 def _as_file_ids(file_ids, batch: int) -> np.ndarray:
@@ -62,7 +85,7 @@ def _as_file_ids(file_ids, batch: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class PackedBloomIndex:
+class PackedBloomIndex(_StateView):
     """Single-set partitioned BF over any registered hash scheme."""
 
     cfg: idl_mod.IDLConfig
@@ -89,14 +112,21 @@ class PackedBloomIndex:
         "sharded"}, plus ``mesh`` / ``interpret`` / ``use_ref`` /
         ``window_min`` passthroughs. All backends are bit-identical
         (``window_min`` sub-sampling excepted — it inserts fewer kmers).
+        ``donate=True`` (default) donates this value's buffer and marks it
+        consumed — keep only the returned index; ``donate=False`` keeps
+        this value usable (one extra copy).
         """
         del file_ids
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         plan = ingest.plan_insert(
             self.cfg, self.scheme, reads.shape, (self.cfg.m // 32, 1),
             kind="bits", window_min=kw.pop("window_min", None),
         )
-        words = plan.execute(self.words, reads, **kw)
+        donate = kw.pop("donate", True)
+        words = plan.execute(self.words, reads, donate=donate, **kw)
+        if donate:
+            state_mod.mark_consumed(self)
         return dataclasses.replace(self, words=words)
 
     def _plan(self, reads: jax.Array) -> query.QueryPlan:
@@ -116,6 +146,7 @@ class PackedBloomIndex:
         ``"sharded"`` (``shard_map`` over kw ``mesh``, default the full
         1-D device mesh).
         """
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         vals = self._plan(reads).execute(
             self.words, reads, backend=backend, **kw
@@ -159,7 +190,7 @@ class CobsGroupState:
 
 
 @dataclasses.dataclass(frozen=True)
-class CobsIndex:
+class CobsIndex(_StateView):
     """Size-grouped bit-sliced filters over N files (BIGSI/COBS layout)."""
 
     groups: tuple[CobsGroupState, ...]
@@ -212,11 +243,15 @@ class CobsIndex:
         """Index reads into their files' group columns (one scatter/group).
 
         Keyword args pick the shared ingest executor (see
-        :mod:`repro.index.ingest`).
+        :mod:`repro.index.ingest`); ``donate=False`` keeps this value
+        usable after the insert.
         """
+        state_mod.ensure_live(self, *(g.words for g in self.groups),
+                              what="engine")
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
         window_min = kw.pop("window_min", None)
+        donate = kw.pop("donate", True)
         slots = [self._slot(int(f)) for f in fids]
         groups = list(self.groups)
         for gi in sorted({gi for gi, _ in slots}):
@@ -229,12 +264,16 @@ class CobsIndex:
                 g.cfg, self.scheme, sub.shape, g.words.shape,
                 kind="cols", window_min=window_min,
             )
-            words = plan.execute(g.words, sub, cols, **kw)
+            words = plan.execute(g.words, sub, cols, donate=donate, **kw)
             groups[gi] = dataclasses.replace(g, words=words)
+        if donate:
+            state_mod.mark_consumed(self)
         return dataclasses.replace(self, groups=tuple(groups))
 
     def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers, n_files) bool MSMT kmer slices (Definition 3)."""
+        state_mod.ensure_live(self, *(g.words for g in self.groups),
+                              what="engine")
         reads = _as_batch(reads)
         n_k = reads.shape[1] - self.k + 1
         out = jnp.zeros((reads.shape[0], n_k, self.n_files), dtype=bool)
@@ -285,7 +324,7 @@ def rambo_assignment(n_files: int, n_buckets: int, n_rep: int) -> np.ndarray:
 
 
 @dataclasses.dataclass(frozen=True)
-class RamboIndex:
+class RamboIndex(_StateView):
     """B buckets × R repetitions of merged BFs; sub-linear MSMT."""
 
     cfg: idl_mod.IDLConfig                 # cfg.m = bits per bucket BF
@@ -337,13 +376,18 @@ class RamboIndex:
 
     def insert_batch(self, reads, file_ids=None, **kw) -> "RamboIndex":
         """Index reads into their R bucket filters (shared ingest layer)."""
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
         plan = ingest.plan_insert(
             self.cfg, self.scheme, reads.shape, self.words.shape,
             kind="rows", window_min=kw.pop("window_min", None),
         )
-        words = plan.execute(self.words, reads, self._filter_rows(fids), **kw)
+        donate = kw.pop("donate", True)
+        words = plan.execute(self.words, reads, self._filter_rows(fids),
+                             donate=donate, **kw)
+        if donate:
+            state_mod.mark_consumed(self)
         return dataclasses.replace(self, words=words)
 
     def query_grid(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
@@ -353,6 +397,7 @@ class RamboIndex:
         ``(m/32, R·B)`` bit-matrix: every location resolves all buckets'
         bits from a single gathered row of the shared query layer.
         """
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         rb = self.n_rep * self.n_buckets
         plan = query.plan_query(
@@ -386,7 +431,7 @@ class RamboIndex:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class BitSlicedIndex:
+class BitSlicedIndex(_StateView):
     """One bit-sliced (m, F/32) matrix queried on the TPU 32-bit lane path."""
 
     cfg: idl_mod.IDLConfig
@@ -409,17 +454,23 @@ class BitSlicedIndex:
 
     def insert_batch(self, reads, file_ids=None, **kw) -> "BitSlicedIndex":
         """Index reads into their file columns (shared ingest layer)."""
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         fids = _as_file_ids(file_ids, reads.shape[0])
         plan = ingest.plan_insert(
             self.cfg, self.scheme, reads.shape, self.words.shape,
             kind="cols", lane32=True, window_min=kw.pop("window_min", None),
         )
-        words = plan.execute(self.words, reads, jnp.asarray(fids), **kw)
+        donate = kw.pop("donate", True)
+        words = plan.execute(self.words, reads, jnp.asarray(fids),
+                             donate=donate, **kw)
+        if donate:
+            state_mod.mark_consumed(self)
         return dataclasses.replace(self, words=words)
 
     def query_batch(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
         """(B, n_kmers, F/32) uint32 per-kmer file masks (packed)."""
+        state_mod.ensure_live(self, self.words, what="engine")
         reads = _as_batch(reads)
         plan = query.plan_query(
             self.cfg, self.scheme, reads.shape, self.words.shape,

@@ -220,13 +220,18 @@ class InsertPlan:
         interpret: Optional[bool] = None,
         use_ref: bool = False,
         mesh: Optional[Mesh] = None,
+        donate: bool = True,
     ) -> jax.Array:
         """Scatter-OR the batch into ``matrix``; returns the updated matrix.
 
         ``matrix`` may be 1-D when ``W == 1`` (flat packed BF); the result
         always has the input's shape. The destination buffer is donated on
-        the ``jnp`` and ``idl_insert`` backends — use linearly.
+        the ``jnp`` and ``idl_insert`` backends — use linearly, or pass
+        ``donate=False`` to scatter into a private copy and keep the input
+        buffer alive (one extra device copy; same compiled executable).
         """
+        if not donate:
+            matrix = jnp.array(matrix, copy=True)
         if backend == "jnp":
             return _execute_jnp(matrix, reads, aux, plan=self)
         if backend == "idl_insert":

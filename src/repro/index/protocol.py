@@ -27,20 +27,44 @@ Engines are immutable: ``insert_batch`` returns a new index value whose
 storage buffer was donated from the old one (linear-use style — keep only
 the returned index). Hash families are resolved by name through
 :mod:`repro.index.registry`; an engine never hard-codes a scheme.
+
+**Protocol v2** makes the storage itself first-class: every engine is a
+thin view over a :class:`repro.index.state.IndexState` — a registered
+pytree whose leaves are the packed ``(n_rows, W)`` uint32 word matrices
+and whose aux data is the static geometry. ``.state`` extracts it,
+``.with_state(state)`` rebuilds a view, and the pure functions
+``state.insert / state.query / state.msmt`` mirror the methods without an
+object in sight — so a whole index can be jitted over, sharded,
+snapshotted (:mod:`repro.index.store`) and served
+(:mod:`repro.serving.service`) as a plain JAX value. Donation discipline
+is enforced by the state layer: a consumed (donated-away) value raises
+``state.StaleIndexError`` instead of crashing on a deleted buffer.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Protocol, runtime_checkable
+from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
 
 import jax
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.index.state import IndexState
 
 
 @runtime_checkable
 class GeneIndex(Protocol):
-    """Structural protocol shared by all index engines."""
+    """Structural protocol shared by all index engines (v2)."""
 
     scheme: str
+
+    @property
+    def state(self) -> "IndexState":
+        """The pytree-native storage behind this view."""
+        ...
+
+    def with_state(self, state: "IndexState") -> "GeneIndex":
+        """Rebuild an engine view of the same kind over ``state``."""
+        ...
 
     def insert_batch(
         self, reads: jax.Array, file_ids: Optional[jax.Array] = None

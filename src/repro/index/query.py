@@ -361,28 +361,71 @@ def _sharded_executor(plan: QueryPlan, mesh: Mesh):
 # ---------------------------------------------------------------------------
 
 def coverage_need(theta: float, n_kmers: int) -> int:
-    """Integer hit threshold for kmer-coverage >= theta (exact at 1.0)."""
+    """Integer hit threshold for kmer-coverage >= theta (exact at 1.0).
+
+    The ONE definition of the theta rule — engines, ``serve_step`` and the
+    v2 serving layer all resolve their thresholds here (host-side, exact
+    float64; an in-graph f32 ``theta * n`` can flip boundary thetas).
+    """
     return int(np.ceil(theta * n_kmers - 1e-9))
 
 
-def member_coverage(member: jax.Array, theta: float) -> jax.Array:
-    """(B, n_kmers[, ...]) bool kmer hits -> (B[, ...]) bool coverage >= θ."""
-    need = coverage_need(theta, member.shape[1])
-    return jnp.sum(member.astype(jnp.int32), axis=1) >= need
+def _need_threshold(theta, n_kmers: int, need, lead_ndim: int):
+    """Resolve ``need`` to something comparable against (B, ...) hit counts.
+
+    ``need=None``: the scalar host-side :func:`coverage_need` of the full
+    kmer axis. Otherwise a (B,) int array of per-row thresholds (the padded
+    serving path: each row's threshold comes from its TRUE kmer count),
+    reshaped to broadcast over ``lead_ndim`` trailing hit dimensions.
+    """
+    if need is None:
+        return coverage_need(theta, n_kmers)
+    need = jnp.asarray(need, dtype=jnp.int32)
+    return need.reshape(need.shape + (1,) * lead_ndim)
 
 
-def file_match_mask(per_kmer: jax.Array, theta: float) -> jax.Array:
+def member_coverage(member: jax.Array, theta: float = 1.0, *,
+                    valid: Optional[jax.Array] = None,
+                    need=None) -> jax.Array:
+    """(B, n_kmers[, ...]) bool kmer hits -> (B[, ...]) bool coverage >= θ.
+
+    ``valid``: optional (B, n_kmers) bool marking REAL kmers — padding
+    slots of a shape-bucketed batch are excluded from the hit count.
+    ``need``: optional (B,) int32 per-row hit thresholds overriding theta
+    (each padded row keeps the threshold of its true, unpadded length).
+    """
+    hits = member.astype(jnp.int32)
+    if valid is not None:
+        v = valid.astype(jnp.int32)
+        hits = hits * v.reshape(v.shape + (1,) * (member.ndim - 2))
+    hits = jnp.sum(hits, axis=1)
+    return hits >= _need_threshold(theta, member.shape[1], need, hits.ndim - 1)
+
+
+def file_match_mask(per_kmer: jax.Array, theta: float = 1.0, *,
+                    valid: Optional[jax.Array] = None,
+                    need=None) -> jax.Array:
     """(B, n_kmers, W) uint32 kmer file-masks -> (B, W) uint32 match mask.
 
-    theta=1: pure AND over kmers. theta<1: per-file popcount against the
-    exact integer threshold (a float mean of n ones != 1.0 in f32 for many
-    n, which would flip boundary thetas).
+    theta=1: pure AND over kmers. theta<1 (or per-row ``need``): per-file
+    popcount against the exact integer threshold (a float mean of n ones
+    != 1.0 in f32 for many n, which would flip boundary thetas).
+
+    ``valid`` (B, n_kmers) bool marks real kmers of a shape-bucketed padded
+    batch: pad kmers are neutralized (all-ones under AND, zero hits under
+    popcount). ``need`` (B,) int32 gives per-row thresholds for rows whose
+    true kmer counts differ (see :func:`coverage_need`).
     """
-    if theta >= 1.0:
+    if theta >= 1.0 and need is None:
+        if valid is not None:
+            per_kmer = jnp.where(valid[..., None], per_kmer, _FULL)
         return jax.lax.reduce(per_kmer, _FULL, jax.lax.bitwise_and,
                               dimensions=(1,))
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = (per_kmer[..., None] >> shifts) & jnp.uint32(1)
+    if valid is not None:
+        bits = bits * valid[..., None, None].astype(jnp.uint32)
     hits = jnp.sum(bits.astype(jnp.int32), axis=1)          # (B, W, 32)
-    match = (hits >= coverage_need(theta, per_kmer.shape[1])).astype(jnp.uint32)
+    thresh = _need_threshold(theta, per_kmer.shape[1], need, hits.ndim - 1)
+    match = (hits >= thresh).astype(jnp.uint32)
     return jnp.sum(match << shifts, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,252 @@
+"""Functional index state — the pytree core of the ``GeneIndex`` v2 API.
+
+Every engine's storage is a set of packed ``(n_rows, W)`` uint32 matrices
+plus static geometry. :class:`IndexState` makes that explicit: the word
+matrices are pytree *leaves* (so a state jits, shards, donates and
+checkpoints like any other JAX value) and everything static — config,
+scheme, file grouping, RAMBO shape — lives in a hashable
+:class:`StateMeta` carried as aux data. On top sit three pure functions::
+
+    new_state = insert(state, reads, file_ids)   # linear: consumes `state`
+    member    = query(state, reads)
+    verdicts  = msmt(state, reads, theta)
+
+The engine classes (:mod:`repro.index.engines`) are thin *views* over a
+state: ``engine.state`` extracts it, ``engine.with_state(s)`` /
+:func:`to_engine` rebuild a view, and both directions are loss-free for
+all four engines (``tests/test_state.py``).
+
+Donation discipline lives HERE, not in user code. ``insert`` (and every
+engine's ``insert_batch``) donates the old buffers for a zero-copy
+update and then marks the input value *consumed*: touching it again
+raises :class:`StaleIndexError` with a clear message instead of the
+backend-dependent deleted-buffer crash the PR-3 API had ("never reuse a
+pre-insert engine" used to be a docstring footnote; now it is enforced).
+Pass ``donate=False`` to trade one buffer copy for a reusable input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import idl as idl_mod
+
+
+class StaleIndexError(RuntimeError):
+    """A donated (consumed) index value was used again."""
+
+
+_STALE_MSG = (
+    "this {what} was consumed by an insert: its storage buffer was donated "
+    "to the updated value, so only the *returned* index may be used "
+    "(linear-use style). Keep the result of insert()/insert_batch(), or "
+    "pass donate=False to keep the input alive at the cost of one copy."
+)
+
+
+def mark_consumed(obj) -> None:
+    """Flag a (frozen) index value as donated-away. Idempotent."""
+    object.__setattr__(obj, "_consumed", True)
+
+
+def ensure_live(obj, *arrays, what: str = "index value") -> None:
+    """Raise :class:`StaleIndexError` if ``obj`` was consumed by an insert.
+
+    Two layers: the explicit consumed flag (deterministic on every
+    backend — XLA:CPU ignores donation, so the buffers themselves stay
+    silently valid there) and the buffers' own ``is_deleted`` state (catches
+    aliased values on backends that really donate). Tracers are skipped:
+    inside a jit the linearity question is the caller's.
+    """
+    if getattr(obj, "_consumed", False):
+        raise StaleIndexError(_STALE_MSG.format(what=what))
+    for a in arrays:
+        if isinstance(a, jax.core.Tracer) or not isinstance(a, jax.Array):
+            continue
+        try:
+            deleted = a.is_deleted()
+        except Exception:  # noqa: BLE001 - defensive: liveness is advisory
+            deleted = False
+        if deleted:
+            raise StaleIndexError(_STALE_MSG.format(what=what))
+
+
+# ---------------------------------------------------------------------------
+# The state pytree.
+# ---------------------------------------------------------------------------
+
+ENGINES = ("bloom", "cobs", "rambo", "bitsliced")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateMeta:
+    """Hashable static half of an :class:`IndexState` (pytree aux data).
+
+    ``cfgs`` has one entry per words leaf (COBS: one per size group; every
+    other engine: exactly one). Engine-specific geometry is ``None`` where
+    it does not apply.
+    """
+
+    engine: str                                   # one of ENGINES
+    scheme: str
+    cfgs: Tuple[idl_mod.IDLConfig, ...]
+    n_files: Optional[int] = None                 # cobs / rambo / bitsliced
+    k: Optional[int] = None                       # cobs top-level kmer size
+    group_file_ids: Optional[Tuple[Tuple[int, ...], ...]] = None   # cobs
+    n_buckets: Optional[int] = None               # rambo B
+    n_rep: Optional[int] = None                   # rambo R
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine kind {self.engine!r} (want one of {ENGINES})"
+            )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class IndexState:
+    """Pytree-native index storage: word matrices as leaves, meta as aux."""
+
+    words: Tuple[jax.Array, ...]
+    meta: StateMeta
+
+    def tree_flatten(self):
+        return tuple(self.words), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        return cls(words=tuple(children), meta=meta)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(w.size) * 4 for w in self.words)
+
+    def block_until_ready(self) -> "IndexState":
+        for w in self.words:
+            jax.block_until_ready(w)
+        return self
+
+
+def kmer_size(meta: StateMeta) -> int:
+    """The kmer size every read/query against this state is cut into."""
+    return int(meta.k if meta.k is not None else meta.cfgs[0].k)
+
+
+# ---------------------------------------------------------------------------
+# Engine <-> state conversion.
+# ---------------------------------------------------------------------------
+
+def from_engine(index) -> IndexState:
+    """Extract the :class:`IndexState` behind any engine value."""
+    from repro.index import engines
+
+    if isinstance(index, IndexState):
+        return index
+    if isinstance(index, engines.PackedBloomIndex):
+        ensure_live(index, index.words, what="engine")
+        return IndexState(
+            words=(index.words,),
+            meta=StateMeta(engine="bloom", scheme=index.scheme,
+                           cfgs=(index.cfg,)),
+        )
+    if isinstance(index, engines.CobsIndex):
+        ensure_live(index, *(g.words for g in index.groups), what="engine")
+        return IndexState(
+            words=tuple(g.words for g in index.groups),
+            meta=StateMeta(
+                engine="cobs", scheme=index.scheme,
+                cfgs=tuple(g.cfg for g in index.groups),
+                n_files=index.n_files, k=index.k,
+                group_file_ids=tuple(g.file_ids for g in index.groups),
+            ),
+        )
+    if isinstance(index, engines.RamboIndex):
+        ensure_live(index, index.words, what="engine")
+        return IndexState(
+            words=(index.words,),
+            meta=StateMeta(engine="rambo", scheme=index.scheme,
+                           cfgs=(index.cfg,), n_files=index.n_files,
+                           n_buckets=index.n_buckets, n_rep=index.n_rep),
+        )
+    if isinstance(index, engines.BitSlicedIndex):
+        ensure_live(index, index.words, what="engine")
+        return IndexState(
+            words=(index.words,),
+            meta=StateMeta(engine="bitsliced", scheme=index.scheme,
+                           cfgs=(index.cfg,), n_files=index.n_files),
+        )
+    raise TypeError(f"not a GeneIndex engine or IndexState: {type(index)!r}")
+
+
+def to_engine(state: IndexState):
+    """Rebuild the engine view a state was extracted from (loss-free)."""
+    from repro.index import engines
+
+    ensure_live(state, *state.words, what="IndexState")
+    meta = state.meta
+    if meta.engine == "bloom":
+        return engines.PackedBloomIndex(
+            cfg=meta.cfgs[0], scheme=meta.scheme, words=state.words[0])
+    if meta.engine == "cobs":
+        groups = tuple(
+            engines.CobsGroupState(cfg=cfg, file_ids=fids, words=w)
+            for cfg, fids, w in zip(meta.cfgs, meta.group_file_ids,
+                                    state.words)
+        )
+        return engines.CobsIndex(groups=groups, scheme=meta.scheme,
+                                 n_files=meta.n_files, k=meta.k)
+    if meta.engine == "rambo":
+        return engines.RamboIndex(
+            cfg=meta.cfgs[0], scheme=meta.scheme, n_files=meta.n_files,
+            n_buckets=meta.n_buckets, n_rep=meta.n_rep,
+            words=state.words[0])
+    if meta.engine == "bitsliced":
+        return engines.BitSlicedIndex(
+            cfg=meta.cfgs[0], scheme=meta.scheme, n_files=meta.n_files,
+            words=state.words[0])
+    raise ValueError(f"unknown engine kind {meta.engine!r}")
+
+
+# ---------------------------------------------------------------------------
+# The pure functional API.
+# ---------------------------------------------------------------------------
+
+def insert(
+    state: IndexState,
+    reads: jax.Array,
+    file_ids=None,
+    *,
+    donate: bool = True,
+    **kw,
+) -> IndexState:
+    """Pure insert: returns the updated state; consumes ``state``.
+
+    With ``donate=True`` (default) the input state's buffers are donated
+    to the result and ``state`` is marked consumed — further use raises
+    :class:`StaleIndexError`. With ``donate=False`` the input stays live
+    (one extra buffer copy). ``kw`` passes through to the shared ingest
+    layer (``backend`` in {"jnp", "idl_insert", "sharded"}, ``mesh``,
+    ``window_min``, ...).
+    """
+    eng = to_engine(state)
+    new_eng = eng.insert_batch(reads, file_ids, donate=donate, **kw)
+    if donate:
+        mark_consumed(state)
+    return from_engine(new_eng)
+
+
+def query(state: IndexState, reads: jax.Array, *, backend: str = "jnp",
+          **kw) -> jax.Array:
+    """Pure per-kmer membership query (engine-shaped output)."""
+    return to_engine(state).query_batch(reads, backend=backend, **kw)
+
+
+def msmt(state: IndexState, reads: jax.Array, theta: float = 1.0,
+         **kw) -> jax.Array:
+    """Pure Multiple-Set Membership Test at coverage threshold ``theta``."""
+    return to_engine(state).msmt(reads, theta=theta, **kw)

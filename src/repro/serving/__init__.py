@@ -1,0 +1,27 @@
+"""Serving layer: the v2 dynamic-batching service + the v1 functional API.
+
+:mod:`repro.serving.service` is the serving surface — typed
+request/response, shape-bucketed dynamic batching over any
+``IndexState``, snapshot-backed startup. :mod:`repro.serving.genesearch`
+remains as the v1 compatibility layer (raw-matrix ``serve_step`` /
+``insert_read_batch`` over the fixed-shape bit-sliced index).
+"""
+
+from repro.serving import genesearch, service
+from repro.serving.service import (
+    BatchStats,
+    GeneSearchService,
+    SearchRequest,
+    SearchResult,
+    ServiceConfig,
+)
+
+__all__ = [
+    "BatchStats",
+    "GeneSearchService",
+    "SearchRequest",
+    "SearchResult",
+    "ServiceConfig",
+    "genesearch",
+    "service",
+]

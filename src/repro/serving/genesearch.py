@@ -1,4 +1,13 @@
-"""Distributed gene-search service — the paper's system as a first-class arch.
+"""v1 gene-search serving — now the compatibility layer under serving v2.
+
+New code should use :mod:`repro.serving.service`: a typed, dynamic-batching
+:class:`~repro.serving.service.GeneSearchService` over any engine's
+:class:`~repro.index.state.IndexState`, with pow2 shape buckets (one
+compile per bucket for ragged request streams), snapshot-backed startup
+(:mod:`repro.index.store`) and per-batch stats. This module keeps the v1
+functional surface — raw ``(m, F/32)`` matrix in, fixed-shape batch
+``serve_step`` out — as thin calls into the same shared layers, and
+re-exports the v2 names for discoverability.
 
 The index is the bit-sliced COBS layout (rows = hash locations, columns =
 files, packed 32 files/uint32 word). On the production mesh the file axis is
@@ -167,3 +176,13 @@ def match_file_ids(bitmask_row: np.ndarray) -> list[int]:
             if (int(word) >> b) & 1:
                 out.append(w * 32 + b)
     return out
+
+
+# -- serving v2 re-exports (canonical home: repro.serving.service) ----------
+from repro.serving.service import (  # noqa: E402  (compat tail-import)
+    BatchStats,
+    GeneSearchService,
+    SearchRequest,
+    SearchResult,
+    ServiceConfig,
+)

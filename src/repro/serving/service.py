@@ -1,0 +1,340 @@
+"""Gene-search serving v2: typed requests, shape-bucketed dynamic batching.
+
+The v1 surface (:mod:`repro.serving.genesearch`) is a stateless function
+over one raw matrix with one fixed read length. Real query streams are
+ragged — reads of every length, arriving one at a time — and a compiled
+serving path must not recompile per length. This layer closes that gap:
+
+* **Typed boundary** — :class:`SearchRequest` in (one read of any length
+  >= k), :class:`SearchResult` out (per-file verdicts + decoded ids +
+  which bucket served it). The index itself is an immutable
+  :class:`~repro.index.state.IndexState` pytree, so ANY engine (flat BF,
+  COBS, RAMBO, bit-sliced) serves through the same front-end and hot
+  snapshot swap is one attribute assignment.
+
+* **Shape-bucketed dynamic batching** — a request with ``n`` kmers is
+  padded to the next power-of-two kmer bucket (floor
+  ``ServiceConfig.min_bucket_kmers``) and batched with its bucket peers
+  into a fixed ``(max_batch, bucket + k - 1)`` shape, so each
+  ``(bucket, backend)`` pair compiles **exactly once** no matter how many
+  distinct read lengths arrive (asserted in ``tests/test_service.py``).
+  Padding is proven not to change answers: pad kmers are masked out of
+  the coverage reduction and each row keeps the integer threshold of its
+  TRUE kmer count (``query.coverage_need`` — the single theta rule), so
+  results are bit-identical to the engine's own unpadded ``msmt``.
+
+* **Admission queue + stats** — ``submit`` enqueues; a bucket flushes
+  when ``max_batch`` requests are waiting (or on ``flush()``). Every
+  executed batch records occupancy, padding waste and wall time
+  (:class:`BatchStats`) — the observability the autoscaling story needs.
+
+* **Snapshot-backed startup** — :meth:`GeneSearchService.from_snapshot`
+  boots straight from a :mod:`repro.index.store` directory.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import packed, query, store
+from repro.index import state as state_mod
+
+BACKENDS = ("jnp", "idl_probe", "sharded")
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Typed request/response boundary.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One query read (uint8 base codes, any length >= k)."""
+
+    read: np.ndarray
+    request_id: Optional[int] = None   # assigned by the service if None
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    """Engine verdicts for one request.
+
+    ``matches``: the engine's ``msmt`` row — a scalar bool for single-set
+    engines (flat BF), a (n_files,) bool vector otherwise. ``file_ids``
+    decodes it: indices of matching files ((0,) for a flat-BF hit).
+    """
+
+    request_id: int
+    matches: np.ndarray
+    file_ids: Tuple[int, ...]
+    n_kmers: int
+    bucket: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving knobs (static for the life of the service)."""
+
+    theta: float = 1.0            # kmer-coverage threshold for a file match
+    backend: str = "jnp"          # "jnp" | "idl_probe" | "sharded"
+    max_batch: int = 8            # rows per bucket step (fixed batch shape)
+    min_bucket_kmers: int = 32    # floor of the pow2 kmer buckets
+    auto_flush: bool = True       # flush a bucket once max_batch are waiting
+    stats_window: int = 4096      # batches of telemetry kept (bounded)
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown serving backend {self.backend!r} "
+                f"(want one of {BACKENDS})")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchStats:
+    """Accounting for one executed (bucket, batch) step."""
+
+    bucket: int          # kmer bucket (padded kmer count)
+    n_requests: int      # real requests served
+    batch_rows: int      # fixed batch shape rows (= max_batch)
+    pad_rows: int        # batch_rows - n_requests
+    pad_kmers: int       # wasted kmer slots incl. pad rows
+    wall_ms: float
+
+
+# ---------------------------------------------------------------------------
+# The per-(engine-kind) MSMT postlude — ONE threshold path (query.py).
+# ---------------------------------------------------------------------------
+
+def _msmt_reduce(kind: str, n_files: Optional[int], theta: float,
+                 per, valid, need):
+    """Per-kmer engine output -> per-request verdicts, padding-aware.
+
+    All threshold math routes through ``query.file_match_mask`` /
+    ``query.member_coverage`` with per-row ``need`` thresholds — the same
+    single ``coverage_need`` rule every engine and ``serve_step`` use.
+    """
+    if kind == "bitsliced":
+        if theta >= 1.0:
+            # at theta=1 a row matches iff ALL its valid kmers hit, which
+            # is exactly the masked AND fast path — skip the 32x popcount
+            # bit expansion (need[i] == n_valid[i] by construction, so the
+            # answers are identical)
+            mask = query.file_match_mask(per, theta, valid=valid)
+        else:
+            mask = query.file_match_mask(per, theta, valid=valid, need=need)
+        return packed.unpack_file_bits(mask, n_files)
+    return query.member_coverage(per, theta, valid=valid, need=need)
+
+
+# ---------------------------------------------------------------------------
+# The service.
+# ---------------------------------------------------------------------------
+
+class GeneSearchService:
+    """Dynamic-batching front-end over any :class:`IndexState` / engine."""
+
+    def __init__(self, index, config: Optional[ServiceConfig] = None):
+        self.config = config or ServiceConfig()
+        self._state = state_mod.from_engine(index)
+        self._k = state_mod.kmer_size(self._state.meta)
+        self._next_id = 0
+        self._pending: Dict[int, List[Tuple[SearchRequest, int]]] = {}
+        self._results: Dict[int, SearchResult] = {}
+        self._inflight: set = set()
+        self._runners: Dict[int, Tuple] = {}
+        # bounded: a long-running service must not leak telemetry
+        self.batch_stats: Deque[BatchStats] = collections.deque(
+            maxlen=self.config.stats_window)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_snapshot(cls, directory: str,
+                      config: Optional[ServiceConfig] = None,
+                      **load_kw) -> "GeneSearchService":
+        """Boot a service straight from a ``repro.index.store`` snapshot."""
+        return cls(store.load(directory, **load_kw), config)
+
+    @property
+    def state(self) -> state_mod.IndexState:
+        return self._state
+
+    @property
+    def n_files(self) -> int:
+        return int(self._state.meta.n_files or 1)
+
+    # -- admission ----------------------------------------------------------
+    def bucket_for(self, n_kmers: int) -> int:
+        return max(next_pow2(n_kmers), self.config.min_bucket_kmers)
+
+    def submit(self, request: Union[SearchRequest, np.ndarray]) -> int:
+        """Enqueue one read; returns its request id.
+
+        The request joins its kmer bucket's queue; with ``auto_flush`` the
+        bucket executes as soon as ``max_batch`` requests are waiting.
+        """
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(read=np.asarray(request))
+        read = np.asarray(request.read, dtype=np.uint8)
+        if read.ndim != 1:
+            # a flattened (B, L) batch would silently fuse reads across
+            # their boundaries — one request is ONE read (batch via search)
+            raise ValueError(
+                f"submit takes one 1-D read, got shape {read.shape}; "
+                f"submit each read separately (or use search())")
+        n_kmers = read.shape[0] - self._k + 1
+        if n_kmers < 1:
+            raise ValueError(
+                f"read of length {read.shape[0]} has no {self._k}-mers")
+        rid = request.request_id
+        if rid is None:
+            rid = self._next_id
+        elif rid in self._inflight:
+            raise ValueError(
+                f"request id {rid} is already in flight (pending or "
+                f"unclaimed result)")
+        self._next_id = max(self._next_id, rid) + 1
+        self._inflight.add(rid)
+        req = SearchRequest(read=read, request_id=rid)
+        bucket = self.bucket_for(n_kmers)
+        self._pending.setdefault(bucket, []).append((req, n_kmers))
+        if self.config.auto_flush and \
+                len(self._pending[bucket]) >= self.config.max_batch:
+            self._flush_bucket(bucket)
+        return rid
+
+    def flush(self) -> None:
+        """Execute every queued bucket (partial batches padded)."""
+        for bucket in sorted(self._pending):
+            while self._pending.get(bucket):
+                self._flush_bucket(bucket)
+        self._pending = {b: q for b, q in self._pending.items() if q}
+
+    def result(self, request_id: int) -> SearchResult:
+        """Pop a finished request's result (KeyError if not served yet)."""
+        out = self._results.pop(request_id)
+        self._inflight.discard(request_id)
+        return out
+
+    def search(self, reads: Sequence[np.ndarray]) -> List[SearchResult]:
+        """Synchronous convenience: submit all, flush, return in order."""
+        ids = [self.submit(r) for r in reads]
+        self.flush()
+        return [self.result(i) for i in ids]
+
+    # -- execution ----------------------------------------------------------
+    def _runner(self, bucket: int):
+        """The compiled step for one (bucket, backend) pair.
+
+        ``"jnp"`` jits the whole step end-to-end (the state is a pytree
+        argument, so the index matrices are real inputs, not baked-in
+        constants). The host-planned backends (``idl_probe`` / ``sharded``)
+        run the probe eagerly and jit only the coverage postlude.
+        """
+        r = self._runners.get(bucket)
+        if r is not None:
+            return r
+        meta = self._state.meta
+        reduce = functools.partial(
+            _msmt_reduce, meta.engine, meta.n_files, self.config.theta)
+        backend = self.config.backend
+        if backend == "jnp":
+            @jax.jit
+            def step(state, reads, valid, need):
+                per = state_mod.to_engine(state).query_batch(
+                    reads, backend="jnp")
+                return reduce(per, valid, need)
+
+            self._runners[bucket] = (step, step)
+        else:
+            post = jax.jit(reduce)
+            # no Mosaic target on CPU: execute the planned backend with the
+            # kernel's fused jnp oracle instead of the (python-stepped)
+            # Pallas interpreter — same plan, bit-identical results
+            kw = ({"use_ref": True}
+                  if backend == "idl_probe" and
+                  jax.default_backend() == "cpu" else {})
+
+            def step(state, reads, valid, need):
+                per = state_mod.to_engine(state).query_batch(
+                    reads, backend=backend, **kw)
+                return post(per, valid, need)
+
+            self._runners[bucket] = (step, post)
+        return self._runners[bucket]
+
+    def _flush_bucket(self, bucket: int) -> None:
+        queue = self._pending.get(bucket, [])
+        take, self._pending[bucket] = \
+            queue[:self.config.max_batch], queue[self.config.max_batch:]
+        if not take:
+            return
+        rows, read_len = self.config.max_batch, bucket + self._k - 1
+        batch = np.zeros((rows, read_len), dtype=np.uint8)
+        valid = np.zeros((rows, bucket), dtype=bool)
+        need = np.zeros((rows,), dtype=np.int32)
+        for i, (req, n_k) in enumerate(take):
+            batch[i, :req.read.shape[0]] = req.read
+            valid[i, :n_k] = True
+            need[i] = query.coverage_need(self.config.theta, n_k)
+        for i in range(len(take), rows):       # pad rows replay row 0;
+            batch[i], valid[i], need[i] = batch[0], valid[0], need[0]
+        step, _ = self._runner(bucket)         # results are discarded
+        t0 = time.perf_counter()
+        out = np.asarray(step(self._state, jnp.asarray(batch),
+                              jnp.asarray(valid), jnp.asarray(need)))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        single_set = self._state.meta.engine == "bloom"
+        for i, (req, n_k) in enumerate(take):
+            row = out[i]
+            if single_set:
+                fids = (0,) if bool(row) else ()
+            else:
+                fids = tuple(int(f) for f in np.nonzero(row)[0])
+            self._results[req.request_id] = SearchResult(
+                request_id=req.request_id, matches=row, file_ids=fids,
+                n_kmers=n_k, bucket=bucket)
+        self.batch_stats.append(BatchStats(
+            bucket=bucket, n_requests=len(take), batch_rows=rows,
+            pad_rows=rows - len(take),
+            pad_kmers=rows * bucket - sum(n_k for _, n_k in take),
+            wall_ms=wall_ms))
+
+    # -- observability ------------------------------------------------------
+    def compile_counts(self) -> Dict[int, int]:
+        """Compiled-executable count per bucket (the compile-once proof).
+
+        For the ``jnp`` backend this counts the end-to-end jitted step; for
+        planned backends, the jitted coverage postlude (the probe itself is
+        host-planned per batch by design).
+        """
+        return {b: counter._cache_size()
+                for b, (_, counter) in sorted(self._runners.items())}
+
+    def requests_served(self) -> int:
+        return sum(s.n_requests for s in self.batch_stats)
+
+    def occupancy(self) -> float:
+        """Fraction of batch rows that carried real requests."""
+        rows = sum(s.batch_rows for s in self.batch_stats)
+        return self.requests_served() / rows if rows else 0.0
+
+    def request_latencies_ms(self) -> List[float]:
+        """Per-request latency: each request is charged its batch's wall."""
+        out: List[float] = []
+        for s in self.batch_stats:
+            out.extend([s.wall_ms] * s.n_requests)
+        return out

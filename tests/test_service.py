@@ -1,0 +1,213 @@
+"""Serving v2 acceptance: service answers bit-identical to direct engine
+``msmt`` across 4 engines × schemes × {jnp, idl_probe} backends including
+padded-bucket (mixed-length) requests; each (bucket, backend) compiles
+exactly once; admission queue + stats; snapshot-backed startup."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    store,
+)
+from repro.serving import (
+    GeneSearchService,
+    SearchRequest,
+    SearchResult,
+    ServiceConfig,
+)
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(3, 120), dtype=np.uint8))
+
+
+@pytest.fixture(scope="module")
+def queries(reads):
+    """Mixed-length request stream: prefixes of indexed reads (guaranteed
+    hits at theta=1) + short tails — spans three kmer buckets."""
+    lens = [120, 100, 77, 120, 61, 99, 44]
+    return [np.asarray(reads[i % 3][:n]) for i, n in enumerate(lens)]
+
+
+def _build(name: str, reads, scheme: str = "idl"):
+    fids = np.arange(reads.shape[0])
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme).insert_batch(reads[:2])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads, fids)
+    if name == "rambo":
+        return RamboIndex.build(
+            5, _cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads, fids)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads, np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+class TestServiceParity:
+    """The acceptance matrix: padded-bucket service == direct engine msmt."""
+
+    @pytest.mark.parametrize("backend", ["jnp", "idl_probe"])
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_bit_identical_to_engine_msmt(self, reads, queries, engine,
+                                          scheme, backend):
+        eng = _build(engine, reads, scheme)
+        svc = GeneSearchService(
+            eng, ServiceConfig(backend=backend, max_batch=4))
+        results = svc.search(queries)
+        for q, res in zip(queries, results):
+            want = np.asarray(eng.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+            if engine != "bloom":
+                assert res.file_ids == tuple(np.nonzero(want)[0])
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6, 0.25])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_theta_thresholds_use_true_lengths(self, reads, queries, engine,
+                                               theta):
+        """Each padded row keeps the integer threshold of its TRUE kmer
+        count — the padding proof for theta < 1."""
+        eng = _build(engine, reads)
+        svc = GeneSearchService(eng, ServiceConfig(theta=theta, max_batch=8))
+        for q, res in zip(queries, svc.search(queries)):
+            want = np.asarray(eng.msmt(jnp.asarray(q)[None], theta=theta))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+    def test_sharded_backend_single_device(self, reads, queries):
+        eng = _build("bitsliced", reads)
+        svc = GeneSearchService(eng, ServiceConfig(backend="sharded"))
+        for q, res in zip(queries, svc.search(queries)):
+            want = np.asarray(eng.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+
+class TestBatchingAndCompiles:
+    def test_each_bucket_compiles_exactly_once(self, reads):
+        eng = _build("bitsliced", reads)
+        svc = GeneSearchService(eng, ServiceConfig(max_batch=4))
+        # 12 distinct read lengths over 3 buckets: naive per-shape serving
+        # would compile 12 times
+        lens = [31, 40, 50, 62, 63, 70, 80, 94, 95, 100, 110, 120]
+        svc.search([np.asarray(reads[i % 3][:n]) for i, n in enumerate(lens)])
+        counts = svc.compile_counts()
+        assert set(counts) == {32, 64, 128}      # pow2 kmer buckets
+        assert all(c == 1 for c in counts.values())
+        # new lengths landing in known buckets: still no recompile
+        svc.search([np.asarray(reads[0][:45]), np.asarray(reads[1][:99])])
+        assert all(c == 1 for c in svc.compile_counts().values())
+
+    def test_bucket_assignment_and_floor(self, reads):
+        svc = GeneSearchService(
+            _build("bloom", reads),
+            ServiceConfig(min_bucket_kmers=16))
+        assert svc.bucket_for(1) == 16
+        assert svc.bucket_for(17) == 32
+        assert svc.bucket_for(64) == 64
+        assert svc.bucket_for(65) == 128
+
+    def test_auto_flush_at_max_batch(self, reads):
+        svc = GeneSearchService(_build("bloom", reads),
+                                ServiceConfig(max_batch=2))
+        a = svc.submit(np.asarray(reads[0]))
+        assert not svc.batch_stats                 # queued, not served
+        b = svc.submit(np.asarray(reads[1]))
+        assert len(svc.batch_stats) == 1           # full batch auto-flushed
+        assert {a, b} == {r.request_id for r in
+                          [svc.result(a), svc.result(b)]}
+
+    def test_stats_account_for_padding(self, reads, queries):
+        svc = GeneSearchService(_build("bitsliced", reads),
+                                ServiceConfig(max_batch=4))
+        results = svc.search(queries)
+        assert svc.requests_served() == len(queries)
+        assert 0.0 < svc.occupancy() <= 1.0
+        assert len(svc.request_latencies_ms()) == len(queries)
+        for s in svc.batch_stats:
+            assert s.batch_rows == 4
+            assert s.pad_rows == s.batch_rows - s.n_requests
+            assert s.pad_kmers >= s.pad_rows * 0
+            assert s.wall_ms > 0
+        assert all(isinstance(r, SearchResult) for r in results)
+
+    def test_rejects_read_shorter_than_k(self, reads):
+        svc = GeneSearchService(_build("bloom", reads))
+        with pytest.raises(ValueError, match="no 31-mers"):
+            svc.submit(np.zeros(5, dtype=np.uint8))
+
+    def test_rejects_2d_read_batch(self, reads):
+        """A (B, L) batch must not silently fuse into one long read."""
+        svc = GeneSearchService(_build("bloom", reads))
+        with pytest.raises(ValueError, match="one 1-D read"):
+            svc.submit(np.asarray(reads))
+
+    def test_rejects_duplicate_inflight_request_id(self, reads):
+        svc = GeneSearchService(_build("bloom", reads),
+                                ServiceConfig(auto_flush=False))
+        svc.submit(SearchRequest(read=np.asarray(reads[0]), request_id=7))
+        with pytest.raises(ValueError, match="in flight"):
+            svc.submit(SearchRequest(read=np.asarray(reads[1]), request_id=7))
+        svc.flush()
+        with pytest.raises(ValueError, match="in flight"):   # unclaimed
+            svc.submit(SearchRequest(read=np.asarray(reads[1]), request_id=7))
+        svc.result(7)
+        assert svc.submit(
+            SearchRequest(read=np.asarray(reads[1]), request_id=7)) == 7
+
+    def test_stats_window_is_bounded(self, reads):
+        svc = GeneSearchService(_build("bloom", reads),
+                                ServiceConfig(max_batch=1, stats_window=3))
+        for _ in range(5):
+            svc.search([np.asarray(reads[0])])
+        assert len(svc.batch_stats) == 3
+        assert len(svc.request_latencies_ms()) == 3
+
+    def test_explicit_request_ids_and_queue(self, reads):
+        svc = GeneSearchService(_build("bloom", reads),
+                                ServiceConfig(auto_flush=False, max_batch=2))
+        rid = svc.submit(SearchRequest(read=np.asarray(reads[0]),
+                                       request_id=777))
+        assert rid == 777
+        for r in reads:                            # > one batch queued
+            svc.submit(np.asarray(r))
+        svc.flush()
+        res = svc.result(777)
+        assert res.n_kmers == reads.shape[1] - 31 + 1
+        with pytest.raises(KeyError):
+            svc.result(777)                        # results pop once
+
+
+class TestSnapshotStartup:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_from_snapshot_serves_identically(self, tmp_path, reads, queries,
+                                              engine):
+        eng = _build(engine, reads)
+        snap = store.save(eng, str(tmp_path / "snap"))
+        svc = GeneSearchService.from_snapshot(snap,
+                                              ServiceConfig(max_batch=4))
+        for q, res in zip(queries, svc.search(queries)):
+            want = np.asarray(eng.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+    def test_bad_config_rejected(self, reads):
+        with pytest.raises(ValueError, match="unknown serving backend"):
+            ServiceConfig(backend="cuda")
+        with pytest.raises(ValueError, match="max_batch"):
+            ServiceConfig(max_batch=0)

@@ -1,0 +1,201 @@
+"""Functional IndexState (protocol v2): pytree behavior, engine<->state
+round trips, pure insert/query/msmt parity, and the donation-footgun
+regression — a consumed (donated-away) engine or state raises a clear
+``StaleIndexError`` instead of a backend-dependent deleted-buffer crash,
+and ``donate=False`` keeps the input alive and bit-identical."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    GeneIndex,
+    IndexState,
+    PackedBloomIndex,
+    RamboIndex,
+    StaleIndexError,
+)
+from repro.index import state as state_mod
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(3, 120), dtype=np.uint8))
+
+
+def _build(name: str, reads, scheme: str = "idl"):
+    fids = np.arange(reads.shape[0])
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme).insert_batch(reads[:2])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads, fids)
+    if name == "rambo":
+        return RamboIndex.build(
+            5, _cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads, fids)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads, np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+def _file_ids(name: str, batch: int):
+    return None if name == "bloom" else np.arange(batch)
+
+
+class TestPytree:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_state_is_a_pytree_of_word_leaves(self, reads, engine):
+        st = _build(engine, reads).state
+        leaves, treedef = jax.tree_util.tree_flatten(st)
+        assert all(leaf.dtype == jnp.uint32 for leaf in leaves)
+        assert len(leaves) == len(st.meta.cfgs)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert rebuilt.meta == st.meta
+        for a, b in zip(rebuilt.words, st.words):
+            assert a is b
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_state_passes_through_jit(self, reads, engine):
+        st = _build(engine, reads).state
+        out = jax.jit(lambda s: s)(st)
+        assert isinstance(out, IndexState)
+        assert out.meta == st.meta
+        for a, b in zip(out.words, st.words):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_tree_map_touches_only_words(self, reads):
+        st = _build("cobs", reads).state
+        doubled = jax.tree_util.tree_map(lambda w: w | jnp.uint32(1), st)
+        assert doubled.meta == st.meta
+        assert all(
+            bool((w & 1).all()) for w in doubled.words)
+
+
+class TestEngineStateRoundTrip:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_to_engine_is_loss_free(self, reads, engine):
+        eng = _build(engine, reads)
+        view = state_mod.to_engine(eng.state)
+        assert type(view) is type(eng)
+        np.testing.assert_array_equal(
+            np.asarray(eng.msmt(reads)), np.asarray(view.msmt(reads)))
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_with_state_rebuilds_view(self, reads, engine):
+        eng = _build(engine, reads)
+        st = eng.state
+        view = eng.with_state(st)
+        np.testing.assert_array_equal(
+            np.asarray(eng.query_batch(reads)),
+            np.asarray(view.query_batch(reads)))
+
+    def test_with_state_rejects_kind_mismatch(self, reads):
+        bloom = _build("bloom", reads)
+        bs = _build("bitsliced", reads)
+        with pytest.raises(ValueError, match="with_state"):
+            bloom.with_state(bs.state)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_protocol_v2(self, reads, engine):
+        eng = _build(engine, reads)
+        assert isinstance(eng, GeneIndex)
+        assert isinstance(eng.state, IndexState)
+        assert callable(eng.with_state)
+
+
+class TestFunctionalAPI:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_insert_query_msmt_match_engine_methods(self, reads, engine):
+        eng = _build(engine, reads)                    # method path
+        # functional path: same inserts through state.insert
+        if engine == "bloom":
+            base = PackedBloomIndex.build(_cfg(), "idl")
+            st = state_mod.insert(base.state, reads[:2])
+        elif engine == "cobs":
+            base = CobsIndex.build([100, 200, 150], _cfg(), n_groups=2)
+            st = state_mod.insert(base.state, reads, np.arange(3))
+        elif engine == "rambo":
+            base = RamboIndex.build(5, _cfg(1 << 14), B=2, R=2)
+            st = state_mod.insert(base.state, reads, np.arange(3))
+        else:
+            base = BitSlicedIndex.build(_cfg(), "idl", n_files=40)
+            st = state_mod.insert(base.state, reads, np.asarray([0, 9, 39]))
+        np.testing.assert_array_equal(
+            np.asarray(state_mod.query(st, reads)),
+            np.asarray(eng.query_batch(reads)))
+        np.testing.assert_array_equal(
+            np.asarray(state_mod.msmt(st, reads, theta=0.6)),
+            np.asarray(eng.msmt(reads, theta=0.6)))
+
+    def test_insert_backend_passthrough(self, reads):
+        base = PackedBloomIndex.build(_cfg(), "idl")
+        st_jnp = state_mod.insert(
+            PackedBloomIndex.build(_cfg(), "idl").state, reads)
+        st_planned = state_mod.insert(base.state, reads,
+                                      backend="idl_insert")
+        np.testing.assert_array_equal(
+            np.asarray(st_jnp.words[0]), np.asarray(st_planned.words[0]))
+
+
+class TestDonationFootgun:
+    """PR-3's 'never reuse a pre-insert engine' rule, now enforced."""
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_reusing_consumed_engine_raises_clear_error(self, reads, engine):
+        eng = _build(engine, reads)        # fresh, live
+        _ = eng.insert_batch(reads[:1], _file_ids(engine, 1))
+        with pytest.raises(StaleIndexError, match="donated"):
+            eng.query_batch(reads)
+        with pytest.raises(StaleIndexError, match="returned"):
+            eng.insert_batch(reads[:1], _file_ids(engine, 1))
+        with pytest.raises(StaleIndexError):
+            eng.msmt(reads)
+        with pytest.raises(StaleIndexError):
+            _ = eng.state                  # can't snapshot a consumed view
+
+    def test_consumed_state_raises_on_every_entry_point(self, reads):
+        st = PackedBloomIndex.build(_cfg(), "idl").state
+        st2 = state_mod.insert(st, reads)
+        with pytest.raises(StaleIndexError):
+            state_mod.query(st, reads)
+        with pytest.raises(StaleIndexError):
+            state_mod.insert(st, reads)
+        # the returned state is live
+        assert state_mod.query(st2, reads).shape[0] == reads.shape[0]
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_donate_false_keeps_input_alive_and_bit_identical(
+            self, reads, engine):
+        a = _build(engine, reads)
+        b = _build(engine, reads)
+        out_donated = a.insert_batch(reads[:1], _file_ids(engine, 1))
+        out_kept = b.insert_batch(reads[:1], _file_ids(engine, 1),
+                                  donate=False)
+        # b is still usable, and both results are bit-identical
+        np.testing.assert_array_equal(
+            np.asarray(b.msmt(reads)),
+            np.asarray(_build(engine, reads).msmt(reads)))
+        np.testing.assert_array_equal(
+            np.asarray(out_kept.msmt(reads)),
+            np.asarray(out_donated.msmt(reads)))
+
+    def test_functional_insert_donate_false(self, reads):
+        st = PackedBloomIndex.build(_cfg(), "idl").state
+        st2 = state_mod.insert(st, reads, donate=False)
+        st3 = state_mod.insert(st, reads)      # st still live the 1st time
+        np.testing.assert_array_equal(
+            np.asarray(st2.words[0]), np.asarray(st3.words[0]))
