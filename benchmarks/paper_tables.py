@@ -251,6 +251,69 @@ def theory_check() -> None:
 
 
 # --------------------------------------------------------------------------
+# §6 sweep: measured vs predicted FPR across fill fractions × schemes.
+# RH is a classic BF -> eq. (5) is an (asymptotically tight) estimate;
+# IDL and the idl-bbf composition are gated by the Theorem 2 upper bound.
+# Gated by tests/test_fpr_sweep.py (tolerance assertions over these rows).
+# --------------------------------------------------------------------------
+
+def fpr_sweep_rows(
+    m: int = 1 << 20,
+    loads: tuple = (0.05, 0.125, 0.25),
+    schemes: tuple = ("rh", "idl", "idl-bbf"),
+    eta: int = 4,
+    L: int = 1 << 12,
+    n_neg: int = 150_000,
+    seed: int = 101,
+) -> list:
+    """Measured + §6-predicted FPR rows across load factors n/m × schemes.
+
+    ``load`` = inserted kmers / filter bits; the resulting *fill fraction*
+    (measured from the filter itself) spans the paper's operating range.
+    Negatives are iid random codes — a random 31-mer collides with an
+    indexed one w.p. ~n/4^31, so every query kmer counts as a negative.
+    """
+    rows = []
+    rng = np.random.default_rng(seed)
+    neg = jnp.asarray(rng.integers(0, 4, size=n_neg, dtype=np.uint8))
+    k, t = 31, 16
+    for load in loads:
+        n = int(load * m)
+        g = genome.synthesize_genome(n + k - 1, seed=seed + n,
+                                     repeat_fraction=0.0)
+        gj = jnp.asarray(g)
+        for scheme in schemes:
+            cfg = idl.IDLConfig(k=k, t=t, L=L, eta=eta, m=m)
+            eng = PackedBloomIndex.build(cfg, scheme).insert_batch(gj)
+            measured = float(jnp.mean(eng.query_batch(neg)[0]))
+            fill = float(np.asarray(eng.fill_fraction))
+            if scheme == "rh":
+                predicted, kind = theory.bf_fpr(m, n, eta), "eq5"
+            else:
+                predicted = theory.idl_bf_fpr_bound(m, n, eta, L, k, t)
+                kind = "thm2_bound"
+            rows.append({
+                "scheme": scheme, "m": m, "n": n, "load": load,
+                "fill": fill, "measured": measured,
+                "predicted": predicted, "kind": kind,
+                "n_neg_kmers": n_neg - k + 1,
+            })
+    return rows
+
+
+def fpr_sweep() -> None:
+    csv = Csv("fpr_sweep_measured_vs_theory",
+              ["scheme", "m_bits", "load", "fill_frac", "measured_fpr",
+               "predicted", "prediction_kind", "within"])
+    for r in fpr_sweep_rows(m=1 << 22, loads=(0.02, 0.05, 0.125, 0.25),
+                            n_neg=200_000):
+        ok = (0.5 * r["predicted"] <= r["measured"] <= 2.0 * r["predicted"]
+              if r["kind"] == "eq5" else r["measured"] <= r["predicted"])
+        csv.row(r["scheme"], r["m"], r["load"], r["fill"], r["measured"],
+                r["predicted"], r["kind"], ok)
+
+
+# --------------------------------------------------------------------------
 # §3.3: Blocked-BF × IDL composition (beyond the paper's experiments — the
 # paper states the two are orthogonal and integrable; we measure it).
 # "idl-bbf" is an ordinary registry scheme: the engine needs no special case.
@@ -275,4 +338,4 @@ def bbf_compose() -> None:
 
 
 ALL = [table2_assumptions, fig5_idlbf, fig6_pareto, fig7_cobs, table3_rambo,
-       table4_lsh, fig8_ablation, theory_check, bbf_compose]
+       table4_lsh, fig8_ablation, theory_check, fpr_sweep, bbf_compose]

@@ -1,9 +1,11 @@
-"""End-to-end gene-search service, serving-v2 edition: stream an archive
-into a bit-sliced MSMT index (shared ingest layer), snapshot it to disk
-(versioned store), boot a :class:`GeneSearchService` straight from the
-snapshot, and serve a RAGGED query stream — reads of many lengths — through
-pow2 shape buckets, so the whole stream compiles once per bucket instead of
-once per length.
+"""End-to-end gene-search serving, cluster edition: stream an archive into
+a bit-sliced MSMT index (shared ingest layer), snapshot it to disk
+(versioned store), boot a 2-replica :class:`ReplicaRouter` straight from
+the snapshot, and serve a RAGGED query stream through futures — requests
+batch per pow2 kmer bucket on a background deadline flusher, sharded over
+replicas, one compile per (bucket, backend) per replica. Then publish a
+NEW snapshot version and hot-swap it under traffic: zero dropped futures,
+every result stamped with the state version that served it.
 
     PYTHONPATH=src python examples/genesearch_service.py
 """
@@ -17,8 +19,7 @@ import numpy as np
 from repro.core import idl
 from repro.data import genome
 from repro.index import BitSlicedIndex, ingest, store
-from repro.serving import GeneSearchService, ServiceConfig
-
+from repro.serving import ReplicaRouter, RouterConfig, ServiceConfig
 
 def main() -> None:
     n_files = 64
@@ -37,15 +38,18 @@ def main() -> None:
     print(f"  index built in {time.perf_counter() - t0:.1f}s "
           f"({state.nbytes / 1e6:.1f} MB bit-sliced IndexState)")
 
-    # persistence: versioned snapshot -> disk -> snapshot-backed service
-    with tempfile.TemporaryDirectory() as snap_dir:
-        store.save(state, snap_dir)
-        svc = GeneSearchService.from_snapshot(
-            snap_dir, ServiceConfig(theta=1.0, max_batch=8))
-        print(f"  snapshot saved + service booted from {snap_dir!r}")
+    with tempfile.TemporaryDirectory() as snap_v0, \
+            tempfile.TemporaryDirectory() as snap_v1:
+        # persistence: versioned snapshot -> disk -> snapshot-booted FLEET
+        store.save(state, snap_v0)
+        router = ReplicaRouter.from_snapshot(
+            snap_v0, ServiceConfig(theta=1.0, max_batch=8),
+            RouterConfig(n_replicas=2, policy="bucket_affinity"))
+        print(f"  snapshot saved; 2-replica router booted from {snap_v0!r}")
 
         # ragged query stream: full reads, amplicon-length fragments and
-        # poisoned decoys — the service buckets them by kmer count
+        # poisoned decoys — submit() returns futures immediately, the
+        # background flushers batch each kmer bucket on its deadline
         true_ids = [3, 17, 40, 59]
         queries, labels = [], []
         for i, fid in enumerate(true_ids):
@@ -56,8 +60,10 @@ def main() -> None:
         decoys = [np.asarray(d) for d in
                   genome.poison_queries(np.stack([q[:80] for q in queries]),
                                         seed=7)]
+        futures = [router.submit(q) for q in queries + decoys]
+        router.drain()
+        results = [f.result() for f in futures]
 
-        results = svc.search(queries + decoys)
         hits = fps = decoy_hits = 0
         for i, fid in enumerate(labels):
             got = results[i].file_ids
@@ -66,26 +72,36 @@ def main() -> None:
             got_d = results[len(labels) + i].file_ids
             decoy_hits += len(got_d)
             print(f"query from file {fid:2d} (len {len(queries[i])}, "
-                  f"bucket {results[i].bucket}): matched {list(got)}; "
-                  f"poisoned -> {list(got_d)}")
+                  f"bucket {results[i].bucket}, v{results[i].version}): "
+                  f"matched {list(got)}; poisoned -> {list(got_d)}")
         print(f"recall {hits}/{len(labels)}, false positives {fps}, "
               f"poisoned matches {decoy_hits}")
 
-        # serving telemetry: one compile per (bucket, backend), occupancy,
-        # per-request latency
-        lat = np.asarray(svc.request_latencies_ms())
-        print(f"buckets/compiles: {svc.compile_counts()} "
-              f"(ragged stream, compiled once per bucket)")
-        print(f"occupancy {svc.occupancy():.2f}, "
-              f"latency p50 {np.percentile(lat, 50):.1f} ms "
-              f"p95 {np.percentile(lat, 95):.1f} ms")
+        # cluster telemetry: per-replica compile-once, flush reasons,
+        # occupancy, queue delay
+        stats = router.cluster_stats()
+        print(f"replica/bucket compiles: {router.compile_counts()} "
+              f"(one per bucket per replica)")
+        print(f"occupancy {router.occupancy():.2f}; flush reasons "
+              f"{sorted({s.flush_reason for s in stats})}; queue p95 "
+              f"{np.percentile([s.queue_ms for s in stats], 95):.1f} ms")
 
-        # the direct engine view answers identically (bit-exact parity)
-        view = store.load_engine(snap_dir)
-        q0 = jnp.asarray(queries[0])[None]
-        same = bool(np.all(np.asarray(view.msmt(q0))[0]
-                           == np.asarray(results[0].matches)))
-        print(f"snapshot engine view agrees with the service: {same}")
+        # hot snapshot swap under the same fleet: load a FRESH engine from
+        # the v0 snapshot (the served replicas' own buffers are never
+        # touched), index one more genome into it, publish v1, swap —
+        # replicas pause one at a time, traffic keeps flowing, and
+        # same-geometry states reuse every compiled step (zero recompiles)
+        extra = genome.synth_archive(n_files=1, genome_len=3_000, seed=99)[0]
+        read_new = extra.reads(230, 1)[0]
+        eng_v1 = store.load_engine(snap_v0).insert_batch(
+            jnp.asarray(read_new)[None], np.asarray([0]))
+        store.save(eng_v1, snap_v1)
+        new_version = router.swap_snapshot(snap_v1)
+        res = router.submit(np.asarray(read_new)).result()
+        print(f"hot-swapped to snapshot v{new_version}: new read -> files "
+              f"{list(res.file_ids)} (served at v{res.version}); compiles "
+              f"unchanged: {router.compile_counts()}")
+        router.close()
 
 
 if __name__ == "__main__":

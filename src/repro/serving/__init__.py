@@ -1,13 +1,27 @@
-"""Serving layer: the v2 dynamic-batching service + the v1 functional API.
+"""Serving layer: dynamic-batching service + serving cluster + v1 compat.
 
-:mod:`repro.serving.service` is the serving surface — typed
-request/response, shape-bucketed dynamic batching over any
-``IndexState``, snapshot-backed startup. :mod:`repro.serving.genesearch`
-remains as the v1 compatibility layer (raw-matrix ``serve_step`` /
-``insert_read_batch`` over the fixed-shape bit-sliced index).
+:mod:`repro.serving.service` is the synchronous serving surface — typed
+request/response, shape-bucketed dynamic batching over any ``IndexState``,
+snapshot-backed startup. On top of it, the serving cluster:
+:mod:`repro.serving.scheduler` (futures, deadline flusher, double-buffered
+batch pipeline), :mod:`repro.serving.router` (K ``device_put`` replicas,
+pluggable routing, hot snapshot swap under traffic) and
+:mod:`repro.serving.autoscale` (admission policy + replica autoscaler
+driven by the recorded batch telemetry). :mod:`repro.serving.genesearch`
+remains as the deprecated v1 compatibility layer (raw-matrix
+``serve_step`` / ``insert_read_batch`` over the fixed-shape bit-sliced
+index).
 """
 
-from repro.serving import genesearch, service
+from repro.serving import autoscale, genesearch, router, scheduler, service
+from repro.serving.autoscale import (
+    AdmissionPolicy,
+    AutoscaleConfig,
+    ReplicaAutoscaler,
+)
+from repro.serving.router import ReplicaRouter, RouterConfig
+from repro.serving.scheduler import AsyncScheduler, ClusterStats, \
+    SchedulerConfig
 from repro.serving.service import (
     BatchStats,
     GeneSearchService,
@@ -17,11 +31,22 @@ from repro.serving.service import (
 )
 
 __all__ = [
+    "AdmissionPolicy",
+    "AsyncScheduler",
+    "AutoscaleConfig",
     "BatchStats",
+    "ClusterStats",
     "GeneSearchService",
+    "ReplicaAutoscaler",
+    "ReplicaRouter",
+    "RouterConfig",
+    "SchedulerConfig",
     "SearchRequest",
     "SearchResult",
     "ServiceConfig",
+    "autoscale",
     "genesearch",
+    "router",
+    "scheduler",
     "service",
 ]

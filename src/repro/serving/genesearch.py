@@ -32,6 +32,7 @@ protocol-level engine over the same storage.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -41,6 +42,18 @@ import numpy as np
 from repro.core import idl as idl_mod
 from repro.distributed.sharding import shard
 from repro.index import ingest, query
+
+
+def _deprecated(name: str) -> None:
+    warnings.warn(
+        f"serving.genesearch.{name} is the deprecated v1 serving surface; "
+        "use repro.serving.GeneSearchService (dynamic batching over any "
+        "IndexState, snapshot startup) or the engines' own "
+        "insert_batch/msmt — bit-identical through the same shared "
+        "query/ingest layers.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +85,7 @@ class GeneSearchConfig:
 
 def empty_index(cfg: GeneSearchConfig) -> jax.Array:
     """(m, n_files/32) uint32 bit-sliced index."""
+    _deprecated("empty_index")
     return jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
 
 
@@ -105,6 +119,7 @@ def insert_read_batch(
     Pallas run kernel, one launch per batch) or ``"sharded"`` (``shard_map``
     splitting the file-words axis; kw ``mesh``).
     """
+    _deprecated("insert_read_batch")
     plan = insert_plan(cfg, reads.shape[0], index.shape,
                        read_len=reads.shape[1])
     return plan.execute(
@@ -121,6 +136,7 @@ def build_archive(
     serving matrix. Accepts the builder's knobs (``chunk_reads``, ``mesh``,
     ``window_min``, ...).
     """
+    _deprecated("build_archive")
     from repro.index.engines import BitSlicedIndex
 
     eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme, cfg.n_files)
@@ -161,6 +177,7 @@ def serve_step(
     ``jax.jit``), ``"idl_probe"`` (host-planned Pallas run kernel) or
     ``"sharded"`` (``shard_map`` splitting the file-words axis).
     """
+    _deprecated("serve_step")
     plan = query_plan(cfg, queries.shape[0], index.shape)
     per_kmer = plan.execute(index, queries, backend=backend)  # (B, n_k, F/32)
     per_kmer = shard(per_kmer, ("batch", None, "files"))
@@ -170,6 +187,7 @@ def serve_step(
 
 def match_file_ids(bitmask_row: np.ndarray) -> list[int]:
     """Decode one query's (F/32,) bitmask into matching file ids (host)."""
+    _deprecated("match_file_ids")
     out = []
     for w, word in enumerate(np.asarray(bitmask_row)):
         for b in range(32):

@@ -1,0 +1,350 @@
+"""Replica router: shard a request stream over K IndexState replicas.
+
+An :class:`~repro.index.state.IndexState` is a pytree, so a replica is one
+``jax.device_put`` — K replicas of a served index are K cheap copies (on a
+multi-device host, one per device; on CPU they alias read-only buffers).
+The router puts an :class:`~repro.serving.scheduler.AsyncScheduler` in
+front of each replica and spreads submits across them:
+
+* **Routing policies** — ``round_robin`` (stateless spread),
+  ``least_outstanding`` (join the shortest queue — best under skewed
+  batch walls), ``bucket_affinity`` (a kmer bucket always lands on the
+  same replica, so each replica's compile cache and admission EWMAs stay
+  hot for *its* buckets — the policy to pick when the bucket set is wider
+  than one replica's compile budget).
+
+* **Hot snapshot swap** — :meth:`swap_snapshot` loads + fully validates a
+  new snapshot version (a corrupt / foreign / future-version directory
+  raises :class:`~repro.index.store.SnapshotError` *before any replica is
+  touched* — traffic never notices), then walks the replicas one at a
+  time: pause (in-flight batches finish), swap state, resume. Requests
+  queued on the paused replica are served by the new state after resume;
+  the other replicas keep serving throughout. Zero futures are dropped
+  and no result is mis-versioned: a result's ``version`` field is always
+  the version of the state that computed it, because swaps only happen
+  with zero batches in flight on that replica. Same-geometry snapshots
+  reuse every compiled executable (the state is a pytree *argument* of
+  the compiled step, not a constant) — zero recompiles under live swap.
+
+* **Autoscaling** — with an :class:`~repro.serving.autoscale
+  .ReplicaAutoscaler`, :meth:`autoscale_step` grows/shrinks the fleet
+  between the configured bounds: new replicas boot from the current
+  state + version; removed replicas stop receiving traffic, drain every
+  queued future, then shut down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.index import state as state_mod
+from repro.index import store
+from repro.serving import service as service_mod
+from repro.serving.autoscale import (
+    AdmissionPolicy,
+    AutoscaleConfig,
+    ReplicaAutoscaler,
+)
+from repro.serving.scheduler import AsyncScheduler, ClusterStats, \
+    SchedulerConfig
+
+__all__ = ["RouterConfig", "ReplicaRouter", "POLICIES"]
+
+POLICIES = ("round_robin", "least_outstanding", "bucket_affinity")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Replica fan-out knobs."""
+
+    n_replicas: int = 2
+    policy: str = "least_outstanding"
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig)
+    autoscale: Optional[AutoscaleConfig] = None   # enables adaptive serving
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown routing policy {self.policy!r} "
+                f"(want one of {POLICIES})")
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+
+
+@dataclasses.dataclass
+class _Replica:
+    id: int
+    service: service_mod.GeneSearchService
+    scheduler: AsyncScheduler
+    serving: bool = True       # False while being decommissioned
+
+
+class ReplicaRouter:
+    """K pipelined serving replicas behind one ``submit``."""
+
+    def __init__(self, index,
+                 service_config: Optional[service_mod.ServiceConfig] = None,
+                 config: Optional[RouterConfig] = None, *,
+                 devices: Optional[Sequence] = None,
+                 version: int = 0):
+        self.config = config or RouterConfig()
+        self._svc_cfg = service_config or service_mod.ServiceConfig()
+        self._state = state_mod.from_engine(index)
+        self._version = int(version)
+        self._devices = tuple(devices) if devices else tuple(jax.devices())
+        self._autoscaler = (ReplicaAutoscaler(self.config.autoscale)
+                            if self.config.autoscale is not None else None)
+        self._lock = threading.Lock()
+        self._as_lock = threading.Lock()   # autoscaler observation guard
+        # serializes fleet mutations (swap / scale): a replica booted
+        # mid-swap from the pre-swap state would serve a stale version
+        # forever
+        self._admin_lock = threading.Lock()
+        self._replicas: List[_Replica] = []
+        self._next_replica_id = 0
+        self._rr = itertools.count()
+        self._affinity: Dict[int, int] = {}     # bucket -> replica id
+        for _ in range(self.config.n_replicas):
+            self._add_replica_locked()
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_snapshot(cls, directory: str,
+                      service_config=None, config=None, *,
+                      version: int = 0, **load_kw) -> "ReplicaRouter":
+        """Boot a replica fleet straight from a versioned snapshot."""
+        return cls(store.load(directory, **load_kw), service_config, config,
+                   version=version)
+
+    def _add_replica_locked(self) -> _Replica:
+        rid = self._next_replica_id
+        self._next_replica_id += 1
+        device = self._devices[rid % len(self._devices)]
+        state = jax.device_put(self._state, device)
+        svc = service_mod.GeneSearchService(state, self._svc_cfg,
+                                            version=self._version)
+        admission = (AdmissionPolicy(self.config.autoscale)
+                     if self.config.autoscale is not None else None)
+        rep = _Replica(
+            id=rid, service=svc,
+            scheduler=AsyncScheduler(svc, self.config.scheduler,
+                                     admission=admission,
+                                     on_batch=self._observe_batch,
+                                     replica_id=rid))
+        self._replicas.append(rep)
+        return rep
+
+    def _observe_batch(self, stats: ClusterStats, now: float) -> None:
+        """Completer-thread hook: feed batch telemetry to the autoscaler."""
+        if self._autoscaler is not None:
+            with self._as_lock:
+                self._autoscaler.observe_batch(stats, now)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n_replicas(self) -> int:
+        with self._lock:
+            return len(self._replicas)
+
+    def outstanding(self) -> int:
+        with self._lock:
+            reps = list(self._replicas)
+        return sum(r.scheduler.outstanding for r in reps)
+
+    def compile_counts(self) -> Dict[int, Dict[int, int]]:
+        """Per-replica compile-once proof: {replica_id: {bucket: count}}."""
+        with self._lock:
+            reps = list(self._replicas)
+        return {r.id: r.scheduler.compile_counts() for r in reps}
+
+    def cluster_stats(self) -> List[ClusterStats]:
+        """Merged telemetry across replicas (each ring-buffer bounded)."""
+        with self._lock:
+            reps = list(self._replicas)
+        return [s for r in reps for s in list(r.scheduler.stats)]
+
+    def requests_served(self) -> int:
+        return sum(s.n_requests for s in self.cluster_stats())
+
+    def occupancy(self) -> float:
+        stats = self.cluster_stats()
+        rows = sum(s.batch_rows for s in stats)
+        return sum(s.n_requests for s in stats) / rows if rows else 0.0
+
+    # -- routing ------------------------------------------------------------
+    def _route(self, bucket: int) -> _Replica:
+        """Pick a serving replica (caller holds the lock)."""
+        serving = [r for r in self._replicas if r.serving]
+        if not serving:
+            raise RuntimeError("router has no serving replicas")
+        policy = self.config.policy
+        if policy == "round_robin":
+            return serving[next(self._rr) % len(serving)]
+        if policy == "least_outstanding":
+            return min(serving, key=lambda r: r.scheduler.outstanding)
+        # bucket_affinity: sticky bucket -> replica map, assigned round-
+        # robin on first sight so load still spreads; remapped only if the
+        # pinned replica was decommissioned
+        by_id = {r.id: r for r in serving}
+        rid = self._affinity.get(bucket)
+        if rid is None or rid not in by_id:
+            rep = serving[next(self._rr) % len(serving)]
+            self._affinity[bucket] = rep.id
+            return rep
+        return by_id[rid]
+
+    def submit(self, request: Union[service_mod.SearchRequest, np.ndarray]
+               ) -> Future:
+        """Route one read to a replica; returns its Future[SearchResult]."""
+        with self._lock:
+            if not self._replicas:
+                raise RuntimeError("router is closed")
+            any_svc = self._replicas[0].service
+        req, n_kmers = any_svc._normalize(request)
+        bucket = any_svc.bucket_for(n_kmers)
+        with self._lock:
+            rep = self._route(bucket)
+        if self._autoscaler is not None:
+            with self._as_lock:
+                self._autoscaler.observe_arrival(time.monotonic())
+        return rep.scheduler.submit(req)
+
+    def search(self, reads: Sequence[np.ndarray]
+               ) -> List[service_mod.SearchResult]:
+        """Submit all, drain every replica, return results in order."""
+        futures = [self.submit(r) for r in reads]
+        self.drain()
+        return [f.result() for f in futures]
+
+    # -- hot snapshot swap --------------------------------------------------
+    def swap_snapshot(self, directory: str, *,
+                      version: Optional[int] = None, **load_kw) -> int:
+        """Load a new snapshot version and swap every replica under load.
+
+        Validation happens FIRST: ``store.load`` rejects corrupt, foreign,
+        truncated and future-version snapshots with ``SnapshotError``
+        before any replica is touched, so a bad snapshot offer leaves the
+        fleet serving the old version untouched. Then replicas swap one at
+        a time (pause -> swap -> resume); the rest keep serving.
+        """
+        new_state = store.load(directory, **load_kw)   # may raise — fleet
+        return self.swap_state(new_state, version=version)  # still clean
+
+    def swap_state(self, index, *, version: Optional[int] = None) -> int:
+        """Swap an already-validated state/engine into every replica."""
+        new_state = state_mod.from_engine(index)
+        with self._admin_lock:
+            return self._swap_state_admin(new_state, version)
+
+    def _swap_state_admin(self, new_state, version: Optional[int]) -> int:
+        """Fleet swap body (caller holds the admin lock, so no replica can
+        be booted from the pre-swap state mid-walk)."""
+        with self._lock:
+            # geometry gate before touching ANY replica (per-replica
+            # swap_state would re-check, but failing mid-fleet would leave
+            # mixed versions forever)
+            k_new = state_mod.kmer_size(new_state.meta)
+            k_old = state_mod.kmer_size(self._state.meta)
+            if k_new != k_old:
+                raise ValueError(
+                    f"cannot hot-swap to kmer size {k_new} over a fleet "
+                    f"serving k={k_old}; boot a fresh router instead")
+            new_version = (self._version + 1 if version is None
+                           else int(version))
+            reps = list(self._replicas)
+        for rep in reps:
+            device = self._devices[rep.id % len(self._devices)]
+            replica_state = jax.device_put(new_state, device)
+            rep.scheduler.pause()      # in-flight batches finish first
+            try:
+                rep.service.swap_state(replica_state, version=new_version)
+            finally:
+                rep.scheduler.resume()
+        with self._lock:
+            self._state = new_state
+            self._version = new_version
+        return new_version
+
+    # -- scaling ------------------------------------------------------------
+    def scale_to(self, n: int) -> int:
+        """Grow/shrink the fleet to ``n`` replicas; returns the new count.
+
+        Growth boots replicas from the current state + version (their
+        compile caches start cold — each new replica compiles each bucket
+        once, which is the per-replica compile-once guarantee, not a
+        violation of it). Shrinking decommissions the most idle replicas:
+        no new traffic, drain queued futures, shut down.
+        """
+        if n < 1:
+            raise ValueError("cannot scale below 1 replica")
+        to_close: List[_Replica] = []
+        with self._admin_lock, self._lock:
+            while len(self._replicas) < n:
+                self._add_replica_locked()
+            if len(self._replicas) > n:
+                victims = sorted(
+                    self._replicas,
+                    key=lambda r: r.scheduler.outstanding,
+                )[:len(self._replicas) - n]
+                for rep in victims:
+                    rep.serving = False       # stop routing immediately
+                    to_close.append(rep)
+                self._replicas = [r for r in self._replicas
+                                  if r.serving]
+        for rep in to_close:
+            rep.scheduler.close()             # drains: zero dropped futures
+        return self.n_replicas
+
+    def autoscale_step(self, now: Optional[float] = None) -> int:
+        """Apply one ReplicaAutoscaler recommendation (no-op without one).
+
+        Pull-based by design: the serving loop (or a bench/ops cron) calls
+        this at its own cadence, so scaling decisions are deterministic
+        and testable instead of racing a hidden daemon thread.
+        """
+        if self._autoscaler is None:
+            return self.n_replicas
+        now = time.monotonic() if now is None else now
+        rec = self._autoscaler.recommend(
+            now, self.n_replicas, self.outstanding(),
+            self._svc_cfg.max_batch)
+        if rec != self.n_replicas:
+            self.scale_to(rec)
+        return self.n_replicas
+
+    @property
+    def autoscaler(self) -> Optional[ReplicaAutoscaler]:
+        return self._autoscaler
+
+    # -- lifecycle ----------------------------------------------------------
+    def drain(self) -> None:
+        with self._lock:
+            reps = list(self._replicas)
+        for rep in reps:
+            rep.scheduler.drain()
+
+    def close(self) -> None:
+        with self._lock:
+            reps = list(self._replicas)
+            self._replicas = []
+        for rep in reps:
+            rep.scheduler.close()
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

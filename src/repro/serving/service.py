@@ -81,6 +81,7 @@ class SearchResult:
     file_ids: Tuple[int, ...]
     n_kmers: int
     bucket: int
+    version: int = 0     # state version that served it (hot-swap audit trail)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,10 +148,12 @@ def _msmt_reduce(kind: str, n_files: Optional[int], theta: float,
 class GeneSearchService:
     """Dynamic-batching front-end over any :class:`IndexState` / engine."""
 
-    def __init__(self, index, config: Optional[ServiceConfig] = None):
+    def __init__(self, index, config: Optional[ServiceConfig] = None,
+                 *, version: int = 0):
         self.config = config or ServiceConfig()
         self._state = state_mod.from_engine(index)
         self._k = state_mod.kmer_size(self._state.meta)
+        self._version = int(version)
         self._next_id = 0
         self._pending: Dict[int, List[Tuple[SearchRequest, int]]] = {}
         self._results: Dict[int, SearchResult] = {}
@@ -173,19 +176,50 @@ class GeneSearchService:
         return self._state
 
     @property
+    def version(self) -> int:
+        """Monotone id of the :class:`IndexState` currently served (stamped
+        into every :class:`SearchResult` — the hot-swap audit trail)."""
+        return self._version
+
+    @property
     def n_files(self) -> int:
         return int(self._state.meta.n_files or 1)
+
+    def swap_state(self, index, *, version: Optional[int] = None) -> int:
+        """Hot snapshot swap: atomically replace the served state.
+
+        Because every compiled step takes the state as a *pytree argument*
+        (never a baked-in constant), swapping to a state with the same
+        ``StateMeta`` reuses every compiled executable — zero recompiles
+        under live traffic (asserted in ``tests/test_cluster.py``). A state
+        with different meta (e.g. regrouped COBS) drops the runner cache so
+        the next batch recompiles against the new geometry; a different
+        kmer size is rejected outright (queued requests were bucketed under
+        the old ``k``, their batches would be cut into the wrong kmers).
+
+        NOT thread-safe on its own: callers running the async scheduler
+        must pause it first (``AsyncScheduler.pause`` — what
+        ``ReplicaRouter.swap_snapshot`` does).
+        """
+        new = state_mod.from_engine(index)
+        if state_mod.kmer_size(new.meta) != self._k:
+            raise ValueError(
+                f"cannot hot-swap to a state with kmer size "
+                f"{state_mod.kmer_size(new.meta)} (service buckets were "
+                f"built for k={self._k}); boot a fresh service instead")
+        if new.meta != self._state.meta:
+            self._runners.clear()
+        self._state = new
+        self._version = self._version + 1 if version is None else int(version)
+        return self._version
 
     # -- admission ----------------------------------------------------------
     def bucket_for(self, n_kmers: int) -> int:
         return max(next_pow2(n_kmers), self.config.min_bucket_kmers)
 
-    def submit(self, request: Union[SearchRequest, np.ndarray]) -> int:
-        """Enqueue one read; returns its request id.
-
-        The request joins its kmer bucket's queue; with ``auto_flush`` the
-        bucket executes as soon as ``max_batch`` requests are waiting.
-        """
+    def _normalize(self, request: Union[SearchRequest, np.ndarray]
+                   ) -> Tuple[SearchRequest, int]:
+        """Shared admission validation: ``(request, n_kmers)`` or raise."""
         if not isinstance(request, SearchRequest):
             request = SearchRequest(read=np.asarray(request))
         read = np.asarray(request.read, dtype=np.uint8)
@@ -199,6 +233,15 @@ class GeneSearchService:
         if n_kmers < 1:
             raise ValueError(
                 f"read of length {read.shape[0]} has no {self._k}-mers")
+        return SearchRequest(read=read, request_id=request.request_id), n_kmers
+
+    def submit(self, request: Union[SearchRequest, np.ndarray]) -> int:
+        """Enqueue one read; returns its request id.
+
+        The request joins its kmer bucket's queue; with ``auto_flush`` the
+        bucket executes as soon as ``max_batch`` requests are waiting.
+        """
+        request, n_kmers = self._normalize(request)
         rid = request.request_id
         if rid is None:
             rid = self._next_id
@@ -208,7 +251,7 @@ class GeneSearchService:
                 f"unclaimed result)")
         self._next_id = max(self._next_id, rid) + 1
         self._inflight.add(rid)
-        req = SearchRequest(read=read, request_id=rid)
+        req = SearchRequest(read=request.read, request_id=rid)
         bucket = self.bucket_for(n_kmers)
         self._pending.setdefault(bucket, []).append((req, n_kmers))
         if self.config.auto_flush and \
@@ -276,12 +319,16 @@ class GeneSearchService:
             self._runners[bucket] = (step, post)
         return self._runners[bucket]
 
-    def _flush_bucket(self, bucket: int) -> None:
-        queue = self._pending.get(bucket, [])
-        take, self._pending[bucket] = \
-            queue[:self.config.max_batch], queue[self.config.max_batch:]
-        if not take:
-            return
+    # The flush pipeline, split into its three stages so the async
+    # scheduler (repro.serving.scheduler) can overlap them across batches:
+    # _assemble (host: padding + thresholds) -> _execute (device dispatch)
+    # -> _finalize (host: materialize + decode). The synchronous path below
+    # runs them back to back — both paths are the SAME code, so scheduler
+    # answers are bit-identical to flush() by construction.
+
+    def _assemble(self, take, bucket: int):
+        """Pad ``take`` = [(request, n_kmers), ...] into the bucket's fixed
+        batch shape (host-side; no device work)."""
         rows, read_len = self.config.max_batch, bucket + self._k - 1
         batch = np.zeros((rows, read_len), dtype=np.uint8)
         valid = np.zeros((rows, bucket), dtype=bool)
@@ -292,25 +339,47 @@ class GeneSearchService:
             need[i] = query.coverage_need(self.config.theta, n_k)
         for i in range(len(take), rows):       # pad rows replay row 0;
             batch[i], valid[i], need[i] = batch[0], valid[0], need[0]
-        step, _ = self._runner(bucket)         # results are discarded
-        t0 = time.perf_counter()
-        out = np.asarray(step(self._state, jnp.asarray(batch),
-                              jnp.asarray(valid), jnp.asarray(need)))
-        wall_ms = (time.perf_counter() - t0) * 1e3
+        return batch, valid, need
+
+    def _execute(self, bucket: int, batch, valid, need):
+        """Dispatch the bucket's compiled step; returns the on-device out."""
+        step, _ = self._runner(bucket)         # pad results are discarded
+        return step(self._state, jnp.asarray(batch), jnp.asarray(valid),
+                    jnp.asarray(need))
+
+    def _finalize(self, take, bucket: int, out) -> List[SearchResult]:
+        """Materialize the device output and decode per-request verdicts."""
+        out = np.asarray(out)                  # blocks until device done
         single_set = self._state.meta.engine == "bloom"
+        results = []
         for i, (req, n_k) in enumerate(take):
             row = out[i]
             if single_set:
                 fids = (0,) if bool(row) else ()
             else:
                 fids = tuple(int(f) for f in np.nonzero(row)[0])
-            self._results[req.request_id] = SearchResult(
+            results.append(SearchResult(
                 request_id=req.request_id, matches=row, file_ids=fids,
-                n_kmers=n_k, bucket=bucket)
+                n_kmers=n_k, bucket=bucket, version=self._version))
+        return results
+
+    def _flush_bucket(self, bucket: int) -> None:
+        queue = self._pending.get(bucket, [])
+        take, self._pending[bucket] = \
+            queue[:self.config.max_batch], queue[self.config.max_batch:]
+        if not take:
+            return
+        t0 = time.perf_counter()
+        out = self._execute(bucket, *self._assemble(take, bucket))
+        for res in self._finalize(take, bucket, out):
+            self._results[res.request_id] = res
+        wall_ms = (time.perf_counter() - t0) * 1e3
         self.batch_stats.append(BatchStats(
-            bucket=bucket, n_requests=len(take), batch_rows=rows,
-            pad_rows=rows - len(take),
-            pad_kmers=rows * bucket - sum(n_k for _, n_k in take),
+            bucket=bucket, n_requests=len(take),
+            batch_rows=self.config.max_batch,
+            pad_rows=self.config.max_batch - len(take),
+            pad_kmers=self.config.max_batch * bucket
+            - sum(n_k for _, n_k in take),
             wall_ms=wall_ms))
 
     # -- observability ------------------------------------------------------

@@ -1,0 +1,507 @@
+"""Serving-cluster acceptance: the async scheduler and the replica router
+answer bit-identically to direct ``GeneSearchService.flush()`` across
+engines × schemes × theta under a ragged Poisson stream; compile counts
+stay at one per (bucket, backend) per replica; hot snapshot swap completes
+under live traffic with zero dropped or mis-versioned futures; corrupt /
+future-version snapshots are rejected while traffic keeps flowing; the
+autoscale policies move their knobs in the right direction; telemetry is
+ring-buffer bounded."""
+
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.index import BitSlicedIndex, CobsIndex, store
+from repro.index import state as state_mod
+from repro.index.store import SnapshotError
+from repro.serving import (
+    AdmissionPolicy,
+    AsyncScheduler,
+    AutoscaleConfig,
+    GeneSearchService,
+    ReplicaAutoscaler,
+    ReplicaRouter,
+    RouterConfig,
+    SchedulerConfig,
+    ServiceConfig,
+)
+from repro.serving.autoscale import EwmaRate
+from repro.serving.scheduler import FLUSH_DEADLINE, FLUSH_FULL
+
+ENGINES = ["bitsliced", "cobs"]
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(3, 120), dtype=np.uint8))
+
+
+def _build(name: str, reads, scheme: str = "idl"):
+    fids = np.arange(reads.shape[0])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads, fids)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads, np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+def _poisson_stream(reads, n_requests: int, seed: int):
+    """Ragged Poisson stream: mixed-length reads + exponential gaps (s)."""
+    rng = np.random.default_rng(seed)
+    lens = rng.choice([44, 61, 77, 99, 100, 120], size=n_requests)
+    gaps = rng.exponential(5e-4, size=n_requests)
+    return ([np.asarray(reads[i % 3][:n]) for i, n in enumerate(lens)],
+            gaps)
+
+
+def _submit_paced(target, queries, gaps):
+    """Submit with Poisson pacing so deadline flushes actually happen."""
+    futures = []
+    for q, gap in zip(queries, gaps):
+        futures.append(target.submit(q))
+        time.sleep(gap)
+    return futures
+
+
+class TestClusterParity:
+    """The acceptance matrix: scheduler + router == direct service flush."""
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_bit_identical_to_direct_flush(self, reads, engine, scheme,
+                                           theta):
+        eng = _build(engine, reads, scheme)
+        svc_cfg = ServiceConfig(theta=theta, max_batch=4)
+        queries, gaps = _poisson_stream(reads, 24, seed=11)
+
+        # the reference: direct synchronous service flush
+        ref_svc = GeneSearchService(eng, svc_cfg)
+        ref = ref_svc.search(queries)
+
+        # async scheduler under a paced stream (deadline + full flushes)
+        with AsyncScheduler(GeneSearchService(eng, svc_cfg),
+                            SchedulerConfig(max_delay_ms=1.0)) as sched:
+            futures = _submit_paced(sched, queries, gaps)
+            sched.drain()
+            got = [f.result() for f in futures]
+            for r, want in zip(got, ref):
+                np.testing.assert_array_equal(np.asarray(r.matches),
+                                              np.asarray(want.matches))
+                assert r.file_ids == want.file_ids
+            assert all(c == 1 for c in sched.compile_counts().values())
+
+        # 2-replica router under the same paced stream
+        with ReplicaRouter(eng, svc_cfg,
+                           RouterConfig(n_replicas=2)) as router:
+            futures = _submit_paced(router, queries, gaps)
+            router.drain()
+            for f, want in zip(futures, ref):
+                r = f.result()
+                np.testing.assert_array_equal(np.asarray(r.matches),
+                                              np.asarray(want.matches))
+                assert r.file_ids == want.file_ids
+            for counts in router.compile_counts().values():
+                assert all(c == 1 for c in counts.values())
+
+
+class TestSchedulerEventLoop:
+    def test_deadline_flush_without_drain(self, reads):
+        """A lone request on an idle bucket is flushed by the deadline
+        thread — no drain(), no full batch."""
+        eng = _build("bitsliced", reads)
+        with AsyncScheduler(GeneSearchService(eng, ServiceConfig(max_batch=8)),
+                            SchedulerConfig(max_delay_ms=5.0)) as sched:
+            fut = sched.submit(np.asarray(reads[0]))
+            res = fut.result(timeout=30)     # resolved without drain()
+            want = np.asarray(eng.msmt(jnp.asarray(reads[0])[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+            assert sched.stats[-1].flush_reason == FLUSH_DEADLINE
+            assert sched.outstanding == 0
+
+    def test_full_flush_reason_and_queue_ms(self, reads):
+        eng = _build("bitsliced", reads)
+        with AsyncScheduler(GeneSearchService(eng, ServiceConfig(max_batch=2)),
+                            SchedulerConfig(max_delay_ms=500.0)) as sched:
+            f1 = sched.submit(np.asarray(reads[0]))
+            f2 = sched.submit(np.asarray(reads[1]))
+            f1.result(timeout=30), f2.result(timeout=30)
+            assert sched.stats[-1].flush_reason == FLUSH_FULL
+            assert sched.stats[-1].n_requests == 2
+            assert sched.stats[-1].queue_ms >= 0.0
+            assert 0.0 < sched.stats[-1].occupancy <= 1.0
+
+    def test_stats_ring_buffer_is_bounded(self, reads):
+        """Soak runs cannot grow telemetry unboundedly (stats_window)."""
+        eng = _build("bitsliced", reads)
+        with AsyncScheduler(GeneSearchService(eng, ServiceConfig(max_batch=1)),
+                            SchedulerConfig(stats_window=3)) as sched:
+            sched.search([np.asarray(reads[0])] * 7)
+            assert len(sched.stats) == 3
+            assert sched.service.batch_stats.maxlen is not None
+
+    def test_submit_after_close_raises(self, reads):
+        sched = AsyncScheduler(GeneSearchService(_build("bitsliced", reads)))
+        sched.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit(np.asarray(reads[0]))
+        sched.close()                        # idempotent
+
+    def test_invalid_read_fails_fast_not_in_future(self, reads):
+        with AsyncScheduler(
+                GeneSearchService(_build("bitsliced", reads))) as sched:
+            with pytest.raises(ValueError, match="no 31-mers"):
+                sched.submit(np.zeros(5, dtype=np.uint8))
+            with pytest.raises(ValueError, match="one 1-D read"):
+                sched.submit(np.asarray(reads))
+
+    def test_duplicate_inflight_request_id_rejected(self, reads):
+        """The PR-4 sync-service rule survives the async path: one live
+        result per explicit request id."""
+        from repro.serving import SearchRequest
+        eng = _build("bitsliced", reads)
+        with AsyncScheduler(GeneSearchService(eng, ServiceConfig(max_batch=8)),
+                            SchedulerConfig(max_delay_ms=200.0)) as sched:
+            fut = sched.submit(SearchRequest(read=np.asarray(reads[0]),
+                                             request_id=7))
+            with pytest.raises(ValueError, match="in flight"):
+                sched.submit(SearchRequest(read=np.asarray(reads[1]),
+                                           request_id=7))
+            sched.drain()
+            assert fut.result().request_id == 7
+            # resolved: the id is free again
+            assert sched.submit(SearchRequest(read=np.asarray(reads[1]),
+                                              request_id=7)
+                                ).result(timeout=30).request_id == 7
+
+    def test_overdue_bucket_beats_full_bucket(self, reads):
+        """A hot bucket must not starve a lone overdue request on another
+        bucket (white-box: _pick prefers the overdue bucket)."""
+        from repro.serving.scheduler import _Pending
+        from concurrent.futures import Future
+        eng = _build("bitsliced", reads)
+        sched = AsyncScheduler(
+            GeneSearchService(eng, ServiceConfig(max_batch=2)),
+            SchedulerConfig(max_delay_ms=5.0))
+        sched.pause()                      # flusher idle; queues are ours
+        try:
+            import collections as c
+            now = time.monotonic()
+            stale = _Pending(request=None, n_kmers=1, future=Future(),
+                             t_enq=now - 1.0)       # 1 s overdue
+            fresh = [_Pending(request=None, n_kmers=1, future=Future(),
+                              t_enq=now) for _ in range(2)]
+            with sched._lock:
+                sched._queues = {128: c.deque(fresh),   # full (max_batch=2)
+                                 32: c.deque([stale])}  # lone but overdue
+                sched._paused = False
+                pick = sched._pick(time.monotonic())
+                sched._paused = True
+                sched._queues = {}
+            assert pick == (32, "deadline")
+        finally:
+            sched.resume()
+            sched.close()
+
+
+class TestRouterPolicies:
+    def test_round_robin_spreads_over_replicas(self, reads):
+        eng = _build("bitsliced", reads)
+        with ReplicaRouter(eng, ServiceConfig(max_batch=2),
+                           RouterConfig(n_replicas=2, policy="round_robin")
+                           ) as router:
+            router.search([np.asarray(reads[i % 3]) for i in range(8)])
+            replicas = {s.replica for s in router.cluster_stats()}
+            assert replicas == {0, 1}
+
+    def test_bucket_affinity_pins_buckets(self, reads):
+        """Every batch of one kmer bucket runs on ONE replica — its
+        compile cache stays hot for exactly its buckets."""
+        eng = _build("bitsliced", reads)
+        with ReplicaRouter(eng, ServiceConfig(max_batch=2),
+                           RouterConfig(n_replicas=2,
+                                        policy="bucket_affinity")) as router:
+            qs = [np.asarray(reads[i % 3][:n])
+                  for i, n in enumerate([120, 44, 120, 44, 99, 120, 44, 99])]
+            router.search(qs)
+            by_bucket = {}
+            for s in router.cluster_stats():
+                by_bucket.setdefault(s.bucket, set()).add(s.replica)
+            assert all(len(reps) == 1 for reps in by_bucket.values())
+            assert len(by_bucket) >= 2       # stream really spans buckets
+
+    def test_least_outstanding_balances(self, reads):
+        eng = _build("bitsliced", reads)
+        with ReplicaRouter(eng, ServiceConfig(max_batch=4),
+                           RouterConfig(n_replicas=2,
+                                        policy="least_outstanding")
+                           ) as router:
+            res = router.search([np.asarray(reads[i % 3])
+                                 for i in range(16)])
+            assert len(res) == 16
+            assert router.requests_served() == 16
+
+    def test_bad_policy_rejected(self):
+        with pytest.raises(ValueError, match="routing policy"):
+            RouterConfig(policy="random")
+        with pytest.raises(ValueError, match="n_replicas"):
+            RouterConfig(n_replicas=0)
+
+
+class TestHotSwap:
+    @pytest.fixture()
+    def snapshots(self, tmp_path, reads, rng):
+        """(snap_v0, snap_v1, new_read): v1 additionally indexes new_read
+        into file 5 — a query for it distinguishes the two versions."""
+        eng = _build("bitsliced", reads)
+        snap0 = store.save(eng, str(tmp_path / "v0"))
+        new_read = np.asarray(
+            rng.integers(0, 4, size=120, dtype=np.uint8))
+        eng1 = state_mod.to_engine(store.load(snap0)).insert_batch(
+            jnp.asarray(new_read)[None], np.asarray([5]))
+        snap1 = store.save(eng1, str(tmp_path / "v1"))
+        return snap0, snap1, new_read
+
+    def test_swap_under_live_traffic(self, snapshots, reads):
+        """The acceptance bar: swap while a submitter thread is firing;
+        zero dropped futures, zero mis-versioned results, compile-once."""
+        snap0, snap1, new_read = snapshots
+        ref0 = store.load_engine(snap0)
+        ref1 = store.load_engine(snap1)
+        queries = [np.asarray(reads[i % 3]) for i in range(3)] + [new_read]
+        want = {
+            0: [np.asarray(ref0.msmt(jnp.asarray(q)[None]))[0]
+                for q in queries],
+            1: [np.asarray(ref1.msmt(jnp.asarray(q)[None]))[0]
+                for q in queries],
+        }
+        router = ReplicaRouter.from_snapshot(
+            snap0, ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=2),
+        )
+        futures = []                       # (query index, future)
+        stop = threading.Event()
+
+        def submitter():
+            i = 0
+            while not stop.is_set():
+                futures.append((i % 4, router.submit(queries[i % 4])))
+                i += 1
+                time.sleep(0.001)
+
+        t = threading.Thread(target=submitter)
+        t.start()
+        try:
+            time.sleep(0.05)               # traffic flowing on v0
+            new_version = router.swap_snapshot(snap1)
+            assert new_version == 1
+            time.sleep(0.05)               # traffic flowing on v1
+        finally:
+            stop.set()
+            t.join()
+        router.drain()
+        n_submitted = len(futures)
+        assert n_submitted > 20
+        seen_versions = set()
+        for qi, fut in futures:
+            res = fut.result(timeout=30)   # zero dropped futures
+            seen_versions.add(res.version)
+            # zero mis-versioned results: the verdict must match the
+            # reference engine of the version stamped on the result
+            np.testing.assert_array_equal(
+                np.asarray(res.matches), want[res.version][qi])
+        assert seen_versions == {0, 1}     # swap really happened mid-stream
+        # post-swap: everything serves v1, and it finds the new read
+        res = router.submit(new_read).result(timeout=30)
+        assert res.version == 1 and 5 in res.file_ids
+        # same-geometry swap reuses every executable: still one compile
+        # per (bucket, backend) per replica
+        for counts in router.compile_counts().values():
+            assert all(c == 1 for c in counts.values())
+        router.close()
+
+    def test_corrupt_snapshot_rejected_traffic_flows(self, snapshots,
+                                                     reads, tmp_path):
+        snap0, snap1, _ = snapshots
+        bad = str(tmp_path / "bad")
+        os.makedirs(bad)
+        with open(os.path.join(bad, "manifest.json"), "w") as f:
+            f.write("{not json")
+        with ReplicaRouter.from_snapshot(
+                snap0, ServiceConfig(max_batch=2),
+                RouterConfig(n_replicas=2)) as router:
+            with pytest.raises(SnapshotError):
+                router.swap_snapshot(bad)
+            assert router.version == 0     # fleet untouched
+            # corrupt words payload: load-time CRC catches it
+            corrupt = str(tmp_path / "corrupt")
+            store.save(store.load(snap1), corrupt)
+            words = os.path.join(corrupt, "words_0.npy")
+            raw = bytearray(open(words, "rb").read())
+            raw[-1] ^= 0xFF
+            open(words, "wb").write(bytes(raw))
+            with pytest.raises(SnapshotError, match="checksum"):
+                router.swap_snapshot(corrupt)
+            assert router.version == 0
+            # traffic keeps flowing on the old version
+            res = router.search([np.asarray(reads[0])])
+            assert res[0].version == 0
+
+    def test_future_version_snapshot_rejected(self, snapshots, reads,
+                                              tmp_path):
+        snap0, snap1, _ = snapshots
+        futur = str(tmp_path / "future")
+        store.save(store.load(snap1), futur)
+        mpath = os.path.join(futur, "manifest.json")
+        manifest = json.load(open(mpath))
+        manifest["version"] = store.VERSION + 1
+        json.dump(manifest, open(mpath, "w"))
+        with ReplicaRouter.from_snapshot(
+                snap0, ServiceConfig(max_batch=2),
+                RouterConfig(n_replicas=2)) as router:
+            with pytest.raises(SnapshotError, match="version"):
+                router.swap_snapshot(futur)
+            assert router.version == 0
+            assert router.search([np.asarray(reads[0])])[0].version == 0
+
+    def test_kmer_size_change_rejected(self, snapshots, reads):
+        snap0, _, _ = snapshots
+        other = BitSlicedIndex.build(
+            idl.IDLConfig(k=21, t=12, L=1 << 10, eta=2, m=1 << 16),
+            "idl", n_files=8)
+        with ReplicaRouter.from_snapshot(snap0) as router:
+            with pytest.raises(ValueError, match="kmer size"):
+                router.swap_state(other)
+
+
+class TestAutoscalePolicies:
+    def test_ewma_rate_tracks_and_decays(self):
+        r = EwmaRate(halflife_s=0.5)
+        t = 100.0
+        for i in range(2000):
+            r.observe(t + i * 1e-3)        # 1 kHz for 2 s
+        now = t + 2.0
+        assert 700 <= r.rate(now) <= 1300  # converged near 1000/s
+        assert r.rate(now + 2.0) < r.rate(now) * 0.1   # idle decay
+
+    def test_admission_idle_bucket_flushes_immediately(self):
+        p = AdmissionPolicy(AutoscaleConfig())
+        assert p.target_batch(64, now=0.0, max_batch=16) == 1
+        assert p.deadline_ms(64, now=0.0, max_batch=16) == \
+            p.config.deadline_ms_min
+
+    def test_admission_hot_bucket_batches_up(self):
+        p = AdmissionPolicy(AutoscaleConfig())
+        t = 0.0
+        for i in range(5000):
+            p.observe_arrival(64, t + i * 1e-4)      # 10 kHz stream
+        now = t + 0.5
+        assert p.target_batch(64, now, max_batch=16) == 16
+        # deadline ~ fill time of a full batch: 16/10k = 1.6 ms
+        dl = p.deadline_ms(64, now, max_batch=16)
+        assert p.config.deadline_ms_min < dl < p.config.deadline_ms_max
+
+    def test_admission_occupancy_feedback_shrinks_deadline(self):
+        import dataclasses as dc
+        from repro.serving.scheduler import ClusterStats
+        p = AdmissionPolicy(AutoscaleConfig())
+        t = 0.0
+        for i in range(200):
+            p.observe_arrival(32, t + i * 1e-3)      # enough rate to hold
+        base = p.deadline_ms(32, 0.2, max_batch=16)
+        stats = ClusterStats(replica=0, version=0, bucket=32, n_requests=2,
+                             batch_rows=16, flush_reason="deadline",
+                             queue_ms=1.0, wall_ms=1.0)
+        for _ in range(20):                 # deadline flushes, 12% occupancy
+            p.observe_batch(stats, 0.2)
+        shrunk = p.deadline_ms(32, 0.2, max_batch=16)
+        assert shrunk < base                # we waited, nobody came: stop
+        full = dc.replace(stats, n_requests=16, flush_reason="full")
+        for _ in range(30):
+            p.observe_batch(full, 0.2)
+        assert p.deadline_ms(32, 0.2, max_batch=16) > shrunk
+
+    def test_replica_autoscaler_scales_up_down_with_bounds(self):
+        import dataclasses as dc
+        from repro.serving.scheduler import ClusterStats
+        a = ReplicaAutoscaler(AutoscaleConfig(
+            min_replicas=1, max_replicas=3, cooldown_s=0.0,
+            target_utilization=0.5))
+        batch = ClusterStats(replica=0, version=0, bucket=64, n_requests=16,
+                             batch_rows=16, flush_reason="full",
+                             queue_ms=0.5, wall_ms=16.0)   # mu = 1000 req/s
+        t = 0.0
+        for i in range(4000):
+            a.observe_arrival(t + i * 5e-4)       # 2 kHz arrivals
+        a.observe_batch(batch, t + 2.0)
+        now = t + 2.0
+        # demand: 2000/(1000*0.5) = 4 -> clamped to max 3, one step at a
+        # time with hysteresis
+        assert a.recommend(now, 1, outstanding=0, max_batch=16) == 2
+        assert a.recommend(now, 2, outstanding=0, max_batch=16) == 3
+        assert a.recommend(now, 3, outstanding=0, max_batch=16) == 3
+        # idle an hour later: scale down one step, floor at min_replicas
+        later = now + 3600.0
+        assert a.recommend(later, 3, outstanding=0, max_batch=16) == 2
+        assert a.recommend(later, 1, outstanding=0, max_batch=16) == 1
+
+    def test_replica_autoscaler_cooldown_and_backlog(self):
+        from repro.serving.scheduler import ClusterStats
+        a = ReplicaAutoscaler(AutoscaleConfig(
+            min_replicas=1, max_replicas=4, cooldown_s=10.0))
+        batch = ClusterStats(replica=0, version=0, bucket=64, n_requests=16,
+                             batch_rows=16, flush_reason="full",
+                             queue_ms=0.5, wall_ms=16.0)
+        a.observe_batch(batch, 0.0)
+        # backlog forces a step up even with a modest rate estimate
+        assert a.recommend(1.0, 1, outstanding=100, max_batch=16) == 2
+        # cooldown: the next change is suppressed for 10 s
+        assert a.recommend(2.0, 2, outstanding=200, max_batch=16) == 2
+        assert a.recommend(12.0, 2, outstanding=200, max_batch=16) == 3
+
+    def test_router_scale_to_drains_removed_replicas(self, reads):
+        eng = _build("bitsliced", reads)
+        with ReplicaRouter(eng, ServiceConfig(max_batch=2),
+                           RouterConfig(n_replicas=1)) as router:
+            assert router.scale_to(3) == 3
+            res = router.search([np.asarray(reads[i % 3])
+                                 for i in range(12)])
+            assert len(res) == 12
+            assert router.scale_to(1) == 1     # drains, zero dropped
+            res = router.search([np.asarray(reads[0])])
+            assert len(res) == 1
+            with pytest.raises(ValueError, match="below 1"):
+                router.scale_to(0)
+
+    def test_router_autoscale_step_applies_recommendation(self, reads):
+        eng = _build("bitsliced", reads)
+        with ReplicaRouter(
+                eng, ServiceConfig(max_batch=2),
+                RouterConfig(n_replicas=1,
+                             autoscale=AutoscaleConfig(
+                                 min_replicas=1, max_replicas=2,
+                                 cooldown_s=0.0, target_utilization=0.9)),
+        ) as router:
+            assert router.autoscale_step() == 1   # no load: stays at min
+            router.search([np.asarray(reads[i % 3]) for i in range(8)])
+            # force the demand signal: pretend arrivals far outrun service
+            for i in range(5000):
+                router.autoscaler.observe_arrival(time.monotonic())
+            n = router.autoscale_step()
+            assert n == 2                        # one hysteresis step up
+            res = router.search([np.asarray(reads[0])] * 4)
+            assert len(res) == 4

@@ -1,0 +1,69 @@
+"""FPR-vs-theory gate (ROADMAP "paper fidelity"): the measured FPR of the
+benchmarks/paper_tables.py §6 sweep must track its prediction across fill
+fractions × schemes — eq. (5) two-sided for the classic-BF RH scheme,
+the Theorem 2 upper bound for IDL and the idl-bbf blocked composition."""
+
+import numpy as np
+import pytest
+
+from benchmarks.paper_tables import fpr_sweep_rows
+from repro.core import theory
+
+
+@pytest.fixture(scope="module")
+def rows():
+    # small-m instance of the same sweep the benchmark prints; loads span
+    # ~18% to ~63% fill at eta=4
+    return fpr_sweep_rows(m=1 << 20, loads=(0.05, 0.125, 0.25),
+                          n_neg=150_000, seed=101)
+
+
+def test_sweep_covers_the_matrix(rows):
+    assert {r["scheme"] for r in rows} == {"rh", "idl", "idl-bbf"}
+    assert len({r["load"] for r in rows}) == 3
+    # fill really sweeps: the classic-BF fill matches 1 - e^{-eta n / m}
+    for r in rows:
+        if r["scheme"] == "rh":
+            want = 1.0 - np.exp(-4 * r["n"] / r["m"])
+            assert abs(r["fill"] - want) < 0.02
+
+
+def test_rh_matches_eq5_two_sided(rows):
+    """Classic BF: eq. (5) is an estimate, not a bound — measured FPR must
+    bracket it (x2 tolerance, plus Poisson slack when hits are scarce)."""
+    for r in rows:
+        if r["scheme"] != "rh":
+            continue
+        expected_hits = r["predicted"] * r["n_neg_kmers"]
+        slack = 5.0 * np.sqrt(max(expected_hits, 1.0)) / r["n_neg_kmers"]
+        assert r["measured"] <= 2.0 * r["predicted"] + slack, r
+        if expected_hits >= 50:
+            assert r["measured"] >= 0.5 * r["predicted"] - slack, r
+
+
+def test_idl_and_bbf_under_thm2_bound(rows):
+    """IDL (and the §3.3 blocked composition) must sit under the Theorem 2
+    upper bound at every fill fraction."""
+    for r in rows:
+        if r["kind"] != "thm2_bound":
+            continue
+        slack = 5.0 / np.sqrt(r["n_neg_kmers"])
+        assert r["measured"] <= r["predicted"] + slack, r
+
+
+def test_idl_tracks_rh_fpr_scaling(rows):
+    """The paper's claim: IDL trades locality for (bounded) extra FPR —
+    same order of magnitude as the classic BF, not a blowup."""
+    by = {(r["scheme"], r["load"]): r for r in rows}
+    for load in (0.125, 0.25):
+        rh = by[("rh", load)]["measured"]
+        idl_m = by[("idl", load)]["measured"]
+        if rh > 1e-4:
+            assert idl_m <= 30.0 * rh + 1e-3, (load, rh, idl_m)
+
+
+def test_bound_is_monotone_in_fill():
+    """Sanity on the theory side: the Thm 2 bound rises with load."""
+    bounds = [theory.idl_bf_fpr_bound(1 << 20, int(f * (1 << 20)), 4, 1 << 12)
+              for f in (0.05, 0.125, 0.25)]
+    assert bounds == sorted(bounds)

@@ -13,6 +13,7 @@ from repro.index import (
     CobsIndex,
     PackedBloomIndex,
     RamboIndex,
+    packed,
     store,
 )
 from repro.serving import (
@@ -211,3 +212,47 @@ class TestSnapshotStartup:
             ServiceConfig(backend="cuda")
         with pytest.raises(ValueError, match="max_batch"):
             ServiceConfig(max_batch=0)
+
+
+class TestV1CompatLayer:
+    """serving.genesearch is deprecated: every v1 entry point warns, and
+    the v1 surface stays bit-identical to the v2 path it delegates to."""
+
+    def test_v1_warns_and_matches_v2(self, reads, queries):
+        from repro.serving import genesearch as gs
+
+        cfg = gs.GeneSearchConfig(n_files=32, m=1 << 16, L=1 << 10, eta=2,
+                                  read_len=120)
+        fids = jnp.asarray([0, 7, 31], dtype=jnp.int32)
+        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
+            index = gs.empty_index(cfg)
+        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
+            index = gs.insert_read_batch(index, cfg, reads, fids)
+        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
+            got = gs.serve_step(index, reads, cfg)
+        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
+            ids = gs.match_file_ids(np.asarray(got)[0])
+
+        # bit-identical through the v2 path: same storage geometry via the
+        # protocol-level engine + the dynamic-batching service
+        eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme,
+                                   n_files=cfg.n_files)
+        eng = eng.insert_batch(reads, np.asarray(fids))
+        want_words = np.asarray(eng.words)
+        np.testing.assert_array_equal(np.asarray(index), want_words)
+        svc = GeneSearchService(eng, ServiceConfig(max_batch=4))
+        for i, res in enumerate(svc.search(list(np.asarray(reads)))):
+            np.testing.assert_array_equal(
+                np.asarray(res.matches),
+                packed.unpack_file_bits(jnp.asarray(got[i]), cfg.n_files))
+        assert ids == list(
+            svc.search([np.asarray(reads[0])])[0].file_ids)
+
+    def test_v2_service_does_not_warn(self, reads):
+        import warnings
+
+        eng = _build("bitsliced", reads)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            svc = GeneSearchService(eng, ServiceConfig(max_batch=2))
+            svc.search([np.asarray(reads[0])])
