@@ -1,0 +1,317 @@
+"""Live-index benchmark: ingest-while-serving under a mixed Poisson stream.
+
+The new workload the LSM subsystem opens: a :class:`LiveReplicaRouter`
+(2 replicas, write-ahead journal, base+delta per replica) serves a
+**90/10 read/write** Poisson stream. Measured:
+
+* **insert-to-searchable latency** — scheduled write arrival to the moment
+  the write's ``InsertAck`` has resolved on EVERY replica (at which point
+  the read is answerable fleet-wide: acks carry the ``(base_version,
+  delta_seq)`` watermark the result stamps prove). Coordinated-omission-
+  safe: latency is measured against the scheduled Poisson arrival, so a
+  write path that falls behind is charged its queueing delay.
+* **query p50 under the mixed stream** — same CO-safe accounting, while
+  10% of arrivals are writes mutating every replica's delta.
+* **before/after compaction** — the same query-only probe stream timed
+  with the delta holding all absorbed writes, then again after
+  ``router.compact()`` folds delta into base (delta empty, version+1).
+  Compile counts are asserted ==1 per (bucket, backend) per replica
+  across the compaction — the publish must not recompile anything.
+
+Honest contention notes (recorded in the JSON): this box has one XLA:CPU
+device, so (a) the two-probe merged query pays its extra probe on the
+same device the writes scatter into — insert and query latencies contend
+end-to-end; (b) the compaction merge is "off the hot path" logically
+(queries keep answering from the frozen pair) but physically shares the
+device, so mid-compaction latencies bulge; (c) insert-to-searchable
+includes the scheduler flusher tick (``max_delay_ms``), which dominates
+when the box is idle. Wall-clock on this host swings 2-3x run-to-run;
+medians over the whole stream, not single shots.
+
+``--smoke`` (CI) asserts, with no JSON written: the live fleet answers
+bit-identically to a single-index oracle holding the union of all inserts
+(including queries racing a mid-stream compaction), zero dropped futures,
+and zero recompiles across the compaction swap.
+
+    PYTHONPATH=src python -m benchmarks.live_bench [--smoke]
+
+Writes ``BENCH_live.json`` (full mode) next to the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import idl
+from repro.data import genome
+from repro.index import BitSlicedIndex, ingest
+from repro.serving import (
+    GeneSearchService,
+    LiveReplicaRouter,
+    RouterConfig,
+    SchedulerConfig,
+    ServiceConfig,
+)
+
+
+def _build_base(m: int, n_files: int, genome_len: int) -> BitSlicedIndex:
+    cfg = idl.IDLConfig(k=31, t=16, L=1 << 12, eta=3, m=m)
+    eng = BitSlicedIndex.build(cfg, "idl", n_files=n_files)
+    archive = genome.synth_archive(n_files=n_files, genome_len=genome_len,
+                                   seed=42)
+    return ingest.build_archive(eng, archive, read_len=230, chunk_reads=64)
+
+
+def _mixed_stream(pool, fresh_reads, n_requests: int, write_frac: float,
+                  rps: float, seed: int):
+    """(kind, payload, gap) replay: ragged queries + single-read writes."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rps, size=n_requests)
+    events = []
+    w = 0
+    for i in range(n_requests):
+        if rng.random() < write_frac and w < len(fresh_reads):
+            events.append(("write", fresh_reads[w], gaps[i]))
+            w += 1
+        else:
+            n = int(rng.choice([70, 110, 150, 230],
+                               p=[0.3, 0.3, 0.2, 0.2]))
+            q = pool[int(rng.integers(0, len(pool)))]
+            events.append(("query", np.asarray(q[:n]), gaps[i]))
+    return events
+
+
+def _replay_timed(router: LiveReplicaRouter, events) -> dict:
+    """CO-safe paced replay with per-write searchable stamps."""
+    q_lat, w_done, w_sched, futures = [], {}, [], []
+    sched_t = time.perf_counter()
+    for kind, payload, gap in events:
+        sched_t += gap
+        now = time.perf_counter()
+        if now < sched_t:
+            time.sleep(sched_t - now)
+        if kind == "query":
+            slot = len(q_lat)
+            q_lat.append(np.nan)
+            fut = router.submit(payload)
+            fut.add_done_callback(
+                lambda f, i=slot, s=sched_t: q_lat.__setitem__(
+                    i, (time.perf_counter() - s) * 1e3))
+            futures.append(fut)
+        else:
+            reads, fids = payload
+            wid = len(w_sched)
+            w_sched.append(sched_t)
+            acks = router.insert(reads, fids)
+            stamps = w_done.setdefault(wid, [])
+            for a in acks:
+                # list.append is atomic under the GIL; searchable = the
+                # LAST replica's ack, resolved as max() after the drain
+                a.add_done_callback(
+                    lambda f, s=stamps: s.append(time.perf_counter()))
+            futures.extend(acks)
+    router.drain()
+    for f in futures:
+        f.result(timeout=120)          # zero dropped — raises otherwise
+    w_ms = np.asarray([(max(w_done[i]) - s) * 1e3
+                       for i, s in enumerate(w_sched)])
+    return {"query_ms": np.asarray(q_lat), "write_ms": w_ms}
+
+
+def _pcts(a: np.ndarray) -> dict:
+    return {"p50": round(float(np.percentile(a, 50)), 3),
+            "p99": round(float(np.percentile(a, 99)), 3)}
+
+
+def _assert_compile_once(router) -> dict:
+    counts = router.compile_counts()
+    for per in counts.values():
+        assert all(c == 1 for c in per.values()), (
+            f"a bucket recompiled: {counts}")
+    return {str(rid): {str(b): c for b, c in per.items()}
+            for rid, per in counts.items()}
+
+
+def run(m: int, n_files: int, n_requests: int, rps: float,
+        n_replicas: int) -> dict:
+    eng = _build_base(m, n_files, genome_len=3_000)
+    archive = genome.synth_archive(n_files=n_files, genome_len=3_000,
+                                   seed=42)
+    pool = [f.reads(230, 4)[i % 4] for i, f in enumerate(archive)]
+    # fresh material: reads the base has never seen, written into
+    # existing file columns under traffic
+    fresh = genome.synth_archive(n_files=8, genome_len=3_000, seed=77)
+    rng = np.random.default_rng(3)
+    fresh_reads = [
+        (np.asarray(f.reads(230, 1)[0])[None],
+         np.asarray([int(rng.integers(0, n_files))], dtype=np.int32))
+        for f in fresh for _ in range(6)]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        router = LiveReplicaRouter(
+            eng, ServiceConfig(max_batch=16),
+            RouterConfig(n_replicas=n_replicas,
+                         scheduler=SchedulerConfig(max_delay_ms=2.0)),
+            journal_path=str(pathlib.Path(tmp) / "wal.bin"))
+        try:
+            # warmup compiles (all query buckets + the write path)
+            for q in (pool[0][:70], pool[0][:110], pool[0][:150],
+                      pool[0][:230]):
+                router.submit(np.asarray(q)).result(timeout=120)
+            for a in router.insert(*fresh_reads[0]):
+                a.result(timeout=120)
+
+            events = _mixed_stream(pool, fresh_reads[1:], n_requests,
+                                   write_frac=0.1, rps=rps, seed=7)
+            mixed = _replay_timed(router, events)
+
+            # before/after compaction: identical query-only probe stream
+            probe = _mixed_stream(pool, [], n_requests // 2,
+                                  write_frac=0.0, rps=rps, seed=8)
+            pre = _replay_timed(router, probe)
+            delta_before = router.delta_batches()
+            t0 = time.perf_counter()
+            version = router.compact()
+            compact_s = time.perf_counter() - t0
+            post = _replay_timed(router, probe)
+            compiles = _assert_compile_once(router)
+        finally:
+            router.close()
+
+    return {
+        "config": {
+            "engine": "bitsliced", "scheme": "idl", "m": m,
+            "n_files": n_files, "n_requests": n_requests,
+            "write_frac": 0.1, "offered_rps": rps,
+            "n_replicas": n_replicas, "max_batch": 16,
+            "max_delay_ms": 2.0, "device": jax.default_backend(),
+        },
+        "mixed_stream_90_10": {
+            "query_ms": _pcts(mixed["query_ms"]),
+            "insert_to_searchable_ms": _pcts(mixed["write_ms"]),
+            "n_queries": int(len(mixed["query_ms"])),
+            "n_writes": int(len(mixed["write_ms"])),
+        },
+        "compaction": {
+            "delta_batches_folded": delta_before,
+            "published_version": version,
+            "compact_wall_s": round(compact_s, 3),
+            "query_ms_before": _pcts(pre["query_ms"]),
+            "query_ms_after": _pcts(post["query_ms"]),
+            "compiles_per_bucket": compiles,
+        },
+        "notes": [
+            "single XLA:CPU device: the delta probe and the write scatter "
+            "share the serving device, so insert and query latencies "
+            "contend end-to-end; on a multi-device host the delta is "
+            "replica-local and the merge runs off-device",
+            "insert-to-searchable = scheduled Poisson arrival -> last "
+            "replica's InsertAck; includes the 2ms flusher tick, which "
+            "dominates at low offered load",
+            "compaction merge shares the device with serving on this box "
+            "('off the hot path' is logical, not physical here) — the "
+            "before/after query p50 gap, not mid-compaction latency, is "
+            "the stable signal; wall-clock swings 2-3x run-to-run",
+            "offered_rps sits below this box's ~65rps saturation point "
+            "(at 90/10 a write costs ~120ms — both replicas' scatters "
+            "serialize on the one device, dominated by the non-donated "
+            "delta copy that keeps the buffer live for a concurrent "
+            "compaction plan); past saturation, CO-safe accounting "
+            "correctly reports seconds of queueing delay rather than "
+            "service latency",
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Smoke: live fleet == union-index oracle, mid-compaction, zero recompiles.
+# ---------------------------------------------------------------------------
+
+def _smoke(m: int = 1 << 16) -> None:
+    cfg = idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+    rng = np.random.default_rng(5)
+    base_reads = jnp.asarray(rng.integers(0, 4, size=(3, 150),
+                                          dtype=np.uint8))
+    write_reads = [rng.integers(0, 4, size=(1, 150), dtype=np.uint8)
+                   for _ in range(6)]
+    write_fids = [np.asarray([int(rng.integers(0, 24))], dtype=np.int32)
+                  for _ in range(6)]
+    eng = BitSlicedIndex.build(cfg, "idl", n_files=24).insert_batch(
+        base_reads, np.arange(3))
+
+    # oracle: ONE index holding the union of base + every write
+    oracle = BitSlicedIndex.build(cfg, "idl", n_files=24).insert_batch(
+        base_reads, np.arange(3))
+    for r, f in zip(write_reads, write_fids):
+        oracle = oracle.insert_batch(jnp.asarray(r), f)
+    queries = [np.asarray(base_reads[i % 3][:n])
+               for i, n in enumerate((70, 110, 150, 150, 70, 110))]
+    queries += [w[0] for w in write_reads]
+    want = GeneSearchService(oracle, ServiceConfig(max_batch=4)
+                             ).search(queries)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        router = LiveReplicaRouter(
+            eng, ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=2,
+                         scheduler=SchedulerConfig(max_delay_ms=0.5)),
+            journal_path=str(pathlib.Path(tmp) / "wal.bin"))
+        try:
+            futures = []
+            # concurrent write+query load: interleave, compact mid-stream
+            for i, (r, f) in enumerate(zip(write_reads, write_fids)):
+                futures += [router.submit(q) for q in queries[:3]]
+                futures += router.insert(r, f)
+                if i == 3:
+                    assert router.compact() == 1   # mid-stream fold
+            router.drain()
+            for fut in futures:
+                fut.result(timeout=120)            # zero dropped
+            got = router.search(queries)           # all writes absorbed
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g.matches),
+                                              np.asarray(w.matches))
+            assert router.compact() == 2           # fold the rest
+            got = router.search(queries)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g.matches),
+                                              np.asarray(w.matches))
+            _assert_compile_once(router)
+            assert router.delta_batches() == 0
+        finally:
+            router.close()
+    print("smoke: live fleet == union-index oracle (incl. mid-compaction); "
+          "zero dropped futures; one compile per bucket per replica "
+          "across 2 compactions")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="parity vs oracle + zero-drop + compile-once; "
+                         "no JSON")
+    args = ap.parse_args()
+
+    if args.smoke:
+        _smoke()
+        return
+
+    res = run(m=1 << 22, n_files=64, n_requests=256, rps=25,
+              n_replicas=2)
+    out_path = pathlib.Path(
+        __file__).resolve().parent.parent / "BENCH_live.json"
+    out_path.write_text(json.dumps(res, indent=2) + "\n")
+    print(json.dumps(res, indent=2))
+    print(f"\nwrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

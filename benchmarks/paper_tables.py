@@ -11,10 +11,19 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from benchmarks.common import Csv, locality_metrics, timeit
 from repro.core import idl, kmers, theory
 from repro.data import genome
-from repro.index import CobsIndex, PackedBloomIndex, RamboIndex, registry
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    ingest,
+    registry,
+)
 
 
 # --------------------------------------------------------------------------
@@ -337,5 +346,80 @@ def bbf_compose() -> None:
         csv.row(scheme, fpr, lm["page_miss"], lm["line_miss"])
 
 
+# --------------------------------------------------------------------------
+# Minimizer quality curve: window_min sweep — recall/FPR vs index size.
+# The paper claims densification knobs don't compromise quality; this
+# measures it. Inserts keep only window-w minimizers (expected density
+# 2/(w+1)), queries probe every kmer, so the coverage threshold is scaled
+# to the expected surviving density. Gated by
+# tests/test_minimizer_quality.py; row summarized in docs/CLAIMS.md.
+# --------------------------------------------------------------------------
+
+def minimizer_quality_rows(
+    w_values: tuple = (1, 4, 8, 16),
+    n_files: int = 8,
+    genome_len: int = 4_000,
+    m: int = 1 << 19,
+    eta: int = 3,
+    read_len: int = 230,
+    theta_margin: float = 0.6,
+    seed: int = 41,
+) -> list:
+    """Recall / decoy-FPR / set-bit count rows across minimizer windows.
+
+    ``w = 1`` is the dense baseline (every kmer inserted). For ``w > 1``
+    inserts keep only the window-``w`` minimizers; a true-positive read
+    then covers ~``2/(w+1)`` of its kmers, so MSMT runs at
+    ``theta = theta_margin * 2/(w+1)`` — recall at that threshold measures
+    whether sub-sampling compromised quality, the decoy rate whether the
+    lowered threshold let noise through, and the popcount of the index
+    words measures the size actually bought.
+    """
+    archive = genome.synth_archive(n_files=n_files, genome_len=genome_len,
+                                   seed=seed)
+    file_ids = np.arange(n_files)
+    qreads = jnp.asarray(np.stack(
+        [np.asarray(f.reads(read_len, 1)[0]) for f in archive]))
+    # true negatives: iid random reads sharing no kmers with the archive
+    # (poisoned copies of indexed reads keep enough intact kmers to match
+    # their source file at theta < 1 — residual signal, not noise)
+    decoys = jnp.asarray(np.random.default_rng(seed + 1).integers(
+        0, 4, size=(n_files, read_len), dtype=np.uint8))
+    rows = []
+    for w in w_values:
+        cfg = idl.IDLConfig(k=31, t=16, L=1 << 12, eta=eta, m=m)
+        eng = BitSlicedIndex.build(cfg, "idl", n_files=n_files)
+        eng = ingest.build_archive(eng, archive, read_len=read_len,
+                                   window_min=None if w <= 1 else w)
+        density = 1.0 if w <= 1 else 2.0 / (w + 1)
+        theta = max(0.05, theta_margin * density)
+        got = np.asarray(eng.msmt(qreads, theta=theta))
+        recall = float(got[file_ids, file_ids].mean())
+        fp = int(got.sum()) - int(got[file_ids, file_ids].sum())
+        decoy_hits = int(np.asarray(eng.msmt(decoys, theta=theta)).sum())
+        bits_set = int(jax.lax.population_count(eng.words).sum())
+        rows.append({
+            "w": w, "theta": theta, "recall": recall,
+            "fp_rate": fp / (n_files * (n_files - 1)),
+            "decoy_rate": decoy_hits / (n_files * n_files),
+            "bits_set": bits_set,
+        })
+    base_bits = rows[0]["bits_set"]
+    for r in rows:
+        r["rel_size"] = r["bits_set"] / base_bits
+    return rows
+
+
+def minimizer_quality() -> None:
+    csv = Csv("minimizer_quality_window_min",
+              ["window_min", "theta", "recall", "fp_rate", "decoy_rate",
+               "bits_set", "rel_size"])
+    for r in minimizer_quality_rows(m=1 << 21, n_files=12,
+                                    genome_len=10_000):
+        csv.row(r["w"], r["theta"], r["recall"], r["fp_rate"],
+                r["decoy_rate"], r["bits_set"], r["rel_size"])
+
+
 ALL = [table2_assumptions, fig5_idlbf, fig6_pareto, fig7_cobs, table3_rambo,
-       table4_lsh, fig8_ablation, theory_check, fpr_sweep, bbf_compose]
+       table4_lsh, fig8_ablation, theory_check, fpr_sweep, bbf_compose,
+       minimizer_quality]

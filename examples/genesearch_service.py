@@ -1,106 +1,114 @@
-"""End-to-end gene-search serving, cluster edition: stream an archive into
-a bit-sliced MSMT index (shared ingest layer), snapshot it to disk
-(versioned store), boot a 2-replica :class:`ReplicaRouter` straight from
-the snapshot, and serve a RAGGED query stream through futures — requests
-batch per pow2 kmer bucket on a background deadline flusher, sharded over
-replicas, one compile per (bucket, backend) per replica. Then publish a
-NEW snapshot version and hot-swap it under traffic: zero dropped futures,
-every result stamped with the state version that served it.
+"""End-to-end LIVE gene-search serving: boot a 2-replica fleet on a base
+archive that is missing four genomes, watch those queries miss (recall
+0/4), then stream the genomes in through the cluster write path — the
+fleet answers 4/4 WITHOUT a restart, every result stamped with the
+``(version, delta_seq)`` coordinates that served it and orderable against
+the write acks (read-your-writes). Finally fold the accumulated deltas
+into a new base version under the same fleet: the answers don't change,
+and the compile counters prove the compaction cost zero recompiles.
 
     PYTHONPATH=src python examples/genesearch_service.py
 """
 
+import os
 import tempfile
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import idl
 from repro.data import genome
-from repro.index import BitSlicedIndex, ingest, store
-from repro.serving import ReplicaRouter, RouterConfig, ServiceConfig
+from repro.index import BitSlicedIndex, ingest
+from repro.serving import LiveReplicaRouter, RouterConfig, ServiceConfig
+
 
 def main() -> None:
     n_files = 64
+    live_ids = [3, 17, 40, 59]            # these genomes arrive LIVE
     cfg = idl.IDLConfig(k=31, t=16, L=1 << 12, eta=3, m=1 << 20)
     archive = genome.synth_archive(n_files=n_files, genome_len=3_000, seed=42)
 
-    print(f"indexing {n_files} genome files ...")
+    print(f"indexing {n_files - len(live_ids)} of {n_files} genome files "
+          f"(holding back {live_ids}) ...")
     # the streaming archive builder: every genome is chopped into read_len
     # windows overlapping by k-1 (no kmer lost), batched in chunks and fed
     # to the cached InsertPlan — one compile per window length
     t0 = time.perf_counter()
     eng = BitSlicedIndex.build(cfg, "idl", n_files=n_files)
-    eng = ingest.build_archive(eng, archive, read_len=230, chunk_reads=64)
-    state = eng.state
-    state.block_until_ready()
-    print(f"  index built in {time.perf_counter() - t0:.1f}s "
-          f"({state.nbytes / 1e6:.1f} MB bit-sliced IndexState)")
+    eng = ingest.build_archive(
+        eng, [f for f in archive if f.file_id not in live_ids],
+        read_len=230, chunk_reads=64)
+    eng.state.block_until_ready()
+    print(f"  base built in {time.perf_counter() - t0:.1f}s "
+          f"({eng.state.nbytes / 1e6:.1f} MB bit-sliced IndexState)")
 
-    with tempfile.TemporaryDirectory() as snap_v0, \
-            tempfile.TemporaryDirectory() as snap_v1:
-        # persistence: versioned snapshot -> disk -> snapshot-booted FLEET
-        store.save(state, snap_v0)
-        router = ReplicaRouter.from_snapshot(
-            snap_v0, ServiceConfig(theta=1.0, max_batch=8),
-            RouterConfig(n_replicas=2, policy="bucket_affinity"))
-        print(f"  snapshot saved; 2-replica router booted from {snap_v0!r}")
+    # ragged query stream for the held-back genomes: full reads and
+    # amplicon-length fragments — submit() returns futures immediately,
+    # the background flushers batch each kmer bucket on its deadline
+    queries = []
+    for i, fid in enumerate(live_ids):
+        read = archive[fid].reads(230, 6)[5]
+        queries.append(np.asarray(read[:(80, 120, 160, 230)[i % 4]]))
 
-        # ragged query stream: full reads, amplicon-length fragments and
-        # poisoned decoys — submit() returns futures immediately, the
-        # background flushers batch each kmer bucket on its deadline
-        true_ids = [3, 17, 40, 59]
-        queries, labels = [], []
-        for i, fid in enumerate(true_ids):
-            read = archive[fid].reads(230, 6)[5]
-            frag_len = (80, 120, 160, 230)[i % 4]
-            queries.append(np.asarray(read[:frag_len]))
-            labels.append(fid)
-        decoys = [np.asarray(d) for d in
-                  genome.poison_queries(np.stack([q[:80] for q in queries]),
-                                        seed=7)]
-        futures = [router.submit(q) for q in queries + decoys]
+    def search(router):
+        futures = [router.submit(q) for q in queries]
         router.drain()
-        results = [f.result() for f in futures]
+        return [f.result() for f in futures]
 
-        hits = fps = decoy_hits = 0
-        for i, fid in enumerate(labels):
-            got = results[i].file_ids
-            hits += int(fid in got)
-            fps += len(got) - int(fid in got)
-            got_d = results[len(labels) + i].file_ids
-            decoy_hits += len(got_d)
-            print(f"query from file {fid:2d} (len {len(queries[i])}, "
-                  f"bucket {results[i].bucket}, v{results[i].version}): "
-                  f"matched {list(got)}; poisoned -> {list(got_d)}")
-        print(f"recall {hits}/{len(labels)}, false positives {fps}, "
-              f"poisoned matches {decoy_hits}")
+    with tempfile.TemporaryDirectory() as tmp:
+        # the live fleet: each replica serves base + delta through the
+        # exact two-probe merge; every write is journaled (write-ahead,
+        # CRC-framed) before any replica's delta absorbs it
+        router = LiveReplicaRouter(
+            eng, ServiceConfig(theta=1.0, max_batch=8),
+            RouterConfig(n_replicas=2, policy="bucket_affinity"),
+            journal_path=os.path.join(tmp, "wal.bin"))
+        print("  2-replica live router booted (write-ahead journal on)")
 
-        # cluster telemetry: per-replica compile-once, flush reasons,
-        # occupancy, queue delay
-        stats = router.cluster_stats()
-        print(f"replica/bucket compiles: {router.compile_counts()} "
-              f"(one per bucket per replica)")
-        print(f"occupancy {router.occupancy():.2f}; flush reasons "
-              f"{sorted({s.flush_reason for s in stats})}; queue p95 "
-              f"{np.percentile([s.queue_ms for s in stats], 95):.1f} ms")
+        results = search(router)
+        hits = sum(fid in r.file_ids for fid, r in zip(live_ids, results))
+        print(f"before live ingest: recall {hits}/{len(live_ids)} "
+              f"(the genomes aren't indexed yet)")
 
-        # hot snapshot swap under the same fleet: load a FRESH engine from
-        # the v0 snapshot (the served replicas' own buffers are never
-        # touched), index one more genome into it, publish v1, swap —
-        # replicas pause one at a time, traffic keeps flowing, and
-        # same-geometry states reuse every compiled step (zero recompiles)
-        extra = genome.synth_archive(n_files=1, genome_len=3_000, seed=99)[0]
-        read_new = extra.reads(230, 1)[0]
-        eng_v1 = store.load_engine(snap_v0).insert_batch(
-            jnp.asarray(read_new)[None], np.asarray([0]))
-        store.save(eng_v1, snap_v1)
-        new_version = router.swap_snapshot(snap_v1)
-        res = router.submit(np.asarray(read_new)).result()
-        print(f"hot-swapped to snapshot v{new_version}: new read -> files "
-              f"{list(res.file_ids)} (served at v{res.version}); compiles "
-              f"unchanged: {router.compile_counts()}")
+        # the cluster write path: chop each held-back genome into k-1
+        # overlapping windows (same rule as the offline builder) and
+        # insert through the router — one journal append, then the batch
+        # fans to every replica's flusher; all acks resolved = the write
+        # is searchable fleet-wide
+        t0 = time.perf_counter()
+        acks = []
+        for fid in live_ids:
+            windows = genome.window_reads(archive[fid].genome, 230, cfg.k)
+            fids = np.full(windows.shape[0], fid, dtype=np.int32)
+            acks += router.insert(windows, fids)
+        last = max(a.result().delta_seq for a in acks)
+        print(f"streamed {len(live_ids)} genomes in "
+              f"{time.perf_counter() - t0:.2f}s; last ack at delta_seq "
+              f"{last} ({router.delta_batches()} delta batches pending)")
+
+        results = search(router)
+        hits = 0
+        for fid, r, q in zip(live_ids, results, queries):
+            hits += int(fid in r.file_ids)
+            print(f"query from file {fid:2d} (len {len(q)}, bucket "
+                  f"{r.bucket}, v{r.version} seq {r.delta_seq}): "
+                  f"matched {list(r.file_ids)}")
+        print(f"after live ingest: recall {hits}/{len(live_ids)} — "
+              f"no restart, every result's delta_seq >= {last} (saw the "
+              f"writes)")
+
+        # background-style compaction under the same fleet: fold every
+        # replica's delta into a new base version; same geometry in and
+        # out, so the compiled steps are all reused
+        compiles_before = dict(router.compile_counts())
+        version = router.compact()
+        results = search(router)
+        hits = sum(fid in r.file_ids for fid, r in zip(live_ids, results))
+        print(f"compacted -> base v{version} "
+              f"({router.delta_batches()} delta batches left); recall "
+              f"still {hits}/{len(live_ids)} at v{results[0].version}; "
+              f"compiles unchanged: "
+              f"{dict(router.compile_counts()) == compiles_before}")
         router.close()
 
 

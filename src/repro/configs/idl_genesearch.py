@@ -1,7 +1,8 @@
 """idl-genesearch — the paper's own system as a first-class architecture.
 
 Bit-sliced COBS-style index over 1024 files, queried with batched MSMT
-(serve_step). The hashing scheme is selectable "idl" | "rh" — the dry-run
+through the shared query planner. The hashing scheme is selectable
+"idl" | "rh" — the dry-run
 lowers the IDL variant; benchmarks compare both. This is the cell most
 representative of the paper's technique (perf-hillclimbed in §Perf).
 """
@@ -15,6 +16,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import base
+from repro.distributed.sharding import shard
+from repro.index import query
 from repro.serving import genesearch as gs
 
 DP = base.DP_AXES
@@ -49,12 +52,20 @@ def input_specs(cfg: gs.GeneSearchConfig, cell: base.ShapeCell) -> dict:
 
 
 def abstract_state(cfg: gs.GeneSearchConfig, cell: base.ShapeCell):
-    return jax.eval_shape(lambda: gs.empty_index(cfg))
+    return jax.ShapeDtypeStruct((cfg.m, cfg.file_words), jnp.uint32)
 
 
 def step_fn(cfg: gs.GeneSearchConfig, cell: base.ShapeCell):
+    # batched MSMT through the shared planner (the body the removed v1
+    # serve_step used to wrap): per-kmer probe, then the exact integer
+    # coverage threshold, with the serve-layout sharding annotations
     def serve(index, batch):
-        return gs.serve_step(index, batch["queries"], cfg)
+        queries = batch["queries"]
+        plan = gs.query_plan(cfg, queries.shape[0], index.shape)
+        per_kmer = plan.execute(index, queries)       # (B, n_k, F/32)
+        per_kmer = shard(per_kmer, ("batch", None, "files"))
+        out = query.file_match_mask(per_kmer, cfg.theta)
+        return shard(out, ("batch", "files"))
     return serve
 
 

@@ -15,7 +15,7 @@ for the full API and migration notes from the deprecated
 classes.
 """
 
-from repro.index import ingest, packed, query, registry, state, store
+from repro.index import ingest, lsm, packed, query, registry, state, store
 from repro.index.engines import (
     BitSlicedIndex,
     CobsIndex,
@@ -23,6 +23,7 @@ from repro.index.engines import (
     RamboIndex,
 )
 from repro.index.ingest import InsertPlan, build_archive, plan_insert
+from repro.index.lsm import DeltaJournal, LiveIndex
 from repro.index.protocol import GeneIndex
 from repro.index.query import QueryPlan, plan_query
 from repro.index.registry import HashScheme
@@ -32,10 +33,12 @@ from repro.index.store import SnapshotError
 __all__ = [
     "BitSlicedIndex",
     "CobsIndex",
+    "DeltaJournal",
     "GeneIndex",
     "HashScheme",
     "IndexState",
     "InsertPlan",
+    "LiveIndex",
     "PackedBloomIndex",
     "QueryPlan",
     "RamboIndex",
@@ -44,6 +47,7 @@ __all__ = [
     "StateMeta",
     "build_archive",
     "ingest",
+    "lsm",
     "packed",
     "plan_insert",
     "plan_query",

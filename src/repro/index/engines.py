@@ -479,7 +479,7 @@ class BitSlicedIndex(_StateView):
         return plan.execute(self.words, reads, backend=backend, **kw)
 
     def msmt(self, reads, theta: float = 1.0, **kw) -> jax.Array:
-        """(B, n_files) bool, same math as ``serving.genesearch.serve_step``."""
+        """(B, n_files) bool — the serve-layout MSMT (one theta rule)."""
         per_kmer = self.query_batch(reads, **kw)          # (B, n_k, W)
         mask = query.file_match_mask(per_kmer, theta)     # (B, W)
         return packed.unpack_file_bits(mask, self.n_files)

@@ -1,0 +1,552 @@
+"""LSM-style live index: immutable base + small delta + write-ahead journal.
+
+Mutation under traffic used to mean build-offline → snapshot → hot-swap.
+This module exploits two algebraic facts that make a live write path
+*exactly* correct for every engine:
+
+* scatter-OR inserts are **idempotent and commutative**, so the union of
+  two indexes built from read sets A and B equals one index built from
+  A ∪ B, bit for bit;
+* a match mask is a **conjunction over kmers of per-kmer memberships**,
+  so OR-ing the per-kmer membership of two indexes *before* the integer
+  coverage threshold answers exactly like the single merged index.
+
+:class:`LiveIndex` holds an immutable **base** :class:`IndexState` plus a
+small **delta** :class:`IndexState` that absorbs streaming inserts through
+the existing fused ingest path (``InsertPlan.execute`` — same donated
+scatter every engine uses). The delta shares the base's ``StateMeta`` by
+default; for the bit-probe engines (flat BF, RAMBO) a second, smaller-``m``
+:class:`IDLConfig` may size the delta independently (any ``m`` preserves
+union semantics because the delta is probed with its own plan). Row-probe
+engines (COBS, bit-sliced) share row geometry with the base — their row
+count *is* the hash range.
+
+Durability is a write-ahead **delta journal**: an append-only file of read
+batches, each CRC-32 framed, written *before* the delta absorbs the batch.
+A crash between compactions loses nothing — boot replays the journal into
+a fresh delta (:meth:`LiveIndex.open`); a torn tail record (crash mid-
+append, never acked) is detected by CRC/length and dropped.
+
+Compaction folds delta into base **off the hot path**: when the two share
+geometry it is ONE jitted elementwise OR of the packed uint32 words
+(:func:`or_states`); a smaller-``m`` delta is folded by replaying the
+journaled batches through the base's own insert plan. Either way the
+merged state keeps the base ``StateMeta``, so publishing it through the
+serving layer's swap protocol costs **zero recompiles** (state is a pytree
+argument of every compiled step). :meth:`LiveIndex.publish` swaps base,
+rebuilds the delta from any batches that arrived mid-compaction, and
+truncates the journal — the two-phase dance
+``plan_compaction → compact → publish`` lets the expensive middle step run
+on a background thread while queries keep merging base+delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import threading
+import zlib
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import idl as idl_mod
+from repro.index import packed, query, store
+from repro.index import state as state_mod
+
+__all__ = [
+    "DeltaJournal",
+    "JournalError",
+    "LiveIndex",
+    "CompactionPlan",
+    "empty_delta",
+    "merge_kmer_hits",
+    "or_states",
+    "merged_msmt",
+]
+
+
+# ---------------------------------------------------------------------------
+# The write-ahead delta journal.
+# ---------------------------------------------------------------------------
+
+class JournalError(RuntimeError):
+    """A journal file failed structural validation (not a torn tail)."""
+
+
+_MAGIC = b"IDLJ"
+_VERSION = 1
+_HEADER = struct.Struct("<4sI")           # magic, version
+_REC = struct.Struct("<QIIi")             # seq, n_reads, read_len, n_fids
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalRecord:
+    """One journaled write batch (reads + optional file ids)."""
+
+    seq: int
+    reads: np.ndarray                     # (B, read_len) uint8
+    file_ids: Optional[np.ndarray]        # (B,) int32 or None
+
+
+class DeltaJournal:
+    """Append-only, CRC-framed write-ahead log of insert batches.
+
+    Frame layout per record::
+
+        <Q seq> <I n_reads> <I read_len> <i n_fids> <payload> <I crc32>
+
+    ``n_fids`` is ``-1`` when the batch carried no file ids (single-set
+    engines); the payload is the raw uint8 read bytes followed by int32
+    file-id bytes; the CRC covers header + payload. Appends ``flush`` +
+    ``fsync`` before returning, so an acked write survives a crash; a torn
+    tail (crash mid-append) fails its CRC or length check on replay and is
+    discarded — it was never acked.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._lock = threading.Lock()
+        tail = self._scan()
+        self._fh = open(self.path, "ab")
+        if self._fh.tell() > tail:        # physically drop a torn tail so
+            self._fh.truncate(tail)       # new appends don't land after it
+            self._fh.seek(tail)
+
+    def _scan(self) -> int:
+        """Validate the file; returns the byte offset after the last good
+        record (creating the header if the file is new/empty)."""
+        if not os.path.exists(self.path) or os.path.getsize(self.path) == 0:
+            with open(self.path, "wb") as fh:
+                fh.write(_HEADER.pack(_MAGIC, _VERSION))
+            return _HEADER.size
+        with open(self.path, "rb") as fh:
+            head = fh.read(_HEADER.size)
+            if len(head) < _HEADER.size:
+                raise JournalError(f"{self.path}: truncated journal header")
+            magic, version = _HEADER.unpack(head)
+            if magic != _MAGIC:
+                raise JournalError(
+                    f"{self.path}: not a delta journal (magic {magic!r})")
+            if version > _VERSION:
+                raise JournalError(
+                    f"{self.path}: journal version {version} is newer than "
+                    f"supported {_VERSION}")
+            good = fh.tell()
+            while True:
+                rec = self._read_record(fh)
+                if rec is None:
+                    return good
+                good = fh.tell()
+
+    @staticmethod
+    def _read_record(fh) -> Optional[JournalRecord]:
+        """One record, or None on EOF / torn tail (never raises for those)."""
+        head = fh.read(_REC.size)
+        if len(head) < _REC.size:
+            return None
+        seq, n_reads, read_len, n_fids = _REC.unpack(head)
+        payload_len = n_reads * read_len + max(n_fids, 0) * 4
+        # a torn tail can masquerade as a header declaring gigabytes —
+        # never allocate more than the file actually holds
+        remaining = os.fstat(fh.fileno()).st_size - fh.tell()
+        if payload_len + 4 > remaining:
+            return None
+        payload = fh.read(payload_len)
+        crc_raw = fh.read(4)
+        if len(payload) < payload_len or len(crc_raw) < 4:
+            return None
+        if zlib.crc32(payload, zlib.crc32(head)) != \
+                struct.unpack("<I", crc_raw)[0]:
+            return None
+        reads = np.frombuffer(payload[:n_reads * read_len],
+                              dtype=np.uint8).reshape(n_reads, read_len)
+        fids = None
+        if n_fids >= 0:
+            fids = np.frombuffer(payload[n_reads * read_len:],
+                                 dtype=np.int32).copy()
+        return JournalRecord(seq=seq, reads=reads.copy(), file_ids=fids)
+
+    def append(self, seq: int, reads: np.ndarray,
+               file_ids: Optional[np.ndarray]) -> None:
+        reads = np.ascontiguousarray(reads, dtype=np.uint8)
+        if reads.ndim == 1:
+            reads = reads[None]
+        fids = (None if file_ids is None
+                else np.ascontiguousarray(file_ids, dtype=np.int32).reshape(-1))
+        head = _REC.pack(int(seq), reads.shape[0], reads.shape[1],
+                         -1 if fids is None else fids.shape[0])
+        payload = reads.tobytes() + (b"" if fids is None else fids.tobytes())
+        crc = zlib.crc32(payload, zlib.crc32(head))
+        with self._lock:
+            self._fh.write(head + payload + struct.pack("<I", crc))
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
+    def records(self) -> List[JournalRecord]:
+        """Every valid record in order (the boot-replay stream)."""
+        out: List[JournalRecord] = []
+        with self._lock:
+            self._fh.flush()
+        with open(self.path, "rb") as fh:
+            fh.seek(_HEADER.size)
+            while True:
+                rec = self._read_record(fh)
+                if rec is None:
+                    return out
+                out.append(rec)
+
+    def truncate_through(self, upto_seq: int) -> None:
+        """Drop records with ``seq <= upto_seq`` (post-compaction), keeping
+        later ones — rewritten atomically via a temp file + ``os.replace``."""
+        keep = [r for r in self.records() if r.seq > upto_seq]
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as fh:
+            fh.write(_HEADER.pack(_MAGIC, _VERSION))
+            for r in keep:
+                head = _REC.pack(r.seq, r.reads.shape[0], r.reads.shape[1],
+                                 -1 if r.file_ids is None
+                                 else r.file_ids.shape[0])
+                payload = r.reads.tobytes() + (
+                    b"" if r.file_ids is None else r.file_ids.tobytes())
+                crc = zlib.crc32(payload, zlib.crc32(head))
+                fh.write(head + payload + struct.pack("<I", crc))
+            fh.flush()
+            os.fsync(fh.fileno())
+        with self._lock:
+            self._fh.close()
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "ab")
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+
+# ---------------------------------------------------------------------------
+# Delta construction + merge algebra.
+# ---------------------------------------------------------------------------
+
+def empty_delta(base: state_mod.IndexState,
+                delta_cfg: Optional[idl_mod.IDLConfig] = None
+                ) -> state_mod.IndexState:
+    """A zeroed delta state for ``base``.
+
+    Default: the base's exact ``StateMeta`` (same word shapes — the
+    word-OR compaction fast path applies). ``delta_cfg`` sizes a smaller
+    delta for the bit-probe engines (flat BF, RAMBO): any ``m`` keeps the
+    two-probe merge exact because the delta is probed with its own plan.
+    Row-probe engines (COBS, bit-sliced) must share base geometry — their
+    row count is the hash range itself.
+    """
+    meta = base.meta
+    if delta_cfg is None:
+        return state_mod.IndexState(
+            words=tuple(jnp.zeros_like(w) for w in base.words), meta=meta)
+    if meta.engine not in ("bloom", "rambo"):
+        raise ValueError(
+            f"delta_cfg is only meaningful for bit-probe engines "
+            f"(bloom, rambo); {meta.engine!r} deltas share the base row "
+            f"geometry")
+    cfg = meta.cfgs[0]
+    if delta_cfg.k != cfg.k:
+        raise ValueError(
+            f"delta kmer size {delta_cfg.k} != base kmer size {cfg.k}")
+    if delta_cfg.m % 32:
+        raise ValueError(f"delta m={delta_cfg.m} must be a multiple of 32")
+    new_meta = dataclasses.replace(meta, cfgs=(delta_cfg,))
+    if meta.engine == "bloom":
+        words = (jnp.zeros((delta_cfg.m // 32,), dtype=jnp.uint32),)
+    else:                                  # rambo: (R*B, m/32) bucket stack
+        words = (jnp.zeros(
+            (meta.n_rep * meta.n_buckets, delta_cfg.m // 32),
+            dtype=jnp.uint32),)
+    return state_mod.IndexState(words=words, meta=new_meta)
+
+
+def merge_kmer_hits(per_base: jax.Array, per_delta: jax.Array) -> jax.Array:
+    """OR per-kmer membership of base and delta — the two-probe merge.
+
+    Works on every engine's ``query_batch`` output: bool membership
+    ((B, n_k) flat BF; (B, n_k, n_files) COBS/RAMBO) and packed uint32
+    file masks ((B, n_k, W) bit-sliced). Because a match is a conjunction
+    of per-kmer hits, OR-ing *before* the integer coverage threshold is
+    exactly the answer a single merged index would give (equivalently:
+    the AND of the two indexes' miss-masks).
+    """
+    return per_base | per_delta
+
+
+@jax.jit
+def or_states(base: state_mod.IndexState,
+              delta: state_mod.IndexState) -> state_mod.IndexState:
+    """Elementwise OR of two same-geometry states — the compaction fast
+    path, one jitted op over the packed uint32 words (no donation: the
+    inputs keep serving while the merge computes off the hot path)."""
+    return jax.tree_util.tree_map(jnp.bitwise_or, base, delta)
+
+
+def merged_msmt(base: state_mod.IndexState, delta: state_mod.IndexState,
+                reads, theta: float = 1.0, *, backend: str = "jnp",
+                **kw) -> jax.Array:
+    """MSMT over the logical union of base and delta (two-probe merge).
+
+    The reference the serving layer's batched steps are tested against:
+    per-kmer outputs of both states OR-ed before the one integer coverage
+    rule (``query.member_coverage`` / ``query.file_match_mask``).
+    """
+    per = merge_kmer_hits(
+        state_mod.query(base, reads, backend=backend, **kw),
+        state_mod.query(delta, reads, backend=backend, **kw))
+    meta = base.meta
+    if meta.engine == "bitsliced":
+        mask = query.file_match_mask(per, theta)
+        return packed.unpack_file_bits(mask, meta.n_files)
+    return query.member_coverage(per, theta)
+
+
+# ---------------------------------------------------------------------------
+# The live index.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPlan:
+    """Snapshot of (base, delta, watermark) taken at plan time.
+
+    The expensive merge runs off the hot path on these immutable values;
+    writes that land after ``upto_seq`` stay in the live delta and are
+    replayed into the fresh delta at publish time.
+    """
+
+    base: state_mod.IndexState
+    delta: state_mod.IndexState
+    upto_seq: int
+    base_version: int
+    tail: Tuple[JournalRecord, ...]       # records with seq <= upto_seq
+
+
+class LiveIndex:
+    """Immutable base + mutable delta + write-ahead journal.
+
+    Thread model: ``insert`` / ``publish`` mutate under an internal lock
+    and :meth:`states` hands out an atomic ``(base, delta, version, seq)``
+    snapshot, but the *storage values* follow the repo's linear-use rule —
+    an insert donates the previous delta buffer. All writes and query
+    dispatches must therefore happen on one thread (the serving layer's
+    flusher thread provides exactly that); a compactor thread only ever
+    touches the immutable snapshots a :class:`CompactionPlan` carries.
+    """
+
+    def __init__(self, base, *,
+                 delta_cfg: Optional[idl_mod.IDLConfig] = None,
+                 journal: Optional[DeltaJournal] = None,
+                 base_version: int = 0, start_seq: int = 0):
+        self._lock = threading.RLock()
+        self._base = state_mod.from_engine(base)
+        self._delta_cfg = delta_cfg
+        self._delta = empty_delta(self._base, delta_cfg)
+        self._journal = journal
+        self._base_version = int(base_version)
+        # start_seq aligns a fresh replica's watermark with a fleet-level
+        # journal whose earlier records were already compacted into `base`
+        self._delta_seq = int(start_seq)
+        self._tail: List[JournalRecord] = []
+        if journal is not None:
+            for rec in journal.records():         # boot replay (crash heal)
+                self._apply(rec.reads, rec.file_ids, seq=rec.seq)
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def open(cls, snapshot_dir: str, *,
+             journal_path: Optional[str] = None,
+             delta_cfg: Optional[idl_mod.IDLConfig] = None,
+             base_version: int = 0, **load_kw) -> "LiveIndex":
+        """Boot from a versioned snapshot + journal: load the base through
+        the store's CRC-verified path, then replay every journaled batch
+        into a fresh delta — a crash between compactions loses nothing."""
+        base = store.load(snapshot_dir, **load_kw)
+        journal = (DeltaJournal(journal_path)
+                   if journal_path is not None else None)
+        return cls(base, delta_cfg=delta_cfg, journal=journal,
+                   base_version=base_version)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def meta(self) -> state_mod.StateMeta:
+        return self._base.meta
+
+    @property
+    def base(self) -> state_mod.IndexState:
+        with self._lock:
+            return self._base
+
+    @property
+    def delta(self) -> state_mod.IndexState:
+        with self._lock:
+            return self._delta
+
+    @property
+    def base_version(self) -> int:
+        with self._lock:
+            return self._base_version
+
+    @property
+    def delta_seq(self) -> int:
+        """Journal sequence of the last absorbed batch (0 = delta empty)."""
+        with self._lock:
+            return self._delta_seq
+
+    def delta_batches(self) -> int:
+        """Write batches sitting in the delta — the compaction trigger."""
+        with self._lock:
+            return len(self._tail)
+
+    def states(self) -> Tuple[state_mod.IndexState, state_mod.IndexState,
+                              int, int]:
+        """Atomic ``(base, delta, base_version, delta_seq)`` snapshot."""
+        with self._lock:
+            return self._base, self._delta, self._base_version, \
+                self._delta_seq
+
+    # -- the write path -----------------------------------------------------
+    def _apply(self, reads, file_ids, *, seq: int, **kw) -> None:
+        """Absorb one batch into the delta (journal already holds it)."""
+        fids = file_ids
+        if self._delta.meta.engine == "bloom":
+            fids = None
+        self._delta = state_mod.insert(
+            self._delta, jnp.asarray(np.asarray(reads, dtype=np.uint8)),
+            None if fids is None else np.asarray(fids), **kw)
+        self._delta_seq = int(seq)
+        self._tail.append(JournalRecord(
+            seq=int(seq),
+            reads=np.asarray(reads, dtype=np.uint8),
+            file_ids=None if file_ids is None
+            else np.asarray(file_ids, dtype=np.int32)))
+
+    def insert(self, reads, file_ids=None, *, donate: bool = False,
+               **kw) -> int:
+        """Journal, then absorb one read batch into the delta.
+
+        Write-ahead order: the journal append (flush + fsync) happens
+        *before* the delta insert, so an acked sequence number is durable.
+        ``kw`` passes through to the shared ingest layer (``backend`` in
+        {"jnp", "idl_insert", "sharded"}, ...). ``donate`` defaults OFF
+        here (unlike ``state.insert``): a compaction plan may hold the
+        pre-insert delta, and on donating backends its buffers must stay
+        live until publish — the delta is small by design, so the copy is
+        cheap. Bulk pre-serving loads can pass ``donate=True``. Returns
+        the batch's journal sequence number.
+        """
+        reads = np.asarray(reads, dtype=np.uint8)
+        if reads.ndim == 1:
+            reads = reads[None]
+        with self._lock:
+            seq = self._delta_seq + 1
+            if self._journal is not None:
+                self._journal.append(seq, reads, file_ids)
+            self._apply(reads, file_ids, seq=seq, donate=donate, **kw)
+            return seq
+
+    def replay(self, records) -> int:
+        """Absorb already-journaled records at their ORIGINAL sequence
+        numbers (no re-journaling) — how a router boots a fresh replica's
+        delta into alignment with the fleet's write watermark. Returns the
+        resulting ``delta_seq``.
+        """
+        with self._lock:
+            for rec in records:
+                self._apply(rec.reads, rec.file_ids, seq=rec.seq)
+            return self._delta_seq
+
+    # -- the merged read path ----------------------------------------------
+    def query(self, reads, *, backend: str = "jnp", **kw) -> jax.Array:
+        """Two-probe merged per-kmer membership (engine-shaped output)."""
+        base, delta, _, _ = self.states()
+        return merge_kmer_hits(
+            state_mod.query(base, reads, backend=backend, **kw),
+            state_mod.query(delta, reads, backend=backend, **kw))
+
+    def msmt(self, reads, theta: float = 1.0, *, backend: str = "jnp",
+             **kw) -> jax.Array:
+        """MSMT over the logical union of base and delta."""
+        base, delta, _, _ = self.states()
+        return merged_msmt(base, delta, reads, theta, backend=backend, **kw)
+
+    # -- compaction ---------------------------------------------------------
+    def plan_compaction(self) -> CompactionPlan:
+        """Freeze the merge inputs: everything up to the current seq."""
+        with self._lock:
+            return CompactionPlan(
+                base=self._base, delta=self._delta,
+                upto_seq=self._delta_seq, base_version=self._base_version,
+                tail=tuple(self._tail))
+
+    @staticmethod
+    def compact(plan: CompactionPlan) -> state_mod.IndexState:
+        """Fold the plan's delta into its base (run off the hot path).
+
+        Same geometry (default deltas): ONE jitted elementwise OR of the
+        packed words. A smaller-``m`` delta (bit-probe engines) has
+        different word shapes, so the journaled batches replay through the
+        base's own insert plan instead — same union, by idempotence. The
+        result always carries the *base* ``StateMeta``, which is what
+        makes the publish a zero-recompile swap.
+        """
+        if plan.delta.meta == plan.base.meta:
+            return or_states(plan.base, plan.delta)
+        merged = plan.base
+        for i, rec in enumerate(plan.tail):
+            fids = rec.file_ids
+            if merged.meta.engine == "bloom":
+                fids = None
+            # the first insert must not donate: plan.base is the state
+            # still serving queries mid-compaction
+            merged = state_mod.insert(
+                merged, jnp.asarray(rec.reads), fids, donate=i > 0)
+        return merged
+
+    def publish(self, merged: state_mod.IndexState, upto_seq: int) -> int:
+        """Swap the merged base in; rebuild the delta from late arrivals.
+
+        Batches that landed after ``upto_seq`` (mid-compaction writes)
+        replay into a fresh delta; the journal drops everything the new
+        base now contains. Caller must hold the serving layer's hot-swap
+        window (no query/write dispatch in flight) — the same discipline
+        as ``GeneSearchService.swap_state``. Returns the new base version.
+        """
+        if merged.meta != self._base.meta:
+            raise ValueError(
+                "compacted state changed geometry: publish would recompile "
+                "every serving step (meta must equal the base meta)")
+        with self._lock:
+            late = [r for r in self._tail if r.seq > upto_seq]
+            self._base = merged
+            self._base_version += 1
+            self._delta = empty_delta(self._base, self._delta_cfg)
+            self._tail = []
+            seq = self._delta_seq
+            self._delta_seq = int(upto_seq)
+            for rec in late:
+                self._apply(rec.reads, rec.file_ids, seq=rec.seq)
+            self._delta_seq = max(self._delta_seq, int(seq))
+            if self._journal is not None:
+                self._journal.truncate_through(upto_seq)
+            return self._base_version
+
+    def compact_now(self) -> int:
+        """Inline plan → compact → publish (the synchronous convenience)."""
+        plan = self.plan_compaction()
+        return self.publish(self.compact(plan), plan.upto_seq)
+
+    def save_base(self, directory: str) -> str:
+        """Write the current base through the versioned snapshot store."""
+        return store.save(self.base, directory)
+
+    def close(self) -> None:
+        if self._journal is not None:
+            self._journal.close()

@@ -22,15 +22,13 @@ targets of any packed ``(n_rows, W)`` matrix —
 
 The old per-layout helpers remain: ``scatter_or_bitsliced`` and
 ``scatter_or_rows`` as thin views of the one body, ``scatter_or`` as its
-W == 1 single-sort-key specialization (the flat-BF fast path), and the legacy
+W == 1 single-sort-key specialization (the flat-BF fast path). The legacy
 jit entry points (``insert_batch_words`` / ``insert_batch_bitsliced`` /
-``insert_batch_rows``) are deprecated adapters over ``ingest.InsertPlan``
-(bit-identical; they emit a ``DeprecationWarning``).
+``insert_batch_rows``) finished their deprecation window and are now
+call-time ``ImportError`` stubs pointing at ``ingest.InsertPlan``.
 """
 
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -123,66 +121,32 @@ def scatter_or_rows(
 
 
 # ---------------------------------------------------------------------------
-# Legacy batched entry points — deprecated adapters over the ingest layer.
+# Legacy batched entry points — removed; call-time ImportError stubs only.
 # ---------------------------------------------------------------------------
 
-def _deprecated(name: str) -> None:
-    warnings.warn(
-        f"packed.{name} is a deprecated entry point; build an "
-        "ingest.InsertPlan (repro.index.ingest.plan_insert) or call the "
-        "engine's insert_batch instead — one planned, donated scatter with "
-        "jnp / idl_insert / sharded backends.",
-        DeprecationWarning,
-        stacklevel=3,
+def _removed(name: str, kind: str) -> "ImportError":
+    return ImportError(
+        f"packed.{name} was removed after its deprecation window; migrate: "
+        f"ingest.plan_insert(cfg, scheme, reads.shape, dest.shape, "
+        f"kind={kind!r}).execute(...) or the engine's insert_batch (see "
+        "docs/API.md, 'Migration from the v1 serving surface')."
     )
 
 
-def insert_batch_words(
-    words: jax.Array, reads: jax.Array, *, cfg: idl_mod.IDLConfig, scheme: str
-) -> jax.Array:
-    """Deprecated: insert a (B, read_len) batch into a flat packed BF."""
-    _deprecated("insert_batch_words")
-    from repro.index import ingest
-
-    plan = ingest.plan_insert(
-        cfg, scheme, tuple(reads.shape), (words.shape[0], 1), kind="bits")
-    return plan.execute(words, reads)
+def insert_batch_words(words, reads, *, cfg=None, scheme=None):
+    """Removed legacy entry point — raises ImportError with the migration."""
+    raise _removed("insert_batch_words", "bits")
 
 
-def insert_batch_bitsliced(
-    matrix: jax.Array,
-    reads: jax.Array,
-    cols: jax.Array,
-    *,
-    cfg: idl_mod.IDLConfig,
-    scheme: str,
-    lane32: bool = False,
-) -> jax.Array:
-    """Deprecated: insert reads into columns ``cols`` of a bit-sliced matrix."""
-    _deprecated("insert_batch_bitsliced")
-    from repro.index import ingest
-
-    plan = ingest.plan_insert(
-        cfg, scheme, tuple(reads.shape), tuple(matrix.shape),
-        kind="cols", lane32=lane32)
-    return plan.execute(matrix, reads, jnp.asarray(cols))
+def insert_batch_bitsliced(matrix, reads, cols, *, cfg=None, scheme=None,
+                           lane32=False):
+    """Removed legacy entry point — raises ImportError with the migration."""
+    raise _removed("insert_batch_bitsliced", "cols")
 
 
-def insert_batch_rows(
-    filters: jax.Array,
-    reads: jax.Array,
-    filter_rows: jax.Array,
-    *,
-    cfg: idl_mod.IDLConfig,
-    scheme: str,
-) -> jax.Array:
-    """Deprecated: insert each read into ``R`` packed filter rows (RAMBO)."""
-    _deprecated("insert_batch_rows")
-    from repro.index import ingest
-
-    plan = ingest.plan_insert(
-        cfg, scheme, tuple(reads.shape), tuple(filters.shape), kind="rows")
-    return plan.execute(filters, reads, jnp.asarray(filter_rows))
+def insert_batch_rows(filters, reads, filter_rows, *, cfg=None, scheme=None):
+    """Removed legacy entry point — raises ImportError with the migration."""
+    raise _removed("insert_batch_rows", "rows")
 
 
 # ---------------------------------------------------------------------------

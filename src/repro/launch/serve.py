@@ -1,7 +1,8 @@
 """Serving launcher: ``python -m repro.launch.serve --arch idl-genesearch``.
 
 Builds a gene-search index over a synthetic archive and serves batched MSMT
-queries — the runnable counterpart of the serve_step the dry-run lowers.
+queries through the v2 engine + service path — the runnable counterpart of
+the serve cell the dry-run lowers.
 """
 
 from __future__ import annotations
@@ -9,13 +10,12 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
 from repro.data import genome
-from repro.serving import genesearch as gs
+from repro.index import BitSlicedIndex
+from repro.serving import GeneSearchService, ServiceConfig
 
 
 def main() -> None:
@@ -37,26 +37,27 @@ def main() -> None:
 
     archive = genome.synth_archive(n_files=args.files, genome_len=2_000,
                                    seed=11)
-    index = gs.empty_index(cfg)
+    eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme, cfg.n_files)
     for f in archive:
-        index = gs.insert_read(index, cfg, f.file_id, jnp.asarray(f.genome))
-    print(f"index: {args.files} files, {index.nbytes / 1e6:.1f} MB")
+        eng = eng.insert_batch(np.asarray(f.genome)[None],
+                               np.asarray([f.file_id], dtype=np.int32))
+    print(f"index: {args.files} files, "
+          f"{eng.state.nbytes / 1e6:.1f} MB bit-sliced IndexState")
 
-    serve = jax.jit(lambda i, q: gs.serve_step(i, q, cfg))
+    svc = GeneSearchService(
+        eng, ServiceConfig(theta=cfg.theta, max_batch=args.batch))
     rng = np.random.default_rng(0)
     lat = []
     correct = total = 0
     for r in range(args.requests):
         fids = rng.integers(0, args.files, size=args.batch)
-        reads = np.stack([
-            archive[int(f)].reads(cfg.read_len, 1)[0] for f in fids])
+        reads = [np.asarray(archive[int(f)].reads(cfg.read_len, 1)[0])
+                 for f in fids]
         t0 = time.perf_counter()
-        out = serve(index, jnp.asarray(reads))
-        out.block_until_ready()
+        results = svc.search(reads)
         lat.append(time.perf_counter() - t0)
-        for i, fid in enumerate(fids):
-            ids = gs.match_file_ids(np.asarray(out[i]))
-            correct += int(int(fid) in ids)
+        for fid, res in zip(fids, results):
+            correct += int(int(fid) in res.file_ids)
             total += 1
     print(f"recall {correct}/{total}; "
           f"p50 latency {1e3 * float(np.median(lat)):.1f} ms "

@@ -7,20 +7,25 @@ snapshot-backed startup. On top of it, the serving cluster:
 batch pipeline), :mod:`repro.serving.router` (K ``device_put`` replicas,
 pluggable routing, hot snapshot swap under traffic) and
 :mod:`repro.serving.autoscale` (admission policy + replica autoscaler
-driven by the recorded batch telemetry). :mod:`repro.serving.genesearch`
-remains as the deprecated v1 compatibility layer (raw-matrix
-``serve_step`` / ``insert_read_batch`` over the fixed-shape bit-sliced
-index).
+driven by the recorded batch telemetry). :mod:`repro.serving.live` adds
+the write path: ``LiveGeneSearchService`` / ``LiveReplicaRouter`` serve a
+:class:`repro.index.lsm.LiveIndex` (base + delta) with background
+compaction. :mod:`repro.serving.genesearch` keeps the serve-geometry
+config + plan helpers; its removed v1 bodies are call-time ImportError
+stubs.
 """
 
-from repro.serving import autoscale, genesearch, router, scheduler, service
+from repro.serving import autoscale, genesearch, live, router, scheduler, \
+    service
 from repro.serving.autoscale import (
     AdmissionPolicy,
     AutoscaleConfig,
     ReplicaAutoscaler,
 )
+from repro.serving.live import Compactor, LiveGeneSearchService, \
+    LiveReplicaRouter
 from repro.serving.router import ReplicaRouter, RouterConfig
-from repro.serving.scheduler import AsyncScheduler, ClusterStats, \
+from repro.serving.scheduler import AsyncScheduler, ClusterStats, InsertAck, \
     SchedulerConfig
 from repro.serving.service import (
     BatchStats,
@@ -36,7 +41,11 @@ __all__ = [
     "AutoscaleConfig",
     "BatchStats",
     "ClusterStats",
+    "Compactor",
     "GeneSearchService",
+    "InsertAck",
+    "LiveGeneSearchService",
+    "LiveReplicaRouter",
     "ReplicaAutoscaler",
     "ReplicaRouter",
     "RouterConfig",
@@ -46,6 +55,7 @@ __all__ = [
     "ServiceConfig",
     "autoscale",
     "genesearch",
+    "live",
     "router",
     "scheduler",
     "service",

@@ -1,58 +1,38 @@
-"""v1 gene-search serving — now the compatibility layer under serving v2.
+"""v1 gene-search serving — config + plan helpers; the v1 bodies are gone.
 
 New code should use :mod:`repro.serving.service`: a typed, dynamic-batching
 :class:`~repro.serving.service.GeneSearchService` over any engine's
 :class:`~repro.index.state.IndexState`, with pow2 shape buckets (one
 compile per bucket for ragged request streams), snapshot-backed startup
-(:mod:`repro.index.store`) and per-batch stats. This module keeps the v1
-functional surface — raw ``(m, F/32)`` matrix in, fixed-shape batch
-``serve_step`` out — as thin calls into the same shared layers, and
-re-exports the v2 names for discoverability.
+(:mod:`repro.index.store`) and per-batch stats — and, for ingest under
+traffic, :mod:`repro.serving.live` (:class:`LiveGeneSearchService` /
+:class:`LiveReplicaRouter` over :class:`repro.index.lsm.LiveIndex`).
 
-The index is the bit-sliced COBS layout (rows = hash locations, columns =
-files, packed 32 files/uint32 word). On the production mesh the file axis is
-sharded over 'model' and the query batch over ('pod','data'); the per-query
-row gather is device-local (every device holds all m rows for its file
-slice), so the only collective is the output concatenation — the layout the
-roofline analysis shows is optimal for MSMT.
-
-``serve_step`` is the TPU-lowerable batched MSMT: queries arrive as raw
-base-code arrays; kmerization, rolling MinHash and scheme locations all run
-on-device on the registry's 32-bit lane path, and the probe itself routes
-through the shared planner/executor layer (``repro.index.query``) — the
-same planned Pallas / sharded backends every engine uses. Indexing routes
-through the shared ingest layer (``repro.index.ingest``): a cached
-``InsertPlan`` turns a batch of reads into one jit-compiled, donated,
-dedup'd scatter — or one planned Pallas ``insert_runs`` launch, or a
-``shard_map`` over the file-words axis — and ``build_archive`` streams a
-whole archive through it. ``repro.index.BitSlicedIndex`` is the
-protocol-level engine over the same storage.
+This module keeps the pieces of the v1 surface that are still the single
+source of truth — :class:`GeneSearchConfig` (the serve-geometry dataclass
+the config registry lowers) and the :func:`insert_plan` / :func:`query_plan`
+helpers that map it onto the shared planner layers — plus the serving v2
+re-exports. The six deprecated v1 entry points (``empty_index``,
+``insert_read_batch``, ``build_archive``, ``insert_read``, ``serve_step``,
+``match_file_ids``) spent two releases warning and are now call-time
+``ImportError`` stubs carrying their migration target; the modules stay
+importable so the package import smoke keeps passing.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import idl as idl_mod
-from repro.distributed.sharding import shard
 from repro.index import ingest, query
 
 
-def _deprecated(name: str) -> None:
-    warnings.warn(
-        f"serving.genesearch.{name} is the deprecated v1 serving surface; "
-        "use repro.serving.GeneSearchService (dynamic batching over any "
-        "IndexState, snapshot startup) or the engines' own "
-        "insert_batch/msmt — bit-identical through the same shared "
-        "query/ingest layers.",
-        DeprecationWarning,
-        stacklevel=3,
+def _removed(name: str, hint: str) -> "ImportError":
+    return ImportError(
+        f"serving.genesearch.{name} was removed after its deprecation "
+        f"window; migrate: {hint} (see docs/API.md, 'Migration from the "
+        "v1 serving surface')."
     )
 
 
@@ -83,10 +63,11 @@ class GeneSearchConfig:
         )
 
 
-def empty_index(cfg: GeneSearchConfig) -> jax.Array:
-    """(m, n_files/32) uint32 bit-sliced index."""
-    _deprecated("empty_index")
-    return jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
+def empty_index(cfg: GeneSearchConfig):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("empty_index", "BitSlicedIndex.build(cfg.idl_config(), "
+                   "cfg.scheme, cfg.n_files) — or jnp.zeros((cfg.m, "
+                   "cfg.file_words), jnp.uint32) for the raw matrix")
 
 
 def insert_plan(
@@ -105,52 +86,24 @@ def insert_plan(
     )
 
 
-def insert_read_batch(
-    index: jax.Array, cfg: GeneSearchConfig, reads: jax.Array,
-    file_ids: jax.Array, *, backend: str = "jnp", **kw,
-) -> jax.Array:
-    """Index a (B, read_len) batch of reads into their files — ONE jit call.
-
-    A thin call into :mod:`repro.index.ingest`: locations for the whole
-    batch are vmapped in-graph, duplicate (row, file) targets are dedup'd
-    with a sort, and the index buffer is donated — no per-read Python loop
-    and no full-matrix copy per read. ``backend`` picks the shared
-    executor: ``"jnp"`` (reference scatter), ``"idl_insert"`` (host-planned
-    Pallas run kernel, one launch per batch) or ``"sharded"`` (``shard_map``
-    splitting the file-words axis; kw ``mesh``).
-    """
-    _deprecated("insert_read_batch")
-    plan = insert_plan(cfg, reads.shape[0], index.shape,
-                       read_len=reads.shape[1])
-    return plan.execute(
-        index, reads, jnp.asarray(file_ids), backend=backend, **kw)
+def insert_read_batch(index, cfg, reads, file_ids, **kw):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("insert_read_batch", "insert_plan(cfg, B, index.shape)"
+                   ".execute(index, reads, file_ids) or the engine's own "
+                   "insert_batch")
 
 
-def build_archive(
-    cfg: GeneSearchConfig, files, *, backend: str = "jnp", **kw
-) -> jax.Array:
-    """Stream a whole archive into a fresh serving index.
-
-    Drives :func:`repro.index.ingest.build_archive` over the protocol-level
-    ``BitSlicedIndex`` engine and returns the raw ``(m, n_files/32)``
-    serving matrix. Accepts the builder's knobs (``chunk_reads``, ``mesh``,
-    ``window_min``, ...).
-    """
-    _deprecated("build_archive")
-    from repro.index.engines import BitSlicedIndex
-
-    eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme, cfg.n_files)
-    eng = ingest.build_archive(
-        eng, files, read_len=cfg.read_len, backend=backend, **kw)
-    return eng.words
+def build_archive(cfg, files, **kw):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("build_archive", "repro.index.ingest.build_archive over "
+                   "BitSlicedIndex.build(...)")
 
 
-def insert_read(
-    index: jax.Array, cfg: GeneSearchConfig, file_id: int, codes: jax.Array
-) -> jax.Array:
-    """Index one read into file ``file_id`` (B=1 case of the batched path)."""
-    return insert_read_batch(
-        index, cfg, codes[None, :], jnp.asarray([file_id], dtype=jnp.int32))
+def insert_read(index, cfg, file_id, codes):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("insert_read", "batch the read and use insert_plan(...)"
+                   ".execute / engine.insert_batch; streaming single reads "
+                   "go through LiveReplicaRouter.insert")
 
 
 def query_plan(
@@ -163,37 +116,17 @@ def query_plan(
     )
 
 
-def serve_step(
-    index: jax.Array, queries: jax.Array, cfg: GeneSearchConfig,
-    *, backend: str = "jnp",
-) -> jax.Array:
-    """Batched MSMT — a thin call into :mod:`repro.index.query`.
-
-    index: (m, n_files/32) uint32; queries: (B, read_len) uint8 base codes.
-    Returns (B, n_files/32) uint32 — bitmask of matching files per query
-    (theta=1: AND over all kmers; theta<1: per-file kmer-coverage >= theta,
-    with the exact integer threshold every engine uses). ``backend`` picks
-    the shared executor: ``"jnp"`` (traceable — safe under an outer
-    ``jax.jit``), ``"idl_probe"`` (host-planned Pallas run kernel) or
-    ``"sharded"`` (``shard_map`` splitting the file-words axis).
-    """
-    _deprecated("serve_step")
-    plan = query_plan(cfg, queries.shape[0], index.shape)
-    per_kmer = plan.execute(index, queries, backend=backend)  # (B, n_k, F/32)
-    per_kmer = shard(per_kmer, ("batch", None, "files"))
-    out = query.file_match_mask(per_kmer, cfg.theta)
-    return shard(out, ("batch", "files"))
+def serve_step(index, queries, cfg, **kw):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("serve_step", "query_plan(cfg, B, index.shape)"
+                   ".execute(index, queries) + query.file_match_mask(per_"
+                   "kmer, cfg.theta), or GeneSearchService.search")
 
 
-def match_file_ids(bitmask_row: np.ndarray) -> list[int]:
-    """Decode one query's (F/32,) bitmask into matching file ids (host)."""
-    _deprecated("match_file_ids")
-    out = []
-    for w, word in enumerate(np.asarray(bitmask_row)):
-        for b in range(32):
-            if (int(word) >> b) & 1:
-                out.append(w * 32 + b)
-    return out
+def match_file_ids(bitmask_row):
+    """Removed v1 entry point — raises ImportError with the migration."""
+    raise _removed("match_file_ids", "repro.index.packed.unpack_file_bits("
+                   "mask, n_files).nonzero() or SearchResult.file_ids")
 
 
 # -- serving v2 re-exports (canonical home: repro.serving.service) ----------

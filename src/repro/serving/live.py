@@ -1,0 +1,372 @@
+"""Ingest-while-serving: the live index behind the serving cluster.
+
+Three pieces close the loop between :mod:`repro.index.lsm` and the
+serving stack:
+
+* :class:`LiveGeneSearchService` — a :class:`GeneSearchService` whose
+  compiled step probes **base and delta** and ORs the per-kmer membership
+  before the coverage threshold, so every answer is bit-identical to a
+  single index holding the union of all inserts (the exactness argument
+  lives in :mod:`repro.index.lsm`). Adds ``apply_insert`` (the write the
+  scheduler's admission path calls) and ``publish`` (the compaction
+  swap). Results carry ``(version, delta_seq)`` — the staleness
+  coordinates.
+
+* :class:`LiveReplicaRouter` — a :class:`ReplicaRouter` whose replicas
+  each hold a device-local :class:`LiveIndex`. Writes fan out to every
+  replica in one total order (so per-replica ``delta_seq`` watermarks
+  stay aligned with the router's write-ahead journal), queries route to
+  one replica as before, and :meth:`LiveReplicaRouter.compact` folds
+  delta into base fleet-wide: the merge computes ONCE off the hot path,
+  optionally lands in the versioned snapshot store, then publishes
+  replica-by-replica through the same pause → swap → resume window the
+  PR-5 hot-swap uses — zero dropped futures, zero recompiles (the merged
+  state keeps the base ``StateMeta``).
+
+* :class:`Compactor` — a background thread that watches a live target's
+  ``delta_batches()`` and triggers ``compact()`` past a threshold, the
+  LSM background-merge loop.
+
+Mid-compaction exactness: the compaction plan freezes (base, delta,
+watermark ``S``) under the write lock; queries keep merging the *live*
+pair while the merge computes; at publish, writes with seq > ``S``
+replay into the fresh delta. A replica that had not yet applied some
+write ≤ ``S`` when it publishes simply re-applies it into its new delta
+afterwards — scatter-OR idempotence makes the duplicate harmless, so
+every instant still answers exactly the union of acknowledged inserts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from concurrent.futures import Future
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import lsm, store
+from repro.index import state as state_mod
+from repro.serving import router as router_mod
+from repro.serving import service as service_mod
+
+__all__ = ["LiveGeneSearchService", "LiveReplicaRouter", "Compactor"]
+
+
+class LiveGeneSearchService(service_mod.GeneSearchService):
+    """Dynamic-batching front-end over a :class:`~repro.index.lsm.LiveIndex`.
+
+    Same admission, bucketing, padding and threshold rules as the static
+    service — the compiled step just takes TWO state pytrees and merges
+    their per-kmer membership. Compile-once-per-bucket still holds: base
+    and delta are arguments of the jitted step, and both keep their
+    ``StateMeta`` across writes *and* compaction publishes.
+    """
+
+    def __init__(self, live: lsm.LiveIndex,
+                 config: Optional[service_mod.ServiceConfig] = None):
+        self._live = live
+        super().__init__(live.base, config, version=live.base_version)
+
+    @classmethod
+    def open(cls, snapshot_dir: str,
+             config: Optional[service_mod.ServiceConfig] = None, *,
+             journal_path: Optional[str] = None,
+             delta_cfg=None, base_version: int = 0,
+             **load_kw) -> "LiveGeneSearchService":
+        """Boot from snapshot + journal (crash recovery in one call)."""
+        return cls(lsm.LiveIndex.open(
+            snapshot_dir, journal_path=journal_path, delta_cfg=delta_cfg,
+            base_version=base_version, **load_kw), config)
+
+    @property
+    def live(self) -> lsm.LiveIndex:
+        return self._live
+
+    # -- the write path -----------------------------------------------------
+    def apply_insert(self, reads, file_ids=None, **kw):
+        """Absorb one write batch (journal + delta); returns the
+        ``(base_version, delta_seq)`` at which it became searchable.
+
+        Must run on the same thread as query dispatch (the scheduler's
+        flusher provides that; the synchronous path is single-threaded by
+        construction) — the delta mutates between batches, never under a
+        dispatched one.
+        """
+        seq = self._live.insert(reads, file_ids, **kw)
+        return self._live.base_version, seq
+
+    # -- compaction ---------------------------------------------------------
+    def publish(self, merged: state_mod.IndexState, upto_seq: int) -> int:
+        """Install a compacted base (callers hold the no-dispatch window —
+        ``AsyncScheduler.pause`` — exactly like ``swap_state``)."""
+        version = self._live.publish(merged, upto_seq)
+        self._state = self._live.base
+        self._version = version
+        return version
+
+    def compact(self, scheduler=None, *, save_dir: Optional[str] = None
+                ) -> int:
+        """Plan → merge (off the hot path) → publish. With a scheduler,
+        the publish runs inside its pause window (zero dropped futures);
+        without one, the caller is the only dispatcher anyway."""
+        plan = self._live.plan_compaction()
+        merged = lsm.LiveIndex.compact(plan).block_until_ready()
+        if save_dir is not None:
+            store.save(merged, save_dir)
+        if scheduler is not None:
+            scheduler.pause()
+        try:
+            return self.publish(merged, plan.upto_seq)
+        finally:
+            if scheduler is not None:
+                scheduler.resume()
+
+    def delta_batches(self) -> int:
+        return self._live.delta_batches()
+
+    def swap_state(self, index, *, version=None) -> int:
+        raise NotImplementedError(
+            "a live service's base only changes through compaction "
+            "(plan_compaction -> compact -> publish); swapping an "
+            "arbitrary state would orphan the delta and journal")
+
+    # -- execution ----------------------------------------------------------
+    def _runner(self, bucket: int):
+        r = self._runners.get(bucket)
+        if r is not None:
+            return r
+        meta = self._live.meta
+        reduce = functools.partial(
+            service_mod._msmt_reduce, meta.engine, meta.n_files,
+            self.config.theta)
+        backend = self.config.backend
+        if backend == "jnp":
+            @jax.jit
+            def step(base, delta, reads, valid, need):
+                per = lsm.merge_kmer_hits(
+                    state_mod.to_engine(base).query_batch(
+                        reads, backend="jnp"),
+                    state_mod.to_engine(delta).query_batch(
+                        reads, backend="jnp"))
+                return reduce(per, valid, need)
+
+            self._runners[bucket] = (step, step)
+        else:
+            post = jax.jit(reduce)
+            kw = ({"use_ref": True}
+                  if backend == "idl_probe" and
+                  jax.default_backend() == "cpu" else {})
+
+            def step(base, delta, reads, valid, need):
+                per = lsm.merge_kmer_hits(
+                    state_mod.to_engine(base).query_batch(
+                        reads, backend=backend, **kw),
+                    state_mod.to_engine(delta).query_batch(
+                        reads, backend=backend, **kw))
+                return post(per, valid, need)
+
+            self._runners[bucket] = (step, post)
+        return self._runners[bucket]
+
+    def _execute(self, bucket: int, batch, valid, need):
+        """Dispatch the two-probe step; rides the state coordinates along
+        with the device output so ``_finalize`` stamps the (version,
+        delta_seq) that actually COMPUTED the batch — writes may advance
+        the delta while this batch is still in the completer's hands."""
+        step, _ = self._runner(bucket)
+        base, delta, version, seq = self._live.states()
+        out = step(base, delta, jnp.asarray(batch), jnp.asarray(valid),
+                   jnp.asarray(need))
+        return out, version, seq
+
+    def _finalize(self, take, bucket: int, out
+                  ) -> List[service_mod.SearchResult]:
+        out, version, seq = out
+        return [dataclasses.replace(r, version=version, delta_seq=seq)
+                for r in super()._finalize(take, bucket, out)]
+
+
+class LiveReplicaRouter(router_mod.ReplicaRouter):
+    """A replica fleet over per-replica live indexes, plus a write path.
+
+    One write-ahead journal lives at the ROUTER (``journal_path``):
+    :meth:`insert` journals the batch under the router lock — assigning
+    one fleet-wide sequence number — then fans ``submit_insert`` to every
+    serving replica in that same order, so each replica's ``delta_seq``
+    tracks the journal watermark. Boot replays the journal into every
+    replica's delta; replicas added by ``scale_to`` replay the
+    uncompacted tail, so they answer identically to day-one replicas.
+    """
+
+    def __init__(self, index,
+                 service_config: Optional[service_mod.ServiceConfig] = None,
+                 config: Optional[router_mod.RouterConfig] = None, *,
+                 devices=None, version: int = 0,
+                 journal_path: Optional[str] = None,
+                 delta_cfg=None):
+        self._journal = (lsm.DeltaJournal(journal_path)
+                         if journal_path is not None else None)
+        self._delta_cfg = delta_cfg
+        boot = self._journal.records() if self._journal is not None else []
+        self._tail: List[lsm.JournalRecord] = list(boot)
+        self._wal_seq = boot[-1].seq if boot else 0
+        super().__init__(index, service_config, config,
+                         devices=devices, version=version)
+
+    def _make_service(self, state) -> LiveGeneSearchService:
+        live = lsm.LiveIndex(state, delta_cfg=self._delta_cfg,
+                             base_version=self._version,
+                             start_seq=self._wal_seq)
+        if self._tail:
+            live.replay(self._tail)      # uncompacted fleet tail -> delta
+        return LiveGeneSearchService(live, self._svc_cfg)
+
+    # -- the write path -----------------------------------------------------
+    def insert(self, reads, file_ids=None) -> List[Future]:
+        """Journal one write batch, then fan it to every serving replica.
+
+        The router lock covers journal append + fan-out, so concurrent
+        inserts hit every replica in one total order and the fleet-wide
+        sequence in the journal equals each replica's ``delta_seq``.
+        Returns one ``Future[InsertAck]`` per replica.
+        """
+        reads = np.asarray(reads, dtype=np.uint8)
+        if reads.ndim == 1:
+            reads = reads[None]
+        fids = (None if file_ids is None
+                else np.asarray(file_ids, dtype=np.int32).reshape(-1))
+        with self._lock:
+            serving = [r for r in self._replicas if r.serving]
+            if not serving:
+                raise RuntimeError("router has no serving replicas")
+            seq = self._wal_seq + 1
+            if self._journal is not None:
+                self._journal.append(seq, reads, fids)
+            self._wal_seq = seq
+            self._tail.append(lsm.JournalRecord(
+                seq=seq, reads=reads, file_ids=fids))
+            return [r.scheduler.submit_insert(reads, fids)
+                    for r in serving]
+
+    def delta_batches(self) -> int:
+        with self._lock:
+            return len(self._tail)
+
+    @property
+    def wal_seq(self) -> int:
+        with self._lock:
+            return self._wal_seq
+
+    # -- compaction ---------------------------------------------------------
+    def compact(self, *, save_dir: Optional[str] = None) -> int:
+        """Fold the fleet's delta into its base, publish everywhere.
+
+        The merge computes ONCE from the lead replica's frozen plan (all
+        replicas absorb the same ordered write stream, so any replica's
+        plan describes the fleet); each replica then publishes inside its
+        own pause window — in-flight batches finish, queued futures stay
+        queued, and the merged state's unchanged ``StateMeta`` means every
+        compiled step survives (zero recompiles, asserted in tests).
+        ``save_dir`` additionally writes the merged base through the
+        versioned snapshot store before any replica swaps.
+        """
+        with self._admin_lock:
+            with self._lock:
+                reps = [r for r in self._replicas if r.serving]
+                if not reps:
+                    raise RuntimeError("router has no serving replicas")
+            plan = reps[0].service.live.plan_compaction()
+            merged = lsm.LiveIndex.compact(plan).block_until_ready()
+            if save_dir is not None:
+                store.save(merged, save_dir)
+            for rep in reps:
+                device = self._devices[rep.id % len(self._devices)]
+                rep_merged = jax.device_put(merged, device)
+                rep.scheduler.pause()     # in-flight batches finish first
+                try:
+                    rep.service.publish(rep_merged, plan.upto_seq)
+                finally:
+                    rep.scheduler.resume()
+            with self._lock:
+                self._state = merged
+                self._version += 1
+                self._tail = [r for r in self._tail
+                              if r.seq > plan.upto_seq]
+                version = self._version
+            if self._journal is not None:
+                self._journal.truncate_through(plan.upto_seq)
+            return version
+
+    def swap_state(self, index, *, version=None) -> int:
+        raise NotImplementedError(
+            "a live fleet's base only changes through compact(); swapping "
+            "an arbitrary state would orphan every replica's delta and "
+            "the write-ahead journal")
+
+    def close(self) -> None:
+        super().close()
+        if self._journal is not None:
+            self._journal.close()
+
+
+class Compactor:
+    """Background compaction loop over a live target.
+
+    ``target`` is anything exposing ``delta_batches()`` and
+    ``compact(**compact_kwargs)`` — a :class:`LiveReplicaRouter`, or a
+    :class:`LiveGeneSearchService` (pass its scheduler through
+    ``compact_kwargs`` so publishes run inside the pause window). Checks
+    every ``interval_s`` and compacts once ``min_delta_batches`` writes
+    have accumulated. A failed compaction stops the loop and surfaces on
+    :attr:`error` (and re-raises from :meth:`close`) — silent write-path
+    stalls are worse than a crash.
+    """
+
+    def __init__(self, target, *, interval_s: float = 0.25,
+                 min_delta_batches: int = 8, compact_kwargs=None):
+        if interval_s <= 0:
+            raise ValueError("interval_s must be > 0")
+        if min_delta_batches < 1:
+            raise ValueError("min_delta_batches must be >= 1")
+        self._target = target
+        self._interval = float(interval_s)
+        self._min = int(min_delta_batches)
+        self._kwargs = dict(compact_kwargs or {})
+        self._stop = threading.Event()
+        self.compactions = 0
+        self.error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="idl-compactor")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self._interval):
+            try:
+                if self._target.delta_batches() >= self._min:
+                    self._target.compact(**self._kwargs)
+                    self.compactions += 1
+            except BaseException as e:  # noqa: BLE001 - surfaced on close
+                self.error = e
+                return
+
+    def close(self, *, final_compaction: bool = False) -> int:
+        """Stop the loop (optionally folding any remaining delta first).
+        Returns the total number of compactions; re-raises a loop error."""
+        self._stop.set()
+        self._thread.join(timeout=30)
+        if self.error is not None:
+            raise self.error
+        if final_compaction and self._target.delta_batches() > 0:
+            self._target.compact(**self._kwargs)
+            self.compactions += 1
+        return self.compactions
+
+    def __enter__(self) -> "Compactor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

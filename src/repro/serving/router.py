@@ -125,13 +125,19 @@ class ReplicaRouter:
         return cls(store.load(directory, **load_kw), service_config, config,
                    version=version)
 
+    def _make_service(self, state) -> service_mod.GeneSearchService:
+        """Build one replica's service over its device-local state. The
+        subclass hook :class:`~repro.serving.live.LiveReplicaRouter` uses
+        to wrap each replica's state in a writable live index."""
+        return service_mod.GeneSearchService(state, self._svc_cfg,
+                                             version=self._version)
+
     def _add_replica_locked(self) -> _Replica:
         rid = self._next_replica_id
         self._next_replica_id += 1
         device = self._devices[rid % len(self._devices)]
         state = jax.device_put(self._state, device)
-        svc = service_mod.GeneSearchService(state, self._svc_cfg,
-                                            version=self._version)
+        svc = self._make_service(state)
         admission = (AdmissionPolicy(self.config.autoscale)
                      if self.config.autoscale is not None else None)
         rep = _Replica(
@@ -228,6 +234,27 @@ class ReplicaRouter:
         futures = [self.submit(r) for r in reads]
         self.drain()
         return [f.result() for f in futures]
+
+    # -- the write path -----------------------------------------------------
+    def insert(self, reads, file_ids=None) -> List[Future]:
+        """Fan one write batch out to every serving replica.
+
+        Unlike queries (which route to ONE replica), a write must reach
+        them all — every replica answers from its own base+delta pair.
+        The router lock is held across the fan-out, so concurrent inserts
+        enqueue in the same total order on every replica and the
+        per-replica ``delta_seq`` watermarks stay aligned. Returns one
+        ``Future[InsertAck]`` per replica (all resolved = the write is
+        searchable fleet-wide). Requires live-index replicas
+        (:class:`~repro.serving.live.LiveReplicaRouter`); static replicas
+        raise ``TypeError`` on the first fan-out.
+        """
+        with self._lock:
+            serving = [r for r in self._replicas if r.serving]
+            if not serving:
+                raise RuntimeError("router has no serving replicas")
+            return [r.scheduler.submit_insert(reads, file_ids)
+                    for r in serving]
 
     # -- hot snapshot swap --------------------------------------------------
     def swap_snapshot(self, directory: str, *,

@@ -60,6 +60,7 @@ __all__ = [
     "SchedulerConfig",
     "ClusterStats",
     "AsyncScheduler",
+    "InsertAck",
     "FLUSH_FULL",
     "FLUSH_DEADLINE",
     "FLUSH_DRAIN",
@@ -109,10 +110,30 @@ class ClusterStats:
         return self.n_requests / max(self.batch_rows, 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class InsertAck:
+    """Acknowledgement of one admitted write batch: the state coordinates
+    at which it became searchable (``SearchResult`` stamps the same pair,
+    so read-your-writes is checkable: any result with ``delta_seq >=
+    ack.delta_seq`` — or a later ``base_version`` — saw the write)."""
+
+    base_version: int
+    delta_seq: int
+    n_reads: int
+
+
 @dataclasses.dataclass
 class _Pending:
     request: service_mod.SearchRequest
     n_kmers: int
+    future: Future
+    t_enq: float
+
+
+@dataclasses.dataclass
+class _PendingWrite:
+    reads: np.ndarray
+    file_ids: Optional[np.ndarray]
     future: Future
     t_enq: float
 
@@ -139,6 +160,7 @@ class AsyncScheduler:
         self._work = threading.Condition(self._lock)    # flusher wakeups
         self._idle = threading.Condition(self._lock)    # drain/pause waits
         self._queues: Dict[int, Deque[_Pending]] = {}
+        self._writes: Deque[_PendingWrite] = collections.deque()
         self._inflight_ids: set = set()
         self._next_id = 0
         self._outstanding = 0        # submitted, future not yet resolved
@@ -212,6 +234,40 @@ class AsyncScheduler:
             self._outstanding += 1
             if self.admission is not None:
                 self.admission.observe_arrival(bucket, now)
+            self._work.notify_all()
+        return fut
+
+    def submit_insert(self, reads, file_ids=None) -> Future:
+        """Admit one write batch; returns a Future[InsertAck].
+
+        Requires a live-index service (one exposing ``apply_insert`` —
+        :class:`~repro.serving.live.LiveGeneSearchService`); a static
+        service raises immediately. Writes are applied by the flusher
+        thread *between* query batches, ahead of any queued query (the
+        insert-to-searchable latency knob), and on the SAME thread as all
+        query dispatch — which is exactly the single-dispatch-thread
+        discipline the live index's donated delta buffers require. Writes
+        count toward ``outstanding`` (``drain`` waits for them) and are
+        gated by ``pause`` (the hot-swap / compaction-publish window).
+        """
+        if not hasattr(self._svc, "apply_insert"):
+            raise TypeError(
+                f"{type(self._svc).__name__} is not writable — wrap a "
+                f"LiveIndex in a LiveGeneSearchService to serve a write "
+                f"path (repro.serving.live)")
+        reads = np.asarray(reads, dtype=np.uint8)
+        if reads.ndim == 1:
+            reads = reads[None]
+        fids = (None if file_ids is None
+                else np.asarray(file_ids, dtype=np.int32).reshape(-1))
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._writes.append(_PendingWrite(
+                reads=reads, file_ids=fids, future=fut,
+                t_enq=time.monotonic()))
+            self._outstanding += 1
             self._work.notify_all()
         return fut
 
@@ -324,9 +380,26 @@ class AsyncScheduler:
             timeout = remain if timeout is None else min(timeout, remain)
         return timeout
 
+    def _apply_writes(self, writes: List[_PendingWrite]) -> None:
+        """Apply a write burst (flusher thread, outside the lock)."""
+        for w in writes:
+            try:
+                version, seq = self._svc.apply_insert(w.reads, w.file_ids)
+                w.future.set_result(InsertAck(
+                    base_version=version, delta_seq=seq,
+                    n_reads=int(w.reads.shape[0])))
+            except Exception as e:  # noqa: BLE001 - forward to futures
+                if not w.future.done():
+                    w.future.set_exception(e)
+        with self._lock:
+            self._inflight -= 1
+            self._outstanding -= len(writes)
+            self._idle.notify_all()
+
     def _flusher_loop(self) -> None:
         while True:
             with self._lock:
+                writes: List[_PendingWrite] = []
                 while True:
                     if self._closed:
                         # zero dropped futures, even on a racy late submit:
@@ -336,19 +409,36 @@ class AsyncScheduler:
                         for q in self._queues.values():
                             while q:
                                 q.popleft().future.set_exception(err)
+                        while self._writes:
+                            self._writes.popleft().future.set_exception(err)
                         return
                     now = time.monotonic()
+                    # writes beat queries: an admitted insert becomes
+                    # searchable before the next query batch dispatches —
+                    # THE insert-to-searchable latency lever (live_bench
+                    # measures it). Gated by pause like query batches.
+                    if self._writes and not self._paused:
+                        while self._writes:
+                            writes.append(self._writes.popleft())
+                        self._inflight += 1      # pause() waits for a burst
+                        break
                     pick = self._pick(now)
                     if pick is not None:
                         break
                     self._work.wait(
                         timeout=None if self._paused
                         else self._next_timeout(now))
-                bucket, reason = pick
-                q = self._queues[bucket]
-                take = [q.popleft() for _ in
-                        range(min(len(q), self._svc.config.max_batch))]
-                self._inflight += 1
+                if writes:
+                    take = None
+                else:
+                    bucket, reason = pick
+                    q = self._queues[bucket]
+                    take = [q.popleft() for _ in
+                            range(min(len(q), self._svc.config.max_batch))]
+                    self._inflight += 1
+            if writes:
+                self._apply_writes(writes)
+                continue
             # host + dispatch, outside the lock: assemble the padded batch,
             # run per-batch host planning (idl_probe) and launch the device
             # step; with async dispatch the completer owns the blocking wait

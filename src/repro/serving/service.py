@@ -82,6 +82,9 @@ class SearchResult:
     n_kmers: int
     bucket: int
     version: int = 0     # state version that served it (hot-swap audit trail)
+    delta_seq: int = 0   # live-index write watermark that served it (0 =
+    #                      static index / empty delta) — with `version` this
+    #                      makes staleness observable per result
 
 
 @dataclasses.dataclass(frozen=True)

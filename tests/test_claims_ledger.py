@@ -1,0 +1,95 @@
+"""Claims-ledger gate (ROADMAP item 5): docs/CLAIMS.md is machine-checked.
+
+Every row's harness must exist in the repo, and every row that pins a
+``FILE.json:dotted.key.path`` record must match the checked-in value —
+re-running a benchmark without updating its ledger row fails here, so a
+claim and its evidence cannot drift apart silently.
+"""
+
+import json
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LEDGER = ROOT / "docs" / "CLAIMS.md"
+
+STATUSES = {"validated", "model-number", "unreplicated"}
+
+
+def _rows():
+    rows = []
+    for line in LEDGER.read_text().splitlines():
+        if not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) != 5 or cells[0] in ("Claim", ""):
+            continue
+        if set(cells[0]) <= {"-"}:           # the |---|---| separator
+            continue
+        rows.append(dict(zip(
+            ("claim", "harness", "record", "latest", "status"), cells)))
+    return rows
+
+
+@pytest.fixture(scope="module")
+def rows():
+    parsed = _rows()
+    assert parsed, "no ledger rows parsed from docs/CLAIMS.md"
+    return parsed
+
+
+def test_ledger_covers_the_headline_claims(rows):
+    text = " ".join(r["claim"] for r in rows)
+    for needle in ("9.4x", "159x", "8.4x", "8.1x", "3.1x", "eq. (5)",
+                   "Theorem 2", "Minimizer", "union index",
+                   "Insert-to-searchable"):
+        assert needle in text, f"ledger lost the {needle!r} claim row"
+
+
+def test_statuses_are_from_the_vocabulary(rows):
+    for r in rows:
+        assert r["status"] in STATUSES, r
+
+
+def test_every_harness_exists(rows):
+    for r in rows:
+        for path in re.findall(r"`([^`]+)`", r["harness"]):
+            assert (ROOT / path).is_file(), (
+                f"ledger row {r['claim']!r} references missing harness "
+                f"{path}")
+
+
+def test_every_record_matches_its_bench_json(rows):
+    checked = 0
+    for r in rows:
+        m = re.match(r"`([\w.]+\.json):([\w.]+)`", r["record"])
+        if not m:
+            assert r["record"] == "—", f"unparseable record: {r['record']}"
+            continue
+        fname, dotted = m.groups()
+        fpath = ROOT / fname
+        assert fpath.is_file(), f"missing bench record {fname}"
+        node = json.loads(fpath.read_text())
+        for key in dotted.split("."):
+            assert key in node, f"{fname}: no key {dotted!r}"
+            node = node[key]
+        want = float(r["latest"].rstrip("x"))
+        assert float(node) == pytest.approx(want, rel=1e-9), (
+            f"ledger says {want} but {fname}:{dotted} holds {node} — "
+            "re-ran a benchmark without updating docs/CLAIMS.md?")
+        checked += 1
+    assert checked >= 5, "the ledger lost its numeric record rows"
+
+
+def test_validated_rows_cite_a_checkable_harness(rows):
+    """A 'validated' status must point at a test or a --smoke-capable
+    benchmark actually present in the tree (spot check: tests/ rows run
+    under tier-1, benchmarks/ rows are importable modules)."""
+    for r in rows:
+        if r["status"] != "validated":
+            continue
+        paths = re.findall(r"`([^`]+)`", r["harness"])
+        assert paths, f"validated row without a harness: {r['claim']!r}"
+        assert any(p.startswith(("tests/", "benchmarks/")) for p in paths), r

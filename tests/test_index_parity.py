@@ -147,16 +147,23 @@ class TestBackendParityMatrix:
                 want)
 
     @pytest.mark.parametrize("theta", [1.0, 0.6])
-    def test_serve_step_backends(self, qreads, theta):
+    def test_serve_geometry_query_backends(self, qreads, theta):
+        # the serve-layout probe (survivor plan helpers of the removed v1
+        # serve_step) stays bit-identical across query backends
         cfg = gs.GeneSearchConfig(n_files=64, m=1 << 16, L=1 << 10,
                                   read_len=120, eta=2, theta=theta)
-        idx = gs.insert_read_batch(gs.empty_index(cfg), cfg, qreads,
-                                   np.asarray([0, 31, 63]))
-        want = np.asarray(gs.serve_step(idx, qreads, cfg))
+        idx = jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
+        idx = gs.insert_plan(cfg, qreads.shape[0], idx.shape).execute(
+            idx, qreads, jnp.asarray([0, 31, 63], dtype=jnp.int32))
+        plan = gs.query_plan(cfg, qreads.shape[0], idx.shape)
+
+        def serve(backend):
+            per_kmer = plan.execute(idx, qreads, backend=backend)
+            return np.asarray(query.file_match_mask(per_kmer, cfg.theta))
+
+        want = serve("jnp")
         for backend in ("idl_probe", "sharded"):
-            np.testing.assert_array_equal(
-                np.asarray(gs.serve_step(idx, qreads, cfg, backend=backend)),
-                want)
+            np.testing.assert_array_equal(serve(backend), want)
 
     def test_plans_are_cached(self, qreads):
         query.clear_plan_cache()
@@ -310,7 +317,7 @@ def _seed_insert_read(index, cfg, file_id, codes):
 class TestBitSlicedEngineParity:
     @pytest.mark.parametrize("scheme", ["idl", "rh"])
     @pytest.mark.parametrize("theta", [1.0, 0.6])
-    def test_matches_serve_step(self, rng, scheme, theta):
+    def test_matches_seed_reference(self, rng, scheme, theta):
         cfg = gs.GeneSearchConfig(n_files=64, m=1 << 18, L=1 << 10,
                                   read_len=120, eta=2, scheme=scheme,
                                   theta=theta)
@@ -319,16 +326,14 @@ class TestBitSlicedEngineParity:
         eng = BitSlicedIndex.build(cfg.idl_config(), scheme, cfg.n_files)
         eng = eng.insert_batch(reads, fids)
         # independent seed oracle: per-read column scatter into the raw matrix
-        index = gs.empty_index(cfg)
+        index = jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
         for f, r in zip(fids, reads):
             index = _seed_insert_read(index, cfg, int(f), r)
         np.testing.assert_array_equal(np.asarray(eng.words), np.asarray(index))
-        # and the current public insert_read agrees with its B=1 batch self
-        index2 = gs.empty_index(cfg)
-        for f, r in zip(fids, reads):
-            index2 = gs.insert_read(index2, cfg, int(f), r)
-        np.testing.assert_array_equal(np.asarray(index2), np.asarray(index))
-        served = gs.serve_step(index, reads, cfg)
+        # the serve-layout probe over the raw matrix agrees with engine msmt
+        per_kmer = gs.query_plan(cfg, reads.shape[0], index.shape).execute(
+            index, reads)
+        served = query.file_match_mask(per_kmer, cfg.theta)
         want = np.asarray(packed.unpack_file_bits(served, cfg.n_files))
         np.testing.assert_array_equal(
             np.asarray(eng.msmt(reads, theta=theta)), want)

@@ -1,6 +1,5 @@
 """COBS / RAMBO / gene-search service end-to-end behaviour (MT + MSMT)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -72,38 +71,48 @@ class TestRambo:
 
 
 class TestGeneSearchService:
+    """Serve-geometry behaviour through the v2 engine (the removed v1
+    serve_step path's semantics, now via BitSlicedIndex.msmt)."""
+
+    @staticmethod
+    def _engine(cfg):
+        from repro.index import BitSlicedIndex
+
+        return BitSlicedIndex.build(cfg.idl_config(), cfg.scheme,
+                                    n_files=cfg.n_files)
+
     def test_serve_recall_and_fp(self):
         cfg = gs.GeneSearchConfig(n_files=64, m=1 << 18, L=1 << 10,
                                   read_len=100, eta=2)
-        idx = gs.empty_index(cfg)
         rng = np.random.default_rng(1)
-        reads = [rng.integers(0, 4, 100, dtype=np.uint8) for _ in range(6)]
-        for i, r in enumerate(reads):
-            idx = gs.insert_read(idx, cfg, i * 9, jnp.asarray(r))
-        out = jax.jit(lambda i, q: gs.serve_step(i, q, cfg))(
-            idx, jnp.stack([jnp.asarray(r) for r in reads]))
+        reads = np.stack([rng.integers(0, 4, 100, dtype=np.uint8)
+                          for _ in range(6)])
+        fids = np.arange(6, dtype=np.int32) * 9
+        eng = self._engine(cfg).insert_batch(jnp.asarray(reads), fids)
+        out = np.asarray(eng.msmt(jnp.asarray(reads), theta=cfg.theta))
         for i in range(len(reads)):
-            ids = gs.match_file_ids(np.asarray(out[i]))
+            ids = np.nonzero(out[i])[0]
             assert i * 9 in ids
             assert len(ids) <= 2
 
     def test_rh_variant_matches_semantics(self):
         cfg = gs.GeneSearchConfig(n_files=32, m=1 << 18, L=1 << 10,
                                   read_len=100, eta=2, scheme="rh")
-        idx = gs.empty_index(cfg)
         rng = np.random.default_rng(2)
         read = jnp.asarray(rng.integers(0, 4, 100, dtype=np.uint8))
-        idx = gs.insert_read(idx, cfg, 17, read)
-        out = gs.serve_step(idx, read[None], cfg)
-        assert 17 in gs.match_file_ids(np.asarray(out[0]))
+        eng = self._engine(cfg).insert_batch(
+            read[None], np.asarray([17], dtype=np.int32))
+        out = np.asarray(eng.msmt(read[None], theta=cfg.theta))
+        assert out[0, 17]
 
     def test_theta_below_one_popcount_path(self):
         cfg = gs.GeneSearchConfig(n_files=32, m=1 << 18, L=1 << 10,
                                   read_len=100, eta=2, theta=0.5)
-        idx = gs.empty_index(cfg)
         rng = np.random.default_rng(3)
         read = rng.integers(0, 4, 100, dtype=np.uint8)
-        idx = gs.insert_read(idx, cfg, 5, jnp.asarray(read))
+        eng = self._engine(cfg).insert_batch(
+            jnp.asarray(read)[None], np.asarray([5], dtype=np.int32))
         poisoned = genome.poison_queries(read[None], seed=4)[0]
-        out = gs.serve_step(idx, jnp.asarray(poisoned)[None], cfg)
-        assert 5 in gs.match_file_ids(np.asarray(out[0]))
+        out = np.asarray(eng.msmt(jnp.asarray(poisoned)[None],
+                                  theta=cfg.theta))
+        assert out[0, 5]

@@ -101,15 +101,22 @@ class TestInsertBackendParityMatrix:
             np.testing.assert_array_equal(wa, wb)
 
     def test_serving_insert_backends(self, reads):
+        # the serve-geometry plan helper (survivor of the removed v1
+        # surface) stays bit-identical across ingest backends
         cfg = gs.GeneSearchConfig(n_files=32, m=1 << 16, L=1 << 10,
                                   read_len=120, eta=2)
-        fids = np.asarray([0, 7, 13, 21, 30, 31], dtype=np.int32)
-        want = np.asarray(gs.insert_read_batch(
-            gs.empty_index(cfg), cfg, reads, fids))
+        fids = jnp.asarray([0, 7, 13, 21, 30, 31], dtype=jnp.int32)
+
+        def build(backend):
+            index = jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
+            plan = gs.insert_plan(cfg, reads.shape[0], index.shape,
+                                  read_len=reads.shape[1])
+            return np.asarray(plan.execute(index, reads, fids,
+                                           backend=backend))
+
+        want = build("jnp")
         for backend in ("idl_insert", "sharded"):
-            got = np.asarray(gs.insert_read_batch(
-                gs.empty_index(cfg), cfg, reads, fids, backend=backend))
-            np.testing.assert_array_equal(got, want)
+            np.testing.assert_array_equal(build(backend), want)
 
     def test_unknown_backend_raises(self, reads):
         eng = _empty_engine("bloom", "idl", 1)
@@ -158,22 +165,20 @@ class TestInsertBackendParityMatrix:
 
 
 class TestDeprecatedPackedEntryPoints:
-    def test_legacy_insert_batch_warn_and_match(self, reads):
+    def test_legacy_insert_batch_removed(self, reads):
+        # the three legacy jit entry points finished their deprecation
+        # window: call-time ImportError stubs pointing at the ingest layer
         cfg = _cfg()
-        with pytest.warns(DeprecationWarning, match="InsertPlan"):
-            words = packed.insert_batch_words(
+        with pytest.raises(ImportError, match="plan_insert"):
+            packed.insert_batch_words(
                 jnp.zeros((cfg.m // 32,), dtype=jnp.uint32), reads,
                 cfg=cfg, scheme="idl")
-        np.testing.assert_array_equal(
-            np.asarray(words),
-            np.asarray(PackedBloomIndex.build(cfg, "idl")
-                       .insert_batch(reads).words))
-        with pytest.warns(DeprecationWarning, match="InsertPlan"):
+        with pytest.raises(ImportError, match="plan_insert"):
             packed.insert_batch_bitsliced(
                 jnp.zeros((cfg.m, 1), dtype=jnp.uint32), reads,
                 jnp.arange(reads.shape[0], dtype=jnp.int32),
                 cfg=cfg, scheme="idl")
-        with pytest.warns(DeprecationWarning, match="InsertPlan"):
+        with pytest.raises(ImportError, match="plan_insert"):
             packed.insert_batch_rows(
                 jnp.zeros((4, cfg.m // 32), dtype=jnp.uint32), reads,
                 jnp.zeros((reads.shape[0], 2), dtype=jnp.int32),

@@ -1,0 +1,485 @@
+"""Live-index acceptance: merged base+delta answers bit-identical to a
+single union index across 4 engines × {idl, rh} × {jnp, idl_probe,
+sharded} × theta ∈ {1.0, 0.6} — including mid-compaction; compaction
+under traffic drops zero futures and triggers zero recompiles; the delta
+journal survives a crash between append and compaction publish."""
+
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.index import lsm, store
+from repro.index.engines import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+)
+from repro.serving import (
+    AsyncScheduler,
+    GeneSearchService,
+    LiveGeneSearchService,
+    LiveReplicaRouter,
+    RouterConfig,
+    SchedulerConfig,
+    ServiceConfig,
+)
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(6, 120), dtype=np.uint8))
+
+
+@pytest.fixture(scope="module")
+def queries(reads):
+    """Mixed-length stream over base AND delta-inserted reads — prefixes
+    of indexed reads are guaranteed hits at theta=1, and the lengths span
+    three kmer buckets (the padded valid=/need= plumbing under test)."""
+    lens = [120, 100, 77, 120, 61, 99]
+    return [np.asarray(reads[i][:n]) for i, n in enumerate(lens)]
+
+
+def _build_base(name: str, reads, scheme: str = "idl"):
+    """Base index over reads[:3] (the immutable LSM base)."""
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme).insert_batch(reads[:3])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads[:3], np.arange(3))
+    if name == "rambo":
+        return RamboIndex.build(
+            5, _cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads[:3], np.arange(3))
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads[:3], np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+# streaming writes: two batches over reads[3:], per-engine file ids
+_WRITES = {
+    "bloom": [((3, 5), None), ((5, 6), None)],
+    "cobs": [((3, 5), [1, 2]), ((5, 6), [0])],
+    "rambo": [((3, 5), [3, 4]), ((5, 6), [1])],
+    "bitsliced": [((3, 5), [5, 17]), ((5, 6), [23])],
+}
+
+
+def _oracle(name: str, reads, scheme: str = "idl"):
+    """The hypothetical single merged index: base + every write batch."""
+    eng = _build_base(name, reads, scheme)
+    for (a, b), fids in _WRITES[name]:
+        eng = eng.insert_batch(
+            reads[a:b], None if fids is None else np.asarray(fids))
+    return eng
+
+
+def _live_service(name: str, reads, scheme: str = "idl",
+                  **svc_kw) -> LiveGeneSearchService:
+    """Live service over the base with both write batches absorbed."""
+    live = lsm.LiveIndex(_build_base(name, reads, scheme))
+    svc = LiveGeneSearchService(
+        live, ServiceConfig(max_batch=4, **svc_kw))
+    for (a, b), fids in _WRITES[name]:
+        svc.apply_insert(np.asarray(reads[a:b]), fids)
+    return svc
+
+
+class TestMergedQueryParity:
+    """The acceptance matrix: two-probe merged serving == single union
+    index, bit for bit, through the padded-bucket service front-end."""
+
+    @pytest.mark.parametrize("theta", [1.0, 0.6])
+    @pytest.mark.parametrize("backend", ["jnp", "idl_probe", "sharded"])
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_bit_identical_to_union_index(self, reads, queries, engine,
+                                          scheme, backend, theta):
+        svc = _live_service(engine, reads, scheme,
+                            backend=backend, theta=theta)
+        oracle = _oracle(engine, reads, scheme)
+        for q, res in zip(queries, svc.search(queries)):
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None],
+                                          theta=theta))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+            assert res.delta_seq == len(_WRITES[engine])
+
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_exact_mid_compaction(self, reads, queries, engine, scheme):
+        """A write lands between plan and publish: queries stay exact the
+        whole way through, and the same-geometry publish reuses every
+        compiled executable (zero recompiles)."""
+        live = lsm.LiveIndex(_build_base(engine, reads, scheme))
+        svc = LiveGeneSearchService(live, ServiceConfig(max_batch=4))
+        (a, b), fids = _WRITES[engine][0]
+        svc.apply_insert(np.asarray(reads[a:b]), fids)
+        svc.search(queries)                      # warm every bucket
+        counts0 = svc.compile_counts()
+        assert all(c == 1 for c in counts0.values())
+
+        plan = live.plan_compaction()
+        merged = lsm.LiveIndex.compact(plan)     # compactor working...
+        (a, b), fids = _WRITES[engine][1]
+        svc.apply_insert(np.asarray(reads[a:b]), fids)   # ...write lands
+
+        oracle = _oracle(engine, reads, scheme)
+        for q, res in zip(queries, svc.search(queries)):   # mid-compaction
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+        version = svc.publish(merged, plan.upto_seq)
+        assert version == 1
+        for q, res in zip(queries, svc.search(queries)):   # post-publish
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+            assert res.version == 1
+            assert res.delta_seq == plan.upto_seq + 1      # the late write
+        assert svc.compile_counts() == counts0             # zero recompiles
+
+    def test_second_compaction_absorbs_late_write(self, reads, queries):
+        svc = _live_service("bitsliced", reads)
+        svc.compact()
+        assert svc.live.delta_batches() == 0
+        oracle = _oracle("bitsliced", reads)
+        for q, res in zip(queries, svc.search(queries)):
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+
+class TestDeltaGeometry:
+    """Smaller-m deltas (bit-probe engines) and the geometry gates."""
+
+    @pytest.mark.parametrize("engine", ["bloom", "rambo"])
+    def test_small_m_delta_is_exact(self, reads, queries, engine):
+        delta_cfg = _cfg(1 << 12)
+        live = lsm.LiveIndex(_build_base(engine, reads),
+                             delta_cfg=delta_cfg)
+        for (a, b), fids in _WRITES[engine]:
+            live.insert(np.asarray(reads[a:b]), fids)
+        oracle = _oracle(engine, reads)
+        for q in queries:
+            np.testing.assert_array_equal(
+                np.asarray(live.msmt(jnp.asarray(q)[None])),
+                np.asarray(oracle.msmt(jnp.asarray(q)[None])))
+        # different word shapes: compaction takes the replay path, and the
+        # merged result still carries the BASE geometry
+        live.compact_now()
+        assert live.delta_batches() == 0
+        for q in queries:
+            np.testing.assert_array_equal(
+                np.asarray(live.msmt(jnp.asarray(q)[None])),
+                np.asarray(oracle.msmt(jnp.asarray(q)[None])))
+
+    @pytest.mark.parametrize("engine", ["cobs", "bitsliced"])
+    def test_row_probe_engines_reject_delta_cfg(self, reads, engine):
+        with pytest.raises(ValueError, match="row geometry"):
+            lsm.LiveIndex(_build_base(engine, reads),
+                          delta_cfg=_cfg(1 << 12))
+
+    def test_delta_kmer_size_must_match(self, reads):
+        bad = idl.IDLConfig(k=21, t=16, L=1 << 10, eta=2, m=1 << 12)
+        with pytest.raises(ValueError, match="kmer size"):
+            lsm.LiveIndex(_build_base("bloom", reads), delta_cfg=bad)
+
+    def test_publish_rejects_foreign_geometry(self, reads):
+        live = lsm.LiveIndex(_build_base("bloom", reads))
+        foreign = lsm.empty_delta(live.base, _cfg(1 << 12))
+        with pytest.raises(ValueError, match="geometry"):
+            live.publish(foreign, live.delta_seq)
+
+
+class TestWriteAdmission:
+    """Scheduler/router write path: acks, gating, ordering, staleness."""
+
+    def test_static_service_is_not_writable(self, reads):
+        svc = GeneSearchService(_build_base("bitsliced", reads))
+        with AsyncScheduler(svc) as sched:
+            with pytest.raises(TypeError, match="not writable"):
+                sched.submit_insert(np.asarray(reads[3:5]),
+                                    np.asarray([5, 17]))
+
+    def test_ack_watermark_gives_read_your_writes(self, reads):
+        svc = _live_service("bitsliced", reads)    # seq 1, 2 absorbed
+        with AsyncScheduler(svc) as sched:
+            ack = sched.submit_insert(
+                np.asarray(reads[5:6]), np.asarray([30])).result(timeout=30)
+            assert (ack.base_version, ack.delta_seq) == (0, 3)
+            assert ack.n_reads == 1
+            res = sched.submit(np.asarray(reads[5])).result(timeout=30)
+            # the query dispatched after the ack resolved, so its
+            # watermark covers the write — and the write is visible
+            assert (res.version, res.delta_seq) >= (0, 3)
+            assert 30 in res.file_ids
+
+    def test_pause_gates_writes(self, reads):
+        svc = _live_service("bitsliced", reads)
+        sched = AsyncScheduler(svc)
+        try:
+            sched.pause()
+            fut = sched.submit_insert(np.asarray(reads[5:6]),
+                                      np.asarray([30]))
+            time.sleep(0.05)
+            assert not fut.done()          # the hot-swap window holds writes
+            sched.resume()
+            assert fut.result(timeout=30).delta_seq == 3
+        finally:
+            sched.close()
+
+    def test_closed_scheduler_rejects_writes(self, reads):
+        svc = _live_service("bitsliced", reads)
+        sched = AsyncScheduler(svc)
+        sched.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit_insert(np.asarray(reads[5:6]), np.asarray([30]))
+
+    def test_router_fans_writes_to_every_replica(self, reads, queries):
+        rt = LiveReplicaRouter(
+            _build_base("bitsliced", reads), ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=2, policy="round_robin"))
+        with rt:
+            for (a, b), fids in _WRITES["bitsliced"]:
+                acks = [f.result(timeout=30) for f in
+                        rt.insert(np.asarray(reads[a:b]), np.asarray(fids))]
+                assert len(acks) == 2
+                assert len({a.delta_seq for a in acks}) == 1   # aligned
+            oracle = _oracle("bitsliced", reads)
+            # round_robin over 2 replicas: every replica must answer the
+            # union (duplicate the stream so both serve every query)
+            for q, res in zip(queries * 2, rt.search(queries * 2)):
+                want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+                np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+    def test_scaled_out_replica_replays_the_tail(self, reads, queries):
+        rt = LiveReplicaRouter(
+            _build_base("bitsliced", reads), ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=1, policy="round_robin"))
+        with rt:
+            for (a, b), fids in _WRITES["bitsliced"]:
+                for f in rt.insert(np.asarray(reads[a:b]), np.asarray(fids)):
+                    f.result(timeout=30)
+            rt.scale_to(2)                 # day-two replica: tail replay
+            oracle = _oracle("bitsliced", reads)
+            for q, res in zip(queries * 2, rt.search(queries * 2)):
+                want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+                np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+    def test_live_router_swap_state_is_closed_off(self, reads):
+        rt = LiveReplicaRouter(_build_base("bitsliced", reads),
+                               ServiceConfig(max_batch=4),
+                               RouterConfig(n_replicas=1))
+        with rt:
+            with pytest.raises(NotImplementedError, match="compact"):
+                rt.swap_state(_build_base("bitsliced", reads))
+
+
+class TestCompactionUnderTraffic:
+    def test_zero_drop_zero_recompile(self, reads, queries):
+        """Queries stream while writes land and the fleet compacts twice:
+        every future resolves, answers are exact for their stamped
+        watermark, and no same-geometry publish recompiles anything."""
+        rt = LiveReplicaRouter(
+            _build_base("bitsliced", reads), ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=2, policy="round_robin",
+                         scheduler=SchedulerConfig(max_delay_ms=0.5)))
+        futures = []
+        stop = threading.Event()
+
+        def submitter():
+            i = 0
+            while not stop.is_set():
+                futures.append((i % 6, rt.submit(queries[i % 6])))
+                i += 1
+                time.sleep(0.0005)
+
+        with rt:
+            rt.search(queries)                       # warm every bucket
+            thread = threading.Thread(target=submitter)
+            thread.start()
+            try:
+                time.sleep(0.02)
+                for f in rt.insert(np.asarray(reads[3:5]),
+                                   np.asarray([5, 17])):
+                    f.result(timeout=30)             # write 1: seq 1
+                assert rt.compact() == 1
+                time.sleep(0.02)
+                for f in rt.insert(np.asarray(reads[5:6]),
+                                   np.asarray([23])):
+                    f.result(timeout=30)             # write 2: seq 2
+                assert rt.compact() == 2
+                time.sleep(0.02)
+            finally:
+                stop.set()
+                thread.join()
+            rt.drain()
+            results = [(src, f.result(timeout=30)) for src, f in futures]
+            assert len(results) == len(futures)      # zero dropped futures
+            base_fid = {0: 0, 1: 9, 2: 39}
+            write_fid = {3: 5, 4: 17, 5: 23}
+            write_seq = {3: 1, 4: 2, 5: 2}
+            for src, res in results:
+                if src in base_fid:                  # base reads: always hit
+                    assert base_fid[src] in res.file_ids, (src, res)
+                elif res.version * 100 + res.delta_seq >= write_seq[src] \
+                        and (res.version >= write_seq[src]
+                             or res.delta_seq >= write_seq[src]):
+                    # the serving watermark covers this read's write
+                    assert write_fid[src] in res.file_ids, (src, res)
+            versions = {res.version for _, res in results}
+            assert versions <= {0, 1, 2}
+            # both compactions published under traffic, zero recompiles
+            counts = rt.compile_counts()
+            assert all(c == 1 for per in counts.values()
+                       for c in per.values()), counts
+
+
+class TestCrashRecovery:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_reboot_matches_no_crash_run(self, tmp_path, reads, queries,
+                                         engine, scheme):
+        """Writer dies after the compactor computed its merge but BEFORE
+        publish/journal-truncate: reboot from snapshot+journal answers
+        bit-identical to the run that never crashed."""
+        snap = store.save(_build_base(engine, reads, scheme),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        live = lsm.LiveIndex.open(snap, journal_path=wal)
+        for (a, b), fids in _WRITES[engine]:
+            live.insert(np.asarray(reads[a:b]), fids)
+        plan = live.plan_compaction()
+        merged = lsm.LiveIndex.compact(plan)
+        del merged                       # crash: merge lost, WAL untouched
+        live.close()
+
+        reboot = lsm.LiveIndex.open(snap, journal_path=wal)
+        assert reboot.delta_seq == len(_WRITES[engine])
+        oracle = _oracle(engine, reads, scheme)   # == the no-crash run
+        for theta in (1.0, 0.6):
+            for q in queries:
+                np.testing.assert_array_equal(
+                    np.asarray(reboot.msmt(jnp.asarray(q)[None],
+                                           theta=theta)),
+                    np.asarray(oracle.msmt(jnp.asarray(q)[None],
+                                           theta=theta)))
+        reboot.compact_now()             # recovery compacts cleanly too
+        for q in queries:
+            np.testing.assert_array_equal(
+                np.asarray(reboot.msmt(jnp.asarray(q)[None])),
+                np.asarray(oracle.msmt(jnp.asarray(q)[None])))
+        reboot.close()
+
+    def test_torn_tail_record_is_dropped(self, tmp_path, reads, queries):
+        snap = store.save(_build_base("bitsliced", reads),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        live = lsm.LiveIndex.open(snap, journal_path=wal)
+        (a, b), fids = _WRITES["bitsliced"][0]
+        live.insert(np.asarray(reads[a:b]), fids)
+        want = [np.asarray(live.msmt(jnp.asarray(q)[None]))
+                for q in queries]
+        live.close()
+        with open(wal, "ab") as fh:      # crash mid-append: torn record
+            fh.write(b"\x07half-a-record-then-power-loss")
+        reboot = lsm.LiveIndex.open(snap, journal_path=wal)
+        assert reboot.delta_seq == 1     # acked batch survives, tear doesn't
+        for q, w in zip(queries, want):
+            np.testing.assert_array_equal(
+                np.asarray(reboot.msmt(jnp.asarray(q)[None])), w)
+        # the truncated journal accepts new appends cleanly
+        (a, b), fids = _WRITES["bitsliced"][1]
+        assert reboot.insert(np.asarray(reads[a:b]), fids) == 2
+        reboot.close()
+
+    def test_service_level_reboot(self, tmp_path, reads, queries):
+        snap = store.save(_build_base("bitsliced", reads),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        svc = LiveGeneSearchService.open(snap, ServiceConfig(max_batch=4),
+                                         journal_path=wal)
+        for (a, b), fids in _WRITES["bitsliced"]:
+            svc.apply_insert(np.asarray(reads[a:b]), fids)
+        svc.live.close()                 # crash before any compaction
+        svc2 = LiveGeneSearchService.open(snap, ServiceConfig(max_batch=4),
+                                          journal_path=wal)
+        oracle = _oracle("bitsliced", reads)
+        for q, res in zip(queries, svc2.search(queries)):
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(np.asarray(res.matches), want)
+        svc2.live.close()
+
+
+class TestDeltaJournal:
+    def _records(self, reads):
+        return [
+            (np.asarray(reads[0:2], dtype=np.uint8), np.asarray([3, 4])),
+            (np.asarray(reads[2:3], dtype=np.uint8), None),
+        ]
+
+    def test_round_trip(self, tmp_path, reads):
+        path = str(tmp_path / "j.wal")
+        j = lsm.DeltaJournal(path)
+        for i, (r, f) in enumerate(self._records(reads)):
+            j.append(i + 1, r, f)
+        j.close()
+        back = lsm.DeltaJournal(path).records()
+        assert [r.seq for r in back] == [1, 2]
+        np.testing.assert_array_equal(back[0].reads,
+                                      np.asarray(reads[0:2]))
+        np.testing.assert_array_equal(back[0].file_ids, [3, 4])
+        assert back[1].file_ids is None
+
+    def test_truncate_through_keeps_late_records(self, tmp_path, reads):
+        path = str(tmp_path / "j.wal")
+        j = lsm.DeltaJournal(path)
+        for seq in (1, 2, 3):
+            j.append(seq, np.asarray(reads[0:1]), None)
+        j.truncate_through(2)
+        assert [r.seq for r in j.records()] == [3]
+        j.append(4, np.asarray(reads[1:2]), None)   # appends continue
+        assert [r.seq for r in j.records()] == [3, 4]
+        j.close()
+
+    def test_corrupt_record_stops_replay(self, tmp_path, reads):
+        path = str(tmp_path / "j.wal")
+        j = lsm.DeltaJournal(path)
+        j.append(1, np.asarray(reads[0:1]), None)
+        j.append(2, np.asarray(reads[1:2]), None)
+        j.close()
+        size = os.path.getsize(path)
+        with open(path, "r+b") as fh:    # flip a payload byte of record 2
+            fh.seek(size - 10)
+            byte = fh.read(1)
+            fh.seek(size - 10)
+            fh.write(bytes([byte[0] ^ 0xFF]))
+        assert [r.seq for r in lsm.DeltaJournal(path).records()] == [1]
+
+    def test_foreign_file_rejected(self, tmp_path):
+        path = str(tmp_path / "not-a-journal")
+        with open(path, "wb") as fh:
+            fh.write(b"PK\x03\x04 definitely a zip")
+        with pytest.raises(lsm.JournalError, match="magic"):
+            lsm.DeltaJournal(path)
+
+    def test_future_version_rejected(self, tmp_path):
+        import struct
+
+        path = str(tmp_path / "future.wal")
+        with open(path, "wb") as fh:
+            fh.write(struct.pack("<4sI", b"IDLJ", 99))
+        with pytest.raises(lsm.JournalError, match="version"):
+            lsm.DeltaJournal(path)

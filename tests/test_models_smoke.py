@@ -217,12 +217,14 @@ class TestRecsysSmoke:
 
 class TestGenesearchSmoke:
     def test_smoke_config_serves(self, rng):
+        from repro.index import BitSlicedIndex
+
         cfg = configs.get("idl-genesearch").make_smoke_config()
-        idx = gs.empty_index(cfg)
         read = jnp.asarray(rng.integers(0, 4, cfg.read_len, dtype=np.uint8))
-        idx = gs.insert_read(idx, cfg, 3, read)
-        out = gs.serve_step(idx, read[None], cfg)
-        assert 3 in gs.match_file_ids(np.asarray(out[0]))
+        eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme, cfg.n_files)
+        eng = eng.insert_batch(read[None], np.asarray([3], dtype=np.int32))
+        out = np.asarray(eng.msmt(read[None], theta=cfg.theta))
+        assert out[0, 3]
 
 
 class TestAbstractCells:

@@ -215,38 +215,53 @@ class TestSnapshotStartup:
 
 
 class TestV1CompatLayer:
-    """serving.genesearch is deprecated: every v1 entry point warns, and
-    the v1 surface stays bit-identical to the v2 path it delegates to."""
+    """serving.genesearch's deprecated v1 bodies are gone: every removed
+    entry point raises ImportError carrying its migration target at CALL
+    time (the module itself must stay importable for the import smoke),
+    while the surviving config/plan helpers still drive the v2 path."""
 
-    def test_v1_warns_and_matches_v2(self, reads, queries):
+    def test_removed_entry_points_raise_with_migration_hint(self, reads):
         from repro.serving import genesearch as gs
 
         cfg = gs.GeneSearchConfig(n_files=32, m=1 << 16, L=1 << 10, eta=2,
                                   read_len=120)
         fids = jnp.asarray([0, 7, 31], dtype=jnp.int32)
-        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
-            index = gs.empty_index(cfg)
-        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
-            index = gs.insert_read_batch(index, cfg, reads, fids)
-        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
-            got = gs.serve_step(index, reads, cfg)
-        with pytest.warns(DeprecationWarning, match="v1 serving surface"):
-            ids = gs.match_file_ids(np.asarray(got)[0])
+        with pytest.raises(ImportError, match="BitSlicedIndex"):
+            gs.empty_index(cfg)
+        index = jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
+        with pytest.raises(ImportError, match="insert_plan"):
+            gs.insert_read_batch(index, cfg, reads, fids)
+        with pytest.raises(ImportError, match="insert_batch"):
+            gs.insert_read(index, cfg, 0, reads[0])
+        with pytest.raises(ImportError, match="build_archive"):
+            gs.build_archive(cfg, [])
+        with pytest.raises(ImportError, match="GeneSearchService"):
+            gs.serve_step(index, reads, cfg)
+        with pytest.raises(ImportError, match="unpack_file_bits"):
+            gs.match_file_ids(np.zeros(1, dtype=np.uint32))
 
-        # bit-identical through the v2 path: same storage geometry via the
-        # protocol-level engine + the dynamic-batching service
+    def test_surviving_plan_helpers_drive_v2(self, reads):
+        from repro.index import query
+        from repro.serving import genesearch as gs
+
+        cfg = gs.GeneSearchConfig(n_files=32, m=1 << 16, L=1 << 10, eta=2,
+                                  read_len=120)
+        fids = jnp.asarray([0, 7, 31], dtype=jnp.int32)
+        index = jnp.zeros((cfg.m, cfg.file_words), dtype=jnp.uint32)
+        index = gs.insert_plan(cfg, reads.shape[0], index.shape).execute(
+            index, reads, fids)
         eng = BitSlicedIndex.build(cfg.idl_config(), cfg.scheme,
                                    n_files=cfg.n_files)
         eng = eng.insert_batch(reads, np.asarray(fids))
-        want_words = np.asarray(eng.words)
-        np.testing.assert_array_equal(np.asarray(index), want_words)
+        np.testing.assert_array_equal(np.asarray(index), np.asarray(eng.words))
+        per_kmer = gs.query_plan(cfg, reads.shape[0], index.shape).execute(
+            jnp.asarray(index), reads)
+        got = query.file_match_mask(per_kmer, cfg.theta)
         svc = GeneSearchService(eng, ServiceConfig(max_batch=4))
         for i, res in enumerate(svc.search(list(np.asarray(reads)))):
             np.testing.assert_array_equal(
                 np.asarray(res.matches),
                 packed.unpack_file_bits(jnp.asarray(got[i]), cfg.n_files))
-        assert ids == list(
-            svc.search([np.asarray(reads[0])])[0].file_ids)
 
     def test_v2_service_does_not_warn(self, reads):
         import warnings
