@@ -33,11 +33,14 @@ geometry it is ONE jitted elementwise OR of the packed uint32 words
 journaled batches through the base's own insert plan. Either way the
 merged state keeps the base ``StateMeta``, so publishing it through the
 serving layer's swap protocol costs **zero recompiles** (state is a pytree
-argument of every compiled step). :meth:`LiveIndex.publish` swaps base,
-rebuilds the delta from any batches that arrived mid-compaction, and
-truncates the journal — the two-phase dance
-``plan_compaction → compact → publish`` lets the expensive middle step run
-on a background thread while queries keep merging base+delta.
+argument of every compiled step). :meth:`LiveIndex.publish` swaps base and
+rebuilds the delta from any batches that arrived mid-compaction — the
+two-phase dance ``plan_compaction → compact → publish`` lets the expensive
+middle step run on a background thread while queries keep merging
+base+delta. The journal is truncated only when the merged base reached
+stable storage (``save_dir`` / ``durable=True``): until then it stays the
+sole durable copy of the folded writes, so an in-memory-only compaction
+never weakens the crash guarantee.
 """
 
 from __future__ import annotations
@@ -104,7 +107,10 @@ class DeltaJournal:
     file-id bytes; the CRC covers header + payload. Appends ``flush`` +
     ``fsync`` before returning, so an acked write survives a crash; a torn
     tail (crash mid-append) fails its CRC or length check on replay and is
-    discarded — it was never acked.
+    discarded — it was never acked. A bad record with valid records after
+    it is NOT a torn tail: that is mid-file corruption of acked writes,
+    and the constructor raises :class:`JournalError` rather than silently
+    truncating them (see :meth:`_scan`).
     """
 
     def __init__(self, path: str):
@@ -118,49 +124,71 @@ class DeltaJournal:
 
     def _scan(self) -> int:
         """Validate the file; returns the byte offset after the last good
-        record (creating the header if the file is new/empty)."""
+        record (creating the header if the file is new/empty).
+
+        Only a TORN TAIL may be dropped: the final record failing its CRC
+        or running past EOF is a crash mid-append (never acked). A bad
+        record with a structurally valid, CRC-passing record anywhere
+        after it is mid-file corruption of acked writes — that raises
+        :class:`JournalError` instead of silently truncating them away.
+        """
         if not os.path.exists(self.path) or os.path.getsize(self.path) == 0:
             with open(self.path, "wb") as fh:
                 fh.write(_HEADER.pack(_MAGIC, _VERSION))
             return _HEADER.size
         with open(self.path, "rb") as fh:
-            head = fh.read(_HEADER.size)
-            if len(head) < _HEADER.size:
-                raise JournalError(f"{self.path}: truncated journal header")
-            magic, version = _HEADER.unpack(head)
-            if magic != _MAGIC:
-                raise JournalError(
-                    f"{self.path}: not a delta journal (magic {magic!r})")
-            if version > _VERSION:
-                raise JournalError(
-                    f"{self.path}: journal version {version} is newer than "
-                    f"supported {_VERSION}")
-            good = fh.tell()
-            while True:
-                rec = self._read_record(fh)
-                if rec is None:
-                    return good
-                good = fh.tell()
+            data = fh.read()
+        if len(data) < _HEADER.size:
+            raise JournalError(f"{self.path}: truncated journal header")
+        magic, version = _HEADER.unpack(data[:_HEADER.size])
+        if magic != _MAGIC:
+            raise JournalError(
+                f"{self.path}: not a delta journal (magic {magic!r})")
+        if version > _VERSION:
+            raise JournalError(
+                f"{self.path}: journal version {version} is newer than "
+                f"supported {_VERSION}")
+        good = _HEADER.size
+        while True:
+            parsed = self._parse_record(data, good)
+            if parsed is None:
+                break
+            good = parsed[1]
+        if good < len(data):
+            # a record failed at `good`. A torn tail is the ONLY thing we
+            # may drop — probe every later offset for a valid record; a
+            # hit means the middle of the file rotted under acked writes.
+            probe = good + 1
+            while probe + _REC.size + 4 <= len(data):
+                if self._parse_record(data, probe) is not None:
+                    raise JournalError(
+                        f"{self.path}: corrupt record at byte {good} with "
+                        f"valid records after it — mid-file corruption, "
+                        f"not a torn tail; refusing to drop acked writes")
+                probe += 1
+        return good
 
     @staticmethod
-    def _read_record(fh) -> Optional[JournalRecord]:
-        """One record, or None on EOF / torn tail (never raises for those)."""
-        head = fh.read(_REC.size)
-        if len(head) < _REC.size:
+    def _parse_record(data: bytes, off: int
+                      ) -> Optional[Tuple[JournalRecord, int]]:
+        """Try to parse one CRC-framed record at byte offset ``off``.
+
+        Returns ``(record, next_offset)``, or None when no structurally
+        valid record starts here (frame runs past EOF, or CRC mismatch —
+        a header's declared gigabytes just fail the bounds check, nothing
+        is ever allocated beyond what the buffer holds).
+        """
+        if off + _REC.size > len(data):
             return None
+        head = data[off:off + _REC.size]
         seq, n_reads, read_len, n_fids = _REC.unpack(head)
         payload_len = n_reads * read_len + max(n_fids, 0) * 4
-        # a torn tail can masquerade as a header declaring gigabytes —
-        # never allocate more than the file actually holds
-        remaining = os.fstat(fh.fileno()).st_size - fh.tell()
-        if payload_len + 4 > remaining:
+        end = off + _REC.size + payload_len + 4
+        if end > len(data):
             return None
-        payload = fh.read(payload_len)
-        crc_raw = fh.read(4)
-        if len(payload) < payload_len or len(crc_raw) < 4:
-            return None
+        payload = data[off + _REC.size:end - 4]
         if zlib.crc32(payload, zlib.crc32(head)) != \
-                struct.unpack("<I", crc_raw)[0]:
+                struct.unpack("<I", data[end - 4:end])[0]:
             return None
         reads = np.frombuffer(payload[:n_reads * read_len],
                               dtype=np.uint8).reshape(n_reads, read_len)
@@ -168,7 +196,7 @@ class DeltaJournal:
         if n_fids >= 0:
             fids = np.frombuffer(payload[n_reads * read_len:],
                                  dtype=np.int32).copy()
-        return JournalRecord(seq=seq, reads=reads.copy(), file_ids=fids)
+        return JournalRecord(seq=seq, reads=reads.copy(), file_ids=fids), end
 
     def append(self, seq: int, reads: np.ndarray,
                file_ids: Optional[np.ndarray]) -> None:
@@ -192,12 +220,14 @@ class DeltaJournal:
         with self._lock:
             self._fh.flush()
         with open(self.path, "rb") as fh:
-            fh.seek(_HEADER.size)
-            while True:
-                rec = self._read_record(fh)
-                if rec is None:
-                    return out
-                out.append(rec)
+            data = fh.read()
+        off = _HEADER.size
+        while True:
+            parsed = self._parse_record(data, off)
+            if parsed is None:
+                return out
+            rec, off = parsed
+            out.append(rec)
 
     def truncate_through(self, upto_seq: int) -> None:
         """Drop records with ``seq <= upto_seq`` (post-compaction), keeping
@@ -354,6 +384,7 @@ class LiveIndex:
         # start_seq aligns a fresh replica's watermark with a fleet-level
         # journal whose earlier records were already compacted into `base`
         self._delta_seq = int(start_seq)
+        self._compacted_seq = int(start_seq)  # writes <= this live in base
         self._tail: List[JournalRecord] = []
         if journal is not None:
             for rec in journal.records():         # boot replay (crash heal)
@@ -421,32 +452,42 @@ class LiveIndex:
         self._delta = state_mod.insert(
             self._delta, jnp.asarray(np.asarray(reads, dtype=np.uint8)),
             None if fids is None else np.asarray(fids), **kw)
-        self._delta_seq = int(seq)
+        # max, not assignment: a lagging replica re-applying an explicit
+        # fleet seq across a publish must never regress the watermark
+        self._delta_seq = max(self._delta_seq, int(seq))
         self._tail.append(JournalRecord(
             seq=int(seq),
             reads=np.asarray(reads, dtype=np.uint8),
             file_ids=None if file_ids is None
             else np.asarray(file_ids, dtype=np.int32)))
 
-    def insert(self, reads, file_ids=None, *, donate: bool = False,
-               **kw) -> int:
+    def insert(self, reads, file_ids=None, *, seq: Optional[int] = None,
+               donate: bool = False, **kw) -> int:
         """Journal, then absorb one read batch into the delta.
 
         Write-ahead order: the journal append (flush + fsync) happens
         *before* the delta insert, so an acked sequence number is durable.
-        ``kw`` passes through to the shared ingest layer (``backend`` in
-        {"jnp", "idl_insert", "sharded"}, ...). ``donate`` defaults OFF
-        here (unlike ``state.insert``): a compaction plan may hold the
-        pre-insert delta, and on donating backends its buffers must stay
-        live until publish — the delta is small by design, so the copy is
-        cheap. Bulk pre-serving loads can pass ``donate=True``. Returns
-        the batch's journal sequence number.
+        ``seq`` assigns an EXPLICIT fleet-level sequence number (a router
+        fanning one write-ahead-journaled stream to many replicas) instead
+        of the local ``delta_seq + 1`` — so every replica's watermark is
+        the fleet journal's, never a locally invented one. A ``seq`` the
+        base already contains (``<=`` the last published compaction
+        watermark — a lagging replica re-delivering across a publish) is
+        an idempotent no-op. ``kw`` passes through to the shared ingest
+        layer (``backend`` in {"jnp", "idl_insert", "sharded"}, ...).
+        ``donate`` defaults OFF here (unlike ``state.insert``): a
+        compaction plan may hold the pre-insert delta, and on donating
+        backends its buffers must stay live until publish — the delta is
+        small by design, so the copy is cheap. Bulk pre-serving loads can
+        pass ``donate=True``. Returns the batch's journal sequence number.
         """
         reads = np.asarray(reads, dtype=np.uint8)
         if reads.ndim == 1:
             reads = reads[None]
         with self._lock:
-            seq = self._delta_seq + 1
+            seq = self._delta_seq + 1 if seq is None else int(seq)
+            if seq <= self._compacted_seq:
+                return seq                # already folded into the base
             if self._journal is not None:
                 self._journal.append(seq, reads, file_ids)
             self._apply(reads, file_ids, seq=seq, donate=donate, **kw)
@@ -510,14 +551,24 @@ class LiveIndex:
                 merged, jnp.asarray(rec.reads), fids, donate=i > 0)
         return merged
 
-    def publish(self, merged: state_mod.IndexState, upto_seq: int) -> int:
+    def publish(self, merged: state_mod.IndexState, upto_seq: int, *,
+                durable: bool = False) -> int:
         """Swap the merged base in; rebuild the delta from late arrivals.
 
         Batches that landed after ``upto_seq`` (mid-compaction writes)
-        replay into a fresh delta; the journal drops everything the new
-        base now contains. Caller must hold the serving layer's hot-swap
-        window (no query/write dispatch in flight) — the same discipline
-        as ``GeneSearchService.swap_state``. Returns the new base version.
+        replay into a fresh delta. Caller must hold the serving layer's
+        hot-swap window (no query/write dispatch in flight) — the same
+        discipline as ``GeneSearchService.swap_state``.
+
+        Durability: the journal is the ONLY durable copy of the folded
+        writes until the merged base reaches stable storage, so it is
+        truncated only under ``durable=True`` — which the caller may pass
+        only after saving ``merged`` through the snapshot store (the
+        ``save_dir`` paths do exactly that). The default keeps every
+        record: a crash after an in-memory-only compaction reboots from
+        the previous snapshot + the full journal and loses nothing;
+        :meth:`save_base` reclaims the journal at the next snapshot.
+        Returns the new base version.
         """
         if merged.meta != self._base.meta:
             raise ValueError(
@@ -531,21 +582,40 @@ class LiveIndex:
             self._tail = []
             seq = self._delta_seq
             self._delta_seq = int(upto_seq)
+            self._compacted_seq = max(self._compacted_seq, int(upto_seq))
             for rec in late:
                 self._apply(rec.reads, rec.file_ids, seq=rec.seq)
             self._delta_seq = max(self._delta_seq, int(seq))
-            if self._journal is not None:
+            if durable and self._journal is not None:
                 self._journal.truncate_through(upto_seq)
             return self._base_version
 
-    def compact_now(self) -> int:
-        """Inline plan → compact → publish (the synchronous convenience)."""
+    def compact_now(self, *, save_dir: Optional[str] = None) -> int:
+        """Inline plan → compact → publish (the synchronous convenience).
+
+        ``save_dir`` writes the merged base through the versioned snapshot
+        store BEFORE the publish, which is what licenses the journal
+        truncation; without it the journal keeps every acked write (see
+        :meth:`publish`). Returns the new base version.
+        """
         plan = self.plan_compaction()
-        return self.publish(self.compact(plan), plan.upto_seq)
+        merged = self.compact(plan)
+        if save_dir is not None:
+            store.save(merged, save_dir)
+        return self.publish(merged, plan.upto_seq,
+                            durable=save_dir is not None)
 
     def save_base(self, directory: str) -> str:
-        """Write the current base through the versioned snapshot store."""
-        return store.save(self.base, directory)
+        """Write the current base through the versioned snapshot store,
+        then reclaim journal records the saved base contains (they existed
+        only to re-derive an UNSAVED base after a crash)."""
+        with self._lock:
+            base = self._base
+            compacted = self._compacted_seq
+        path = store.save(base, directory)
+        if self._journal is not None:
+            self._journal.truncate_through(compacted)
+        return path
 
     def close(self) -> None:
         if self._journal is not None:

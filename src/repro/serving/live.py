@@ -30,10 +30,14 @@ serving stack:
 Mid-compaction exactness: the compaction plan freezes (base, delta,
 watermark ``S``) under the write lock; queries keep merging the *live*
 pair while the merge computes; at publish, writes with seq > ``S``
-replay into the fresh delta. A replica that had not yet applied some
-write ≤ ``S`` when it publishes simply re-applies it into its new delta
-afterwards — scatter-OR idempotence makes the duplicate harmless, so
-every instant still answers exactly the union of acknowledged inserts.
+replay into the fresh delta. Every fanned write carries its FLEET
+sequence number (``submit_insert(..., seq=)``), so a replica that had
+not yet applied some write ≤ ``S`` when it published recognizes the
+late delivery (its new base already contains seq ≤ ``S``) and no-ops it
+— watermarks stay equal to the fleet journal's on every replica, the
+``(version, delta_seq)`` coordinates in acks and results stay
+comparable fleet-wide, and every instant still answers exactly the
+union of acknowledged inserts.
 """
 
 from __future__ import annotations
@@ -87,23 +91,29 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
         return self._live
 
     # -- the write path -----------------------------------------------------
-    def apply_insert(self, reads, file_ids=None, **kw):
+    def apply_insert(self, reads, file_ids=None, *, seq=None, **kw):
         """Absorb one write batch (journal + delta); returns the
         ``(base_version, delta_seq)`` at which it became searchable.
 
-        Must run on the same thread as query dispatch (the scheduler's
-        flusher provides that; the synchronous path is single-threaded by
-        construction) — the delta mutates between batches, never under a
-        dispatched one.
+        ``seq`` carries a router-assigned fleet sequence number through to
+        the live index (see :meth:`LiveIndex.insert`) so replica
+        watermarks never drift from the fleet journal; standalone services
+        leave it None and number locally. Must run on the same thread as
+        query dispatch (the scheduler's flusher provides that; the
+        synchronous path is single-threaded by construction) — the delta
+        mutates between batches, never under a dispatched one.
         """
-        seq = self._live.insert(reads, file_ids, **kw)
+        seq = self._live.insert(reads, file_ids, seq=seq, **kw)
         return self._live.base_version, seq
 
     # -- compaction ---------------------------------------------------------
-    def publish(self, merged: state_mod.IndexState, upto_seq: int) -> int:
+    def publish(self, merged: state_mod.IndexState, upto_seq: int, *,
+                durable: bool = False) -> int:
         """Install a compacted base (callers hold the no-dispatch window —
-        ``AsyncScheduler.pause`` — exactly like ``swap_state``)."""
-        version = self._live.publish(merged, upto_seq)
+        ``AsyncScheduler.pause`` — exactly like ``swap_state``). Pass
+        ``durable=True`` ONLY after ``merged`` reached stable storage: it
+        licenses the journal truncation (see :meth:`LiveIndex.publish`)."""
+        version = self._live.publish(merged, upto_seq, durable=durable)
         self._state = self._live.base
         self._version = version
         return version
@@ -112,7 +122,13 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
                 ) -> int:
         """Plan → merge (off the hot path) → publish. With a scheduler,
         the publish runs inside its pause window (zero dropped futures);
-        without one, the caller is the only dispatcher anyway."""
+        without one, the caller is the only dispatcher anyway.
+
+        ``save_dir`` writes the merged base through the snapshot store
+        BEFORE the publish, which is what allows the journal to drop the
+        folded writes; without it the journal keeps them — an acked write
+        stays durable across a crash either way.
+        """
         plan = self._live.plan_compaction()
         merged = lsm.LiveIndex.compact(plan).block_until_ready()
         if save_dir is not None:
@@ -120,7 +136,8 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
         if scheduler is not None:
             scheduler.pause()
         try:
-            return self.publish(merged, plan.upto_seq)
+            return self.publish(merged, plan.upto_seq,
+                                durable=save_dir is not None)
         finally:
             if scheduler is not None:
                 scheduler.resume()
@@ -249,7 +266,11 @@ class LiveReplicaRouter(router_mod.ReplicaRouter):
             self._wal_seq = seq
             self._tail.append(lsm.JournalRecord(
                 seq=seq, reads=reads, file_ids=fids))
-            return [r.scheduler.submit_insert(reads, fids)
+            # the fleet seq rides WITH the write: every replica applies it
+            # at this exact journal coordinate, so (version, delta_seq)
+            # watermarks can never drift replica-to-replica — a laggard
+            # that publishes first simply no-ops the re-delivery later
+            return [r.scheduler.submit_insert(reads, fids, seq=seq)
                     for r in serving]
 
     def delta_batches(self) -> int:
@@ -271,8 +292,11 @@ class LiveReplicaRouter(router_mod.ReplicaRouter):
         own pause window — in-flight batches finish, queued futures stay
         queued, and the merged state's unchanged ``StateMeta`` means every
         compiled step survives (zero recompiles, asserted in tests).
-        ``save_dir`` additionally writes the merged base through the
-        versioned snapshot store before any replica swaps.
+        ``save_dir`` writes the merged base through the versioned snapshot
+        store before any replica swaps — and is the ONLY path that
+        truncates the fleet journal: without a durable snapshot the
+        journal keeps the folded writes, so a crash reboots from the
+        previous snapshot + the full journal and loses nothing.
         """
         with self._admin_lock:
             with self._lock:
@@ -297,7 +321,7 @@ class LiveReplicaRouter(router_mod.ReplicaRouter):
                 self._tail = [r for r in self._tail
                               if r.seq > plan.upto_seq]
                 version = self._version
-            if self._journal is not None:
+            if save_dir is not None and self._journal is not None:
                 self._journal.truncate_through(plan.upto_seq)
             return version
 
@@ -321,9 +345,12 @@ class Compactor:
     :class:`LiveGeneSearchService` (pass its scheduler through
     ``compact_kwargs`` so publishes run inside the pause window). Checks
     every ``interval_s`` and compacts once ``min_delta_batches`` writes
-    have accumulated. A failed compaction stops the loop and surfaces on
-    :attr:`error` (and re-raises from :meth:`close`) — silent write-path
-    stalls are worse than a crash.
+    have accumulated. Without a ``save_dir`` in ``compact_kwargs`` the
+    compactions are in-memory only and the write-ahead journal keeps
+    growing (by design — truncation requires a durable snapshot); pass
+    one to reclaim it on every fold. A failed compaction stops the loop
+    and surfaces on :attr:`error` (and re-raises from :meth:`close`) —
+    silent write-path stalls are worse than a crash.
     """
 
     def __init__(self, target, *, interval_s: float = 0.25,

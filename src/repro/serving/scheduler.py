@@ -70,6 +70,11 @@ FLUSH_FULL = "full"          # target_batch requests were waiting
 FLUSH_DEADLINE = "deadline"  # oldest request hit max_delay_ms
 FLUSH_DRAIN = "drain"        # explicit drain()/close()
 
+# writes are preferred over queries, but in bounded bursts: at most this
+# many pending writes apply per burst, and an overdue query bucket gets a
+# flush between bursts (a sustained insert stream cannot starve queries)
+_WRITE_BURST = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
@@ -136,6 +141,7 @@ class _PendingWrite:
     file_ids: Optional[np.ndarray]
     future: Future
     t_enq: float
+    seq: Optional[int] = None    # router-assigned fleet sequence number
 
 
 class AsyncScheduler:
@@ -168,6 +174,8 @@ class AsyncScheduler:
         self._paused = False
         self._draining = False
         self._closed = False
+        self._wrote_last = False     # last flush was a write burst
+                                     # (alternation vs overdue queries)
         self.stats: Deque[ClusterStats] = collections.deque(
             maxlen=self.config.stats_window)
         # the double buffer: flusher blocks here once `pipeline_depth`
@@ -237,18 +245,24 @@ class AsyncScheduler:
             self._work.notify_all()
         return fut
 
-    def submit_insert(self, reads, file_ids=None) -> Future:
+    def submit_insert(self, reads, file_ids=None, *,
+                      seq: Optional[int] = None) -> Future:
         """Admit one write batch; returns a Future[InsertAck].
 
         Requires a live-index service (one exposing ``apply_insert`` —
         :class:`~repro.serving.live.LiveGeneSearchService`); a static
-        service raises immediately. Writes are applied by the flusher
-        thread *between* query batches, ahead of any queued query (the
-        insert-to-searchable latency knob), and on the SAME thread as all
-        query dispatch — which is exactly the single-dispatch-thread
-        discipline the live index's donated delta buffers require. Writes
-        count toward ``outstanding`` (``drain`` waits for them) and are
-        gated by ``pause`` (the hot-swap / compaction-publish window).
+        service raises immediately. ``seq`` threads a router-assigned
+        fleet sequence number through to the live index so every
+        replica's watermark is the fleet journal's (standalone callers
+        leave it None and the index numbers locally). Writes are applied
+        by the flusher thread *between* query batches, preferred over
+        queued queries in bounded bursts (the insert-to-searchable
+        latency knob; overdue queries still flush between bursts), and on
+        the SAME thread as all query dispatch — which is exactly the
+        single-dispatch-thread discipline the live index's donated delta
+        buffers require. Writes count toward ``outstanding`` (``drain``
+        waits for them) and are gated by ``pause`` (the hot-swap /
+        compaction-publish window).
         """
         if not hasattr(self._svc, "apply_insert"):
             raise TypeError(
@@ -266,7 +280,8 @@ class AsyncScheduler:
                 raise RuntimeError("scheduler is closed")
             self._writes.append(_PendingWrite(
                 reads=reads, file_ids=fids, future=fut,
-                t_enq=time.monotonic()))
+                t_enq=time.monotonic(),
+                seq=None if seq is None else int(seq)))
             self._outstanding += 1
             self._work.notify_all()
         return fut
@@ -384,7 +399,8 @@ class AsyncScheduler:
         """Apply a write burst (flusher thread, outside the lock)."""
         for w in writes:
             try:
-                version, seq = self._svc.apply_insert(w.reads, w.file_ids)
+                version, seq = self._svc.apply_insert(
+                    w.reads, w.file_ids, seq=w.seq)
                 w.future.set_result(InsertAck(
                     base_version=version, delta_seq=seq,
                     n_reads=int(w.reads.shape[0])))
@@ -413,17 +429,25 @@ class AsyncScheduler:
                             self._writes.popleft().future.set_exception(err)
                         return
                     now = time.monotonic()
+                    pick = self._pick(now)
                     # writes beat queries: an admitted insert becomes
                     # searchable before the next query batch dispatches —
                     # THE insert-to-searchable latency lever (live_bench
-                    # measures it). Gated by pause like query batches.
-                    if self._writes and not self._paused:
-                        while self._writes:
+                    # measures it). The preference is BOUNDED: bursts cap
+                    # at _WRITE_BURST and a deadline-overdue (or draining)
+                    # bucket flushes between consecutive bursts, so a
+                    # sustained insert stream cannot starve queries past
+                    # their deadlines. Gated by pause like query batches.
+                    overdue = pick is not None and pick[1] != FLUSH_FULL
+                    if self._writes and not self._paused and \
+                            not (overdue and self._wrote_last):
+                        while self._writes and len(writes) < _WRITE_BURST:
                             writes.append(self._writes.popleft())
                         self._inflight += 1      # pause() waits for a burst
+                        self._wrote_last = True
                         break
-                    pick = self._pick(now)
                     if pick is not None:
+                        self._wrote_last = False
                         break
                     self._work.wait(
                         timeout=None if self._paused

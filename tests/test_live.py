@@ -247,6 +247,83 @@ class TestWriteAdmission:
         with pytest.raises(RuntimeError, match="closed"):
             sched.submit_insert(np.asarray(reads[5:6]), np.asarray([30]))
 
+    def test_redelivered_seq_after_publish_is_noop(self, reads):
+        """A write the base already contains (explicit fleet seq <= the
+        published compaction watermark) must not re-enter the delta or
+        move the watermark — the laggard-replica alignment rule."""
+        live = lsm.LiveIndex(_build_base("bitsliced", reads))
+        (a, b), fids = _WRITES["bitsliced"][0]
+        assert live.insert(np.asarray(reads[a:b]), fids, seq=1) == 1
+        live.compact_now()
+        assert live.insert(np.asarray(reads[a:b]), fids, seq=1) == 1
+        assert live.delta_seq == 1
+        assert live.delta_batches() == 0         # nothing re-applied
+        (a, b), fids = _WRITES["bitsliced"][1]
+        assert live.insert(np.asarray(reads[a:b]), fids, seq=2) == 2
+        assert live.delta_seq == 2
+
+    def test_lagging_replica_stays_aligned_across_compaction(
+            self, reads, queries):
+        """A replica that publishes a compaction while fanned writes are
+        still queued must keep its watermark equal to the fleet journal
+        seq (the queued writes no-op on late delivery, never re-applying
+        under locally invented sequence numbers)."""
+        rt = LiveReplicaRouter(
+            _build_base("bitsliced", reads), ServiceConfig(max_batch=4),
+            RouterConfig(n_replicas=2, policy="round_robin"))
+        with rt:
+            laggard = rt._replicas[1]
+            laggard.scheduler.pause()        # fanned writes queue, unapplied
+            futs = []
+            for (a, b), fids in _WRITES["bitsliced"]:
+                futs.extend(rt.insert(np.asarray(reads[a:b]),
+                                      np.asarray(fids)))
+            for f in futs[0::2]:             # lead replica applied both
+                f.result(timeout=30)
+            assert rt.compact() == 1         # publish; laggard still lags
+            acks = [f.result(timeout=30) for f in futs]
+            assert [a.delta_seq for a in acks[0::2]] == [1, 2]
+            assert [a.delta_seq for a in acks[1::2]] == [1, 2]   # aligned
+            for rep in rt._replicas:
+                assert rep.service.live.delta_seq == rt.wal_seq == 2
+            oracle = _oracle("bitsliced", reads)
+            for q, res in zip(queries * 2, rt.search(queries * 2)):
+                want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+                np.testing.assert_array_equal(np.asarray(res.matches), want)
+                assert res.delta_seq == 2
+
+    def test_sustained_writes_do_not_starve_queries(self, reads):
+        """Write preference is bounded: with a deep write backlog and an
+        overdue query waiting, the query flushes between write bursts
+        instead of after the entire backlog drains."""
+        from repro.serving import scheduler as scheduler_mod
+
+        svc = _live_service("bitsliced", reads)
+        n_writes = 4 * scheduler_mod._WRITE_BURST
+        sched = AsyncScheduler(svc, SchedulerConfig(max_delay_ms=0.0))
+        try:
+            sched.pause()                    # build the backlog atomically
+            write_done = []
+            wfuts = []
+            for _ in range(n_writes):
+                f = sched.submit_insert(np.asarray(reads[5:6]),
+                                        np.asarray([30]))
+                f.add_done_callback(lambda _: write_done.append(1))
+                wfuts.append(f)
+            writes_done_at_query = []
+            qfut = sched.submit(np.asarray(reads[0]))
+            qfut.add_done_callback(
+                lambda _: writes_done_at_query.append(len(write_done)))
+            sched.resume()
+            qfut.result(timeout=60)
+            for f in wfuts:
+                f.result(timeout=60)
+            # strict priority would ack ALL writes before the query even
+            # dispatched; bounded bursts resolve it well before that
+            assert writes_done_at_query[0] < n_writes
+        finally:
+            sched.close()
+
     def test_router_fans_writes_to_every_replica(self, reads, queries):
         rt = LiveReplicaRouter(
             _build_base("bitsliced", reads), ServiceConfig(max_batch=4),
@@ -405,6 +482,70 @@ class TestCrashRecovery:
         assert reboot.insert(np.asarray(reads[a:b]), fids) == 2
         reboot.close()
 
+    def test_unsaved_compaction_keeps_acked_writes_durable(
+            self, tmp_path, reads, queries):
+        """Crash AFTER a compaction whose merged base never reached the
+        snapshot store: the journal must still hold every acked write, so
+        a reboot from the stale snapshot + journal equals the oracle."""
+        snap = store.save(_build_base("bitsliced", reads),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        live = lsm.LiveIndex.open(snap, journal_path=wal)
+        for (a, b), fids in _WRITES["bitsliced"]:
+            live.insert(np.asarray(reads[a:b]), fids)
+        live.compact_now()               # no save_dir: merged base RAM-only
+        assert live.delta_batches() == 0
+        live.close()                     # crash: merged base lost
+
+        reboot = lsm.LiveIndex.open(snap, journal_path=wal)
+        assert reboot.delta_seq == len(_WRITES["bitsliced"])  # WAL intact
+        oracle = _oracle("bitsliced", reads)
+        for q in queries:
+            np.testing.assert_array_equal(
+                np.asarray(reboot.msmt(jnp.asarray(q)[None])),
+                np.asarray(oracle.msmt(jnp.asarray(q)[None])))
+        reboot.close()
+
+    def test_saved_compaction_truncates_journal(self, tmp_path, reads,
+                                                queries):
+        """With the merged base written through the snapshot store, the
+        journal may (and does) drop the folded records — and the saved
+        snapshot + truncated journal still reboot to the oracle."""
+        snap = store.save(_build_base("bitsliced", reads),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        live = lsm.LiveIndex.open(snap, journal_path=wal)
+        for (a, b), fids in _WRITES["bitsliced"]:
+            live.insert(np.asarray(reads[a:b]), fids)
+        snap2 = str(tmp_path / "snap2")
+        live.compact_now(save_dir=snap2)
+        live.close()
+        assert lsm.DeltaJournal(wal).records() == []     # reclaimed
+        reboot = lsm.LiveIndex.open(snap2, journal_path=wal)
+        oracle = _oracle("bitsliced", reads)
+        for q in queries:
+            np.testing.assert_array_equal(
+                np.asarray(reboot.msmt(jnp.asarray(q)[None])),
+                np.asarray(oracle.msmt(jnp.asarray(q)[None])))
+        reboot.close()
+
+    def test_save_base_reclaims_journal(self, tmp_path, reads):
+        """A snapshot save AFTER an in-memory compaction reclaims exactly
+        the records the saved base contains; later writes stay journaled."""
+        snap = store.save(_build_base("bitsliced", reads),
+                          str(tmp_path / "snap"))
+        wal = str(tmp_path / "delta.wal")
+        live = lsm.LiveIndex.open(snap, journal_path=wal)
+        (a, b), fids = _WRITES["bitsliced"][0]
+        live.insert(np.asarray(reads[a:b]), fids)
+        live.compact_now()               # journal keeps seq 1 (unsaved)
+        assert [r.seq for r in lsm.DeltaJournal(wal).records()] == [1]
+        (a, b), fids = _WRITES["bitsliced"][1]
+        live.insert(np.asarray(reads[a:b]), fids)        # seq 2, uncompacted
+        live.save_base(str(tmp_path / "snap2"))          # base holds seq 1
+        assert [r.seq for r in lsm.DeltaJournal(wal).records()] == [2]
+        live.close()
+
     def test_service_level_reboot(self, tmp_path, reads, queries):
         snap = store.save(_build_base("bitsliced", reads),
                           str(tmp_path / "snap"))
@@ -467,6 +608,24 @@ class TestDeltaJournal:
             fh.seek(size - 10)
             fh.write(bytes([byte[0] ^ 0xFF]))
         assert [r.seq for r in lsm.DeltaJournal(path).records()] == [1]
+
+    def test_mid_file_corruption_rejected(self, tmp_path, reads):
+        """A flipped byte in the MIDDLE of the journal (valid acked
+        records after it) is not a torn tail: opening must raise instead
+        of silently truncating the acked writes that follow."""
+        path = str(tmp_path / "j.wal")
+        j = lsm.DeltaJournal(path)
+        j.append(1, np.asarray(reads[0:1]), None)
+        end_of_rec1 = os.path.getsize(path)
+        j.append(2, np.asarray(reads[1:2]), None)
+        j.close()
+        with open(path, "r+b") as fh:    # flip a payload byte of record 1
+            fh.seek(end_of_rec1 - 10)
+            byte = fh.read(1)
+            fh.seek(end_of_rec1 - 10)
+            fh.write(bytes([byte[0] ^ 0xFF]))
+        with pytest.raises(lsm.JournalError, match="corrupt"):
+            lsm.DeltaJournal(path)
 
     def test_foreign_file_rejected(self, tmp_path):
         path = str(tmp_path / "not-a-journal")
