@@ -15,12 +15,35 @@ Metrics reported per paper experiment:
 
 from __future__ import annotations
 
+import os
+import platform
 import time
 
 import jax
 import numpy as np
 
 from repro.core import cache_model
+
+
+def bench_metadata() -> dict:
+    """Host/build provenance stamped into every ``BENCH_*.json``.
+
+    Scaling numbers are meaningless without the hardware they ran on —
+    a 2-worker fabric on a 1-core CI box CANNOT beat one interpreter,
+    and the record has to say so. First slice of the cross-arch harness
+    (ROADMAP: same benches, many boxes, keyed by this metadata).
+    """
+    return {
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.device_count(),
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
 
 
 def timeit(fn, *args, repeats: int = 7, warmup: int = 2) -> float:

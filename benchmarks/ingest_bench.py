@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timeit, timeit_ms
+from benchmarks.common import bench_metadata, timeit, timeit_ms
 from repro.core import bloom, idl
 from repro.data import genome
 from repro.index import BitSlicedIndex, PackedBloomIndex, ingest, registry
@@ -195,6 +195,7 @@ def main() -> None:
         return
 
     res = run(m=1 << 26, n_reads=64, iters=9, archive_files=32)
+    res["host"] = bench_metadata()
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_ingest.json"
     out_path.write_text(json.dumps(res, indent=2) + "\n")
     print(json.dumps(res, indent=2))

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timeit_ms
+from benchmarks.common import bench_metadata, timeit_ms
 from repro.core import bloom, idl
 from repro.index import PackedBloomIndex, query, registry
 
@@ -129,6 +129,7 @@ def main() -> None:
         return
 
     res = run(m=1 << 26, n_reads=64, iters=25)
+    res["host"] = bench_metadata()
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_query.json"
     out_path.write_text(json.dumps(res, indent=2) + "\n")
     print(json.dumps(res, indent=2))

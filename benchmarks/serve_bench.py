@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timeit
+from benchmarks.common import bench_metadata, timeit
 from repro.core import idl
 from repro.data import genome
 from repro.index import BitSlicedIndex, ingest
@@ -131,6 +131,7 @@ def main() -> None:
                      backend=backend)
         for backend in ("jnp", "idl_probe")
     }
+    res["host"] = bench_metadata()
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
     out_path.write_text(json.dumps(res, indent=2) + "\n")
     print(json.dumps(res, indent=2))

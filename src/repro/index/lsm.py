@@ -462,7 +462,7 @@ class LiveIndex:
             else np.asarray(file_ids, dtype=np.int32)))
 
     def insert(self, reads, file_ids=None, *, seq: Optional[int] = None,
-               donate: bool = False, **kw) -> int:
+               donate: bool = True, **kw) -> int:
         """Journal, then absorb one read batch into the delta.
 
         Write-ahead order: the journal append (flush + fsync) happens
@@ -475,11 +475,15 @@ class LiveIndex:
         watermark — a lagging replica re-delivering across a publish) is
         an idempotent no-op. ``kw`` passes through to the shared ingest
         layer (``backend`` in {"jnp", "idl_insert", "sharded"}, ...).
-        ``donate`` defaults OFF here (unlike ``state.insert``): a
-        compaction plan may hold the pre-insert delta, and on donating
-        backends its buffers must stay live until publish — the delta is
-        small by design, so the copy is cheap. Bulk pre-serving loads can
-        pass ``donate=True``. Returns the batch's journal sequence number.
+        ``donate`` defaults ON, matching ``state.insert``: the single-
+        writer discipline (all writes + query dispatch on one flusher
+        thread) means nothing else holds the pre-insert delta, and
+        :meth:`plan_compaction` copies the delta it freezes — so the
+        scatter updates the delta in place instead of copying every word
+        matrix per batch (that copy dominated insert-to-searchable
+        latency). Pass ``donate=False`` only when an external reference
+        to the current delta object must stay live across this call.
+        Returns the batch's journal sequence number.
         """
         reads = np.asarray(reads, dtype=np.uint8)
         if reads.ndim == 1:
@@ -520,10 +524,20 @@ class LiveIndex:
 
     # -- compaction ---------------------------------------------------------
     def plan_compaction(self) -> CompactionPlan:
-        """Freeze the merge inputs: everything up to the current seq."""
+        """Freeze the merge inputs: everything up to the current seq.
+
+        The delta words are COPIED under the lock: the write path donates
+        the delta scatter (:meth:`insert`), so after the next insert the
+        plan-time delta buffers are dead — the plan must own its bytes.
+        One copy per compaction instead of one per insert is the whole
+        point of the donation flip.
+        """
         with self._lock:
+            delta = state_mod.IndexState(
+                words=tuple(jnp.array(w) for w in self._delta.words),
+                meta=self._delta.meta)
             return CompactionPlan(
-                base=self._base, delta=self._delta,
+                base=self._base, delta=delta,
                 upto_seq=self._delta_seq, base_version=self._base_version,
                 tail=tuple(self._tail))
 

@@ -18,8 +18,22 @@ all four engines × schemes). Design points:
   (foreign directory, future version) is rejected with a clear
   :class:`SnapshotError` instead of garbage answers;
 * every array records shape, dtype and a CRC-32: truncated or bit-rotted
-  words files fail loudly (``verify=False`` skips the checksum pass for
-  mmap-lazy startup; shape/dtype are always checked).
+  words files fail loudly. ``verify`` picks WHEN the checksum pass runs:
+  ``"eager"`` (default — every byte read before ``load`` returns),
+  ``"lazy"`` (a background thread checksums the files while the caller
+  already serves; :func:`check_verified` surfaces a failure), or
+  ``"off"``. Manifest shape/dtype specs are always checked — they cost
+  one ``.npy`` header read, not a data pass — so a truncated file still
+  fails at open time even with verification off.
+
+Cold-start cost is the reason the knobs exist: a process fleet booting K
+workers from ONE on-disk snapshot (:mod:`repro.serving.fabric`) wants
+each worker's open to be O(manifest), not O(index bytes). ``mmap=True``
++ ``verify="lazy"`` reads the data exactly once (the page cache shares
+that single read across all K workers); ``device=False`` additionally
+keeps the word matrices as memory-mapped numpy leaves, deferring even
+the page-in until first use (the first computation converts — and pays
+the upload — once).
 
 ``load`` returns an :class:`IndexState`; ``load_engine`` rebuilds the
 engine view in one call. Serving startup
@@ -32,8 +46,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import zlib
-from typing import Union
+from typing import Dict, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -161,16 +176,108 @@ def _read_manifest(directory: str) -> dict:
     return manifest
 
 
+VERIFY_MODES = ("eager", "lazy", "off")
+
+
+class _LazyVerify:
+    """Handle for one background checksum pass over a snapshot."""
+
+    def __init__(self, directory: str, specs: list):
+        self.directory = directory
+        self.error: Optional[SnapshotError] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(specs,), daemon=True,
+            name=f"idl-snapshot-verify")
+        self._thread.start()
+
+    def _run(self, specs: list) -> None:
+        try:
+            for spec in specs:
+                path = os.path.join(self.directory, spec["file"])
+                arr = np.load(path, mmap_mode="r")
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != spec["crc32"]:
+                    raise SnapshotError(
+                        f"array {spec['file']!r} failed its background "
+                        f"checksum (crc32 {crc} != manifest "
+                        f"{spec['crc32']}) — snapshot is corrupt")
+        except SnapshotError as e:
+            self.error = e
+        except Exception as e:  # noqa: BLE001 - any read failure is corrupt
+            self.error = SnapshotError(
+                f"background verify of {self.directory!r} failed: {e!r}")
+
+    def check(self, *, wait: bool = True) -> bool:
+        if wait:
+            self._thread.join()
+        elif self._thread.is_alive():
+            return False
+        if self.error is not None:
+            raise self.error
+        return True
+
+
+_lazy_verifies: Dict[str, _LazyVerify] = {}
+_lazy_lock = threading.Lock()
+
+
+def check_verified(directory: str, *, wait: bool = True) -> bool:
+    """Outcome of a ``verify="lazy"`` load's background checksum pass.
+
+    Returns True once the pass finished clean (or no lazy load of
+    ``directory`` is registered — nothing to distrust); False while it is
+    still running and ``wait=False``. Raises :class:`SnapshotError` if
+    the snapshot failed its checksums — the loud failure a lazily booted
+    worker must surface instead of serving bit-rotted words forever.
+    """
+    with _lazy_lock:
+        handle = _lazy_verifies.get(os.path.abspath(directory))
+    if handle is None:
+        return True
+    return handle.check(wait=wait)
+
+
+def read_meta(directory: str) -> state_mod.StateMeta:
+    """Read just the snapshot's :class:`StateMeta` — O(manifest), no array
+    bytes touched. The fabric gateway uses this to learn kmer size and
+    bucket geometry without ever holding the index itself."""
+    return meta_from_json(_read_manifest(directory)["meta"])
+
+
+def _normalize_verify(verify) -> str:
+    if verify is True:
+        return "eager"
+    if verify is False:
+        return "off"
+    if verify not in VERIFY_MODES:
+        raise ValueError(
+            f"verify must be one of {VERIFY_MODES} (or a legacy bool), "
+            f"got {verify!r}")
+    return verify
+
+
 def load(directory: str, *, mmap: bool = True,
-         verify: bool = True) -> state_mod.IndexState:
+         verify: Union[str, bool] = "eager",
+         device: bool = True) -> state_mod.IndexState:
     """Load a snapshot back into an :class:`IndexState`.
 
     ``mmap=True`` opens the word files memory-mapped, so bytes page in as
-    the device upload consumes them. ``verify=True`` additionally checks
-    each array's CRC-32 against the manifest (reads every byte — disable
-    for lazy startup of huge, trusted snapshots). Shape and dtype are
-    always validated. Raises :class:`SnapshotError` on any mismatch.
+    the device upload consumes them. ``verify`` schedules the CRC-32
+    checksum pass: ``"eager"`` checks every array before returning (reads
+    all bytes — the default, and what a cold trust boundary wants),
+    ``"lazy"`` starts a background thread and returns immediately
+    (:func:`check_verified` reports/raises its outcome — the fabric
+    worker boot path), ``"off"`` skips it. Legacy ``True``/``False`` map
+    to eager/off. Manifest shape/dtype specs are ALWAYS validated — one
+    header read per file, so a truncated or reshaped array still fails
+    loudly at open time in every mode. ``device=False`` keeps the word
+    matrices as memory-mapped numpy leaves instead of uploading them:
+    the open is O(manifest) and the first computation over the state
+    pays the page-in + conversion (use for metadata tooling or when the
+    caller controls materialization). Raises :class:`SnapshotError` on
+    any mismatch.
     """
+    verify = _normalize_verify(verify)
     manifest = _read_manifest(directory)
     meta = meta_from_json(manifest["meta"])
     specs = manifest.get("arrays", [])
@@ -197,14 +304,18 @@ def load(directory: str, *, mmap: bool = True,
             raise SnapshotError(
                 f"array {spec['file']!r} is {arr.dtype}{arr.shape}, "
                 f"manifest says {spec['dtype']}{tuple(spec['shape'])}")
-        if verify:
+        if verify == "eager":
             crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
             if crc != spec["crc32"]:
                 raise SnapshotError(
                     f"array {spec['file']!r} failed its checksum "
                     f"(crc32 {crc} != manifest {spec['crc32']}) — "
                     f"snapshot is corrupt")
-        words.append(jnp.asarray(arr))
+        words.append(jnp.asarray(arr) if device else arr)
+    if verify == "lazy":
+        with _lazy_lock:
+            _lazy_verifies[os.path.abspath(directory)] = _LazyVerify(
+                directory, list(specs))
     return state_mod.IndexState(words=tuple(words), meta=meta)
 
 

@@ -2,12 +2,15 @@
 
 Builds a gene-search index over a synthetic archive and serves batched MSMT
 queries through the v2 engine + service path — the runnable counterpart of
-the serve cell the dry-run lowers.
+the serve cell the dry-run lowers. ``--procs N`` serves the same traffic
+through a :class:`ProcessFabric` instead: the index is snapshotted once
+and N worker processes mmap it behind one gateway.
 """
 
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -24,6 +27,9 @@ def main() -> None:
     ap.add_argument("--files", type=int, default=32)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--procs", type=int, default=0, metavar="N",
+                    help="serve through a ProcessFabric of N mmap-booted "
+                         "worker processes instead of in-process")
     args = ap.parse_args()
 
     spec = configs.get(args.arch)
@@ -44,8 +50,20 @@ def main() -> None:
     print(f"index: {args.files} files, "
           f"{eng.state.nbytes / 1e6:.1f} MB bit-sliced IndexState")
 
-    svc = GeneSearchService(
-        eng, ServiceConfig(theta=cfg.theta, max_batch=args.batch))
+    svc_cfg = ServiceConfig(theta=cfg.theta, max_batch=args.batch)
+    if args.procs:
+        from repro.index import store
+        from repro.serving import FabricConfig, ProcessFabric
+        tmp = tempfile.TemporaryDirectory(prefix="serve_fabric_")
+        snap = store.save(eng, f"{tmp.name}/snap")
+        fab = ProcessFabric(snap, FabricConfig(n_workers=args.procs,
+                                               service=svc_cfg))
+        print(f"fabric: {args.procs} worker processes, pids "
+              f"{sorted(fab.worker_pids().values())}")
+        search = fab.search
+    else:
+        svc = GeneSearchService(eng, svc_cfg)
+        search = svc.search
     rng = np.random.default_rng(0)
     lat = []
     correct = total = 0
@@ -54,7 +72,7 @@ def main() -> None:
         reads = [np.asarray(archive[int(f)].reads(cfg.read_len, 1)[0])
                  for f in fids]
         t0 = time.perf_counter()
-        results = svc.search(reads)
+        results = search(reads)
         lat.append(time.perf_counter() - t0)
         for fid, res in zip(fids, results):
             correct += int(int(fid) in res.file_ids)
@@ -62,6 +80,9 @@ def main() -> None:
     print(f"recall {correct}/{total}; "
           f"p50 latency {1e3 * float(np.median(lat)):.1f} ms "
           f"(batch={args.batch})")
+    if args.procs:
+        fab.close()
+        tmp.cleanup()
 
 
 if __name__ == "__main__":

@@ -15,16 +15,18 @@ config + plan helpers; its removed v1 bodies are call-time ImportError
 stubs.
 """
 
-from repro.serving import autoscale, genesearch, live, router, scheduler, \
-    service
+from repro.serving import autoscale, fabric, genesearch, ipc, live, router, \
+    scheduler, service
 from repro.serving.autoscale import (
     AdmissionPolicy,
     AutoscaleConfig,
     ReplicaAutoscaler,
 )
+from repro.serving.fabric import FabricConfig, FabricError, ProcessFabric, \
+    WorkerLost
 from repro.serving.live import Compactor, LiveGeneSearchService, \
     LiveReplicaRouter
-from repro.serving.router import ReplicaRouter, RouterConfig
+from repro.serving.router import ReplicaRouter, RouterConfig, RoutingPolicy
 from repro.serving.scheduler import AsyncScheduler, ClusterStats, InsertAck, \
     SchedulerConfig
 from repro.serving.service import (
@@ -42,19 +44,26 @@ __all__ = [
     "BatchStats",
     "ClusterStats",
     "Compactor",
+    "FabricConfig",
+    "FabricError",
     "GeneSearchService",
     "InsertAck",
     "LiveGeneSearchService",
     "LiveReplicaRouter",
+    "ProcessFabric",
     "ReplicaAutoscaler",
     "ReplicaRouter",
     "RouterConfig",
+    "RoutingPolicy",
     "SchedulerConfig",
     "SearchRequest",
     "SearchResult",
     "ServiceConfig",
+    "WorkerLost",
     "autoscale",
+    "fabric",
     "genesearch",
+    "ipc",
     "live",
     "router",
     "scheduler",

@@ -56,9 +56,50 @@ from repro.serving.autoscale import (
 from repro.serving.scheduler import AsyncScheduler, ClusterStats, \
     SchedulerConfig
 
-__all__ = ["RouterConfig", "ReplicaRouter", "POLICIES"]
+__all__ = ["RouterConfig", "ReplicaRouter", "RoutingPolicy", "POLICIES"]
 
 POLICIES = ("round_robin", "least_outstanding", "bucket_affinity")
+
+
+class RoutingPolicy:
+    """The routing decision itself, factored out of the router so the
+    in-process replica fleet and the cross-process fabric gateway
+    (:mod:`repro.serving.fabric`) spread load with ONE policy core.
+
+    ``pick(members, bucket, load)`` chooses among the ordered serving
+    members (anything with a stable integer ``.id``); ``load`` maps a
+    member to its outstanding-work figure (used by ``least_outstanding``).
+    Policy state (the round-robin cursor, the bucket->member affinity
+    map) lives here. Not thread-safe on its own — callers hold their
+    fleet lock across the pick, exactly as the router always did.
+    """
+
+    def __init__(self, policy: str):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown routing policy {policy!r} "
+                f"(want one of {POLICIES})")
+        self.policy = policy
+        self._rr = itertools.count()
+        self._affinity: Dict[int, int] = {}     # bucket -> member id
+
+    def pick(self, members, bucket: int, load):
+        if not members:
+            raise RuntimeError("no serving members to route to")
+        if self.policy == "round_robin":
+            return members[next(self._rr) % len(members)]
+        if self.policy == "least_outstanding":
+            return min(members, key=load)
+        # bucket_affinity: sticky bucket -> member map, assigned round-
+        # robin on first sight so load still spreads; remapped only if
+        # the pinned member was decommissioned (or crashed, in the fabric)
+        by_id = {m.id: m for m in members}
+        mid = self._affinity.get(bucket)
+        if mid is None or mid not in by_id:
+            member = members[next(self._rr) % len(members)]
+            self._affinity[bucket] = member.id
+            return member
+        return by_id[mid]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,8 +152,7 @@ class ReplicaRouter:
         self._admin_lock = threading.Lock()
         self._replicas: List[_Replica] = []
         self._next_replica_id = 0
-        self._rr = itertools.count()
-        self._affinity: Dict[int, int] = {}     # bucket -> replica id
+        self._policy = RoutingPolicy(self.config.policy)
         for _ in range(self.config.n_replicas):
             self._add_replica_locked()
 
@@ -196,21 +236,8 @@ class ReplicaRouter:
         serving = [r for r in self._replicas if r.serving]
         if not serving:
             raise RuntimeError("router has no serving replicas")
-        policy = self.config.policy
-        if policy == "round_robin":
-            return serving[next(self._rr) % len(serving)]
-        if policy == "least_outstanding":
-            return min(serving, key=lambda r: r.scheduler.outstanding)
-        # bucket_affinity: sticky bucket -> replica map, assigned round-
-        # robin on first sight so load still spreads; remapped only if the
-        # pinned replica was decommissioned
-        by_id = {r.id: r for r in serving}
-        rid = self._affinity.get(bucket)
-        if rid is None or rid not in by_id:
-            rep = serving[next(self._rr) % len(serving)]
-            self._affinity[bucket] = rep.id
-            return rep
-        return by_id[rid]
+        return self._policy.pick(serving, bucket,
+                                 lambda r: r.scheduler.outstanding)
 
     def submit(self, request: Union[service_mod.SearchRequest, np.ndarray]
                ) -> Future:

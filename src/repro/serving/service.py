@@ -55,6 +55,16 @@ def next_pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def bucket_for(n_kmers: int, min_bucket_kmers: int = 32) -> int:
+    """The pow2 kmer bucket a request with ``n_kmers`` kmers lands in.
+
+    Module-level so admission-owning layers WITHOUT an index — the
+    process-fabric gateway routes on ``StateMeta`` alone — bucket with
+    the exact geometry the worker services compile for.
+    """
+    return max(next_pow2(n_kmers), min_bucket_kmers)
+
+
 # ---------------------------------------------------------------------------
 # Typed request/response boundary.
 # ---------------------------------------------------------------------------
@@ -85,6 +95,30 @@ class SearchResult:
     delta_seq: int = 0   # live-index write watermark that served it (0 =
     #                      static index / empty delta) — with `version` this
     #                      makes staleness observable per result
+
+
+def normalize_request(request: Union[SearchRequest, np.ndarray], k: int
+                      ) -> Tuple[SearchRequest, int]:
+    """Shared admission validation: ``(request, n_kmers)`` or raise.
+
+    The ONE place a read becomes a typed request — used by the in-process
+    service and the fabric gateway alike, so a malformed read is rejected
+    with the same message at either boundary.
+    """
+    if not isinstance(request, SearchRequest):
+        request = SearchRequest(read=np.asarray(request))
+    read = np.asarray(request.read, dtype=np.uint8)
+    if read.ndim != 1:
+        # a flattened (B, L) batch would silently fuse reads across
+        # their boundaries — one request is ONE read (batch via search)
+        raise ValueError(
+            f"submit takes one 1-D read, got shape {read.shape}; "
+            f"submit each read separately (or use search())")
+    n_kmers = read.shape[0] - k + 1
+    if n_kmers < 1:
+        raise ValueError(
+            f"read of length {read.shape[0]} has no {k}-mers")
+    return SearchRequest(read=read, request_id=request.request_id), n_kmers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,25 +252,12 @@ class GeneSearchService:
 
     # -- admission ----------------------------------------------------------
     def bucket_for(self, n_kmers: int) -> int:
-        return max(next_pow2(n_kmers), self.config.min_bucket_kmers)
+        return bucket_for(n_kmers, self.config.min_bucket_kmers)
 
     def _normalize(self, request: Union[SearchRequest, np.ndarray]
                    ) -> Tuple[SearchRequest, int]:
         """Shared admission validation: ``(request, n_kmers)`` or raise."""
-        if not isinstance(request, SearchRequest):
-            request = SearchRequest(read=np.asarray(request))
-        read = np.asarray(request.read, dtype=np.uint8)
-        if read.ndim != 1:
-            # a flattened (B, L) batch would silently fuse reads across
-            # their boundaries — one request is ONE read (batch via search)
-            raise ValueError(
-                f"submit takes one 1-D read, got shape {read.shape}; "
-                f"submit each read separately (or use search())")
-        n_kmers = read.shape[0] - self._k + 1
-        if n_kmers < 1:
-            raise ValueError(
-                f"read of length {read.shape[0]} has no {self._k}-mers")
-        return SearchRequest(read=read, request_id=request.request_id), n_kmers
+        return normalize_request(request, self._k)
 
     def submit(self, request: Union[SearchRequest, np.ndarray]) -> int:
         """Enqueue one read; returns its request id.

@@ -642,3 +642,44 @@ class TestDeltaJournal:
             fh.write(struct.pack("<4sI", b"IDLJ", 99))
         with pytest.raises(lsm.JournalError, match="version"):
             lsm.DeltaJournal(path)
+
+
+class TestDonatedWritePath:
+    """The live write path donates the delta scatter (the per-insert word
+    copy used to dominate insert-to-searchable latency); plan_compaction
+    copies the delta it freezes so the merge inputs survive later
+    donating inserts."""
+
+    def test_insert_donates_the_prior_delta(self, reads):
+        from repro.index import state as state_mod
+        live = lsm.LiveIndex(_build_base("bitsliced", reads))
+        stale = live.delta
+        (a, b), fids = _WRITES["bitsliced"][0]
+        live.insert(np.asarray(reads[a:b]), fids)
+        with pytest.raises(state_mod.StaleIndexError):
+            state_mod.query(stale, np.asarray(reads[:1]))
+
+    def test_donate_false_keeps_prior_delta_live(self, reads):
+        live = lsm.LiveIndex(_build_base("bitsliced", reads))
+        held = live.delta
+        (a, b), fids = _WRITES["bitsliced"][0]
+        live.insert(np.asarray(reads[a:b]), fids, donate=False)
+        np.asarray(held.words[0])                  # opt-out: still readable
+
+    def test_plan_survives_post_plan_donating_inserts(self, reads, queries):
+        """The regression the plan-time copy prevents: an insert after
+        plan_compaction donates the live delta; the frozen plan must own
+        its bytes or compact() reads freed buffers."""
+        live = lsm.LiveIndex(_build_base("bitsliced", reads))
+        (a, b), fids = _WRITES["bitsliced"][0]
+        live.insert(np.asarray(reads[a:b]), fids)
+        plan = live.plan_compaction()
+        (a, b), fids = _WRITES["bitsliced"][1]
+        live.insert(np.asarray(reads[a:b]), fids)  # donates the live delta
+        merged = lsm.LiveIndex.compact(plan)       # plan's copy still live
+        live.publish(merged, plan.upto_seq)
+        oracle = _oracle("bitsliced", reads)
+        for q in queries:
+            want = np.asarray(oracle.msmt(jnp.asarray(q)[None]))[0]
+            np.testing.assert_array_equal(
+                np.asarray(live.msmt(jnp.asarray(q)[None]))[0], want)

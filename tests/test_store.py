@@ -190,3 +190,78 @@ class TestRejection:
             self._rewrite(snap, m)
             with pytest.raises(SnapshotError, match="plain file name"):
                 store.load(snap)
+
+
+class TestVerifyModes:
+    """The eager/lazy/off verification contract the fabric boot path uses."""
+
+    @pytest.fixture
+    def snap(self, tmp_path, reads):
+        eng = _build("bitsliced", "idl", reads)
+        return store.save(eng, str(tmp_path / "snap"))
+
+    def _rot(self, snap):
+        path = os.path.join(snap, "words_0.npy")
+        raw = bytearray(open(path, "rb").read())
+        raw[-1] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+
+    def test_bool_verify_maps_to_modes(self, snap):
+        self._rot(snap)
+        with pytest.raises(SnapshotError, match="checksum"):
+            store.load(snap, verify=True)        # legacy True == "eager"
+        store.load(snap, verify=False)           # legacy False == "off"
+        store.load(snap, verify="off")
+
+    def test_unknown_mode_rejected(self, snap):
+        with pytest.raises(ValueError, match="verify must be one of"):
+            store.load(snap, verify="sometimes")
+
+    def test_lazy_load_of_clean_snapshot_verifies_in_background(self, snap):
+        state = store.load(snap, verify="lazy")
+        assert state.words[0].dtype == jnp.uint32
+        assert store.check_verified(snap, wait=True) is True
+
+    def test_lazy_load_of_corrupt_snapshot_fails_loudly(self, snap):
+        """Lazy boot returns immediately, but the background pass still
+        catches the rot: check_verified raises instead of letting a
+        worker serve bit-rotted words forever."""
+        self._rot(snap)
+        store.load(snap, verify="lazy")          # boot succeeds (by design)
+        with pytest.raises(SnapshotError, match="background checksum"):
+            store.check_verified(snap, wait=True)
+        # and the registry keeps raising on every later check
+        with pytest.raises(SnapshotError, match="background checksum"):
+            store.check_verified(snap, wait=False)
+
+    def test_check_verified_without_lazy_load_is_trivially_true(self, snap):
+        assert store.check_verified(snap) is True
+
+    def test_truncated_array_fails_at_open_in_every_mode(self, snap):
+        """Shape/dtype come from the .npy header vs the manifest; a short
+        file can't even mmap to its declared shape — loud at open time
+        with verification off entirely."""
+        path = os.path.join(snap, "words_0.npy")
+        raw = open(path, "rb").read()
+        open(path, "wb").write(raw[: len(raw) // 2])
+        for mode in ("eager", "lazy", "off"):
+            with pytest.raises(SnapshotError):
+                store.load(snap, verify=mode)
+
+    def test_device_false_keeps_memmap_leaves(self, snap, reads):
+        """O(manifest) open: leaves stay memory-mapped numpy arrays; the
+        first computation converts and answers bit-identically."""
+        lazy = store.load(snap, verify="off", device=False)
+        assert isinstance(lazy.words[0], np.ndarray)
+        assert not isinstance(lazy.words[0], jnp.ndarray)
+        eager = store.load(snap)
+        np.testing.assert_array_equal(
+            np.asarray(state_mod.to_engine(lazy).msmt(reads)),
+            np.asarray(state_mod.to_engine(eager).msmt(reads)))
+
+    def test_read_meta_is_data_free(self, snap):
+        meta = store.read_meta(snap)
+        assert meta.engine == "bitsliced"
+        assert state_mod.kmer_size(meta) == 31
+        os.remove(os.path.join(snap, "words_0.npy"))   # no array bytes read
+        assert store.read_meta(snap).engine == "bitsliced"
