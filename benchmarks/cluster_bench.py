@@ -39,9 +39,12 @@ router answers bit-identically to a direct single-service run across
 stream served by :class:`ProcessFabric` fleets of 1..N mmap-booted worker
 processes behind one gateway, recorded as a per-worker-count scaling
 curve against the in-process router baseline, with gateway-vs-in-process
-parity and a zero-drop rolling restart asserted in-bench. Writes
-``BENCH_fabric.json`` (in ``--smoke`` too — CI uploads it; the smoke
-record is marked ``"smoke": true``).
+parity and a zero-drop rolling restart asserted in-bench. A
+``kmer_cache`` section re-serves a deep-coverage overlapping stream with
+per-worker membership caches off vs on (parity asserted for both fleets,
+gateway-merged hit rate > 0 asserted). Writes ``BENCH_fabric.json`` (in
+``--smoke`` too — CI uploads it; the smoke record is marked
+``"smoke": true``).
 
     PYTHONPATH=src python -m benchmarks.cluster_bench [--smoke]
     PYTHONPATH=src python -m benchmarks.cluster_bench --procs 2 [--smoke]
@@ -52,6 +55,7 @@ Writes ``BENCH_cluster.json`` (full mode) next to the repo root.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import shutil
@@ -62,7 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_metadata, timeit
+from benchmarks.common import bench_metadata, overlapping_stream, timeit
 from repro.core import idl
 from repro.data import genome
 from repro.index import BitSlicedIndex, CobsIndex, ingest, store
@@ -70,6 +74,7 @@ from repro.serving import (
     AsyncScheduler,
     FabricConfig,
     GeneSearchService,
+    KmerCacheConfig,
     ProcessFabric,
     ReplicaRouter,
     RouterConfig,
@@ -416,6 +421,50 @@ def run_fabric(max_procs: int, m: int, n_files: int, n_requests: int,
                     swap = _assert_fabric_swap(fab, stream, ref)
             finally:
                 fab.close()
+
+        # per-worker membership caches over a deep-coverage overlapping
+        # stream: cache-off vs cache-on fleets at max_procs, parity vs
+        # the in-process reference asserted on both, gateway-merged hit
+        # rate recorded (smoke included — CI gates on these asserts)
+        overlap = overlapping_stream(pool, n_requests, seed=11,
+                                     read_len=230, region_len=600)
+        ref_overlap = GeneSearchService(eng, svc_cfg).search(overlap)
+        cache_rec: dict = {}
+        for label, cfg in (
+                ("cache_off", svc_cfg),
+                ("cache_on", dataclasses.replace(
+                    svc_cfg, kmer_cache=KmerCacheConfig(capacity=1 << 17)))):
+            fab = ProcessFabric(snap, FabricConfig(
+                n_workers=max_procs, service=cfg, scheduler=sched_cfg))
+            try:
+                # warmup pass doubles as the parity gate
+                futures = [fab.submit(q) for q in overlap]
+                for got, want in zip(
+                        [f.result(timeout=300) for f in futures],
+                        ref_overlap):
+                    np.testing.assert_array_equal(
+                        np.asarray(got.matches), np.asarray(want.matches))
+                secs = timeit(lambda: _fabric_closed_loop(fab, overlap),
+                              repeats=iters, warmup=1)
+                cache_rec[label + "_rps"] = round(n_requests / secs, 1)
+                if label == "cache_on":
+                    cs = fab.cache_stats()
+                    assert cs is not None and cs["hits"] > 0, cs
+                    cache_rec["hit_rate"] = round(cs["hit_rate"], 4)
+                    cache_rec["cache"] = cs
+                else:
+                    assert fab.cache_stats() is None
+            finally:
+                fab.close()
+        cache_rec["speedup"] = round(
+            cache_rec["cache_on_rps"] / cache_rec["cache_off_rps"], 2)
+        cache_rec["note"] = (
+            "overlapping read_len=230 windows into 4 concatenated "
+            "600bp regions at "
+            f"{max_procs} workers; per-worker caches ride the pickled "
+            "ServiceConfig; parity vs the in-process service asserted "
+            "for BOTH fleets; hit_rate is the gateway-merged lifetime "
+            "counter, cold misses included")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
@@ -435,6 +484,7 @@ def run_fabric(max_procs: int, m: int, n_files: int, n_requests: int,
             n: round(c["throughput_rps"] / rps_1, 2)
             for n, c in curve.items()},
         "rolling_swap": swap,
+        "kmer_cache": cache_rec,
         "parity": ("gateway == in-process service, bit-identical, at "
                    "every worker count (asserted in-bench)"),
         "notes": [

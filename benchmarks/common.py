@@ -46,6 +46,41 @@ def bench_metadata() -> dict:
     }
 
 
+def overlapping_stream(pool, n_requests: int, seed: int,
+                       n_regions: int = 4, read_len: int = 120,
+                       region_len: int | None = None):
+    """Deep-coverage shotgun stream: every request is a random window
+    into one of ``n_regions`` source regions, so consecutive requests
+    re-probe mostly the same kmers — the regime intra-batch dedup and
+    the serving membership cache are built for. Shared by the serving
+    benches so their cache-on/cache-off numbers describe one workload.
+
+    Regions default to single pool reads; pass ``region_len`` to build
+    longer loci by concatenating pool reads, so full-length
+    (``read_len``-sized) requests still overlap each other instead of
+    all being the same read.
+    """
+    rng = np.random.default_rng(seed)
+    if region_len is None:
+        regions = [np.asarray(pool[i % len(pool)]) for i in range(n_regions)]
+    else:
+        regions = []
+        for i in range(n_regions):
+            parts, j, total = [], i, 0
+            while total < region_len:
+                part = np.asarray(pool[j % len(pool)])
+                parts.append(part)
+                total += part.shape[0]
+                j += n_regions
+            regions.append(np.concatenate(parts)[:region_len])
+    out = []
+    for _ in range(n_requests):
+        g = regions[int(rng.integers(0, n_regions))]
+        s = int(rng.integers(0, max(1, g.shape[0] - read_len + 1)))
+        out.append(g[s:s + read_len])
+    return out
+
+
 def timeit(fn, *args, repeats: int = 7, warmup: int = 2) -> float:
     """Median wall seconds of fn(*args) after jit warmup.
 

@@ -12,9 +12,14 @@ to full-length reads, three pow2 kmer buckets) and reports:
   proof: each (bucket, backend) pair must show exactly ONE compiled
   executable after the whole ragged stream.
 
+A ``kmer_cache`` section re-times a deep-coverage **overlapping** stream
+with the versioned membership cache on vs off (parity asserted in-bench,
+lifetime hit rate recorded honestly — cold misses included).
+
 ``--smoke`` (CI) runs a small config and asserts the service is
 bit-identical to direct engine ``msmt`` for both the ``jnp`` and
-``idl_probe`` backends, so serving can't silently drift from the engines.
+``idl_probe`` backends — and with the membership cache on vs off (with
+hit_rate > 0) — so serving can't silently drift from the engines.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 
@@ -31,11 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_metadata, timeit
+from benchmarks.common import bench_metadata, overlapping_stream, timeit
 from repro.core import idl
 from repro.data import genome
 from repro.index import BitSlicedIndex, ingest
-from repro.serving import GeneSearchService, ServiceConfig
+from repro.serving import GeneSearchService, KmerCacheConfig, ServiceConfig
 
 
 def _build_index(m: int, n_files: int, genome_len: int) -> BitSlicedIndex:
@@ -95,6 +100,69 @@ def run(m: int, n_files: int, n_requests: int, iters: int,
     }
 
 
+def run_cache(m: int, n_files: int, n_requests: int, iters: int) -> dict:
+    """Membership cache on vs off over a deep-coverage overlapping stream.
+
+    Parity is asserted in-bench before anything is timed (cache on ==
+    cache off, bit for bit), and the reported hit rate is the cache's
+    lifetime counter — cold-start misses included, nothing reset
+    between passes.
+    """
+    eng = _build_index(m, n_files, genome_len=3_000)
+    archive = genome.synth_archive(n_files=n_files, genome_len=3_000, seed=42)
+    pool = [f.reads(230, 4)[i % 4] for i, f in enumerate(archive)]
+    stream = overlapping_stream(pool, n_requests, seed=11,
+                                read_len=230, region_len=600)
+
+    plain = GeneSearchService(eng, ServiceConfig(max_batch=32))
+    cached = GeneSearchService(
+        eng, ServiceConfig(max_batch=32,
+                           kmer_cache=KmerCacheConfig(capacity=1 << 17)))
+    for a, b in zip(plain.search(stream), cached.search(stream)):
+        np.testing.assert_array_equal(np.asarray(a.matches),
+                                      np.asarray(b.matches))
+
+    def serve(svc):
+        def f():
+            svc.search(stream)
+            return svc.state.words[0]
+        return f
+
+    off_s = timeit(serve(plain), repeats=iters, warmup=1)
+    off_p50 = float(np.percentile(
+        np.asarray(plain.request_latencies_ms()[-n_requests:]), 50))
+    on_s = timeit(serve(cached), repeats=iters, warmup=1)
+    on_p50 = float(np.percentile(
+        np.asarray(cached.request_latencies_ms()[-n_requests:]), 50))
+    st = cached.cache_stats()
+    assert st["hits"] > 0, st
+    assert all(c == 1 for c in cached.compile_counts().values())
+    return {
+        "config": {
+            "engine": "bitsliced", "scheme": "idl", "m": m,
+            "n_files": n_files, "n_requests": n_requests,
+            "stream": ("overlapping read_len=230 windows into 4 "
+                       "concatenated 600bp regions"),
+            "max_batch": 32, "cache_capacity": 1 << 17,
+            "device": jax.default_backend(),
+        },
+        "throughput_rps": {
+            "cache_off": round(n_requests / off_s, 1),
+            "cache_on": round(n_requests / on_s, 1),
+        },
+        "latency_p50_ms": {
+            "cache_off": round(off_p50, 3),
+            "cache_on": round(on_p50, 3),
+        },
+        "speedup": round(off_s / on_s, 2),
+        "hit_rate": round(st["hit_rate"], 4),
+        "cache": st,
+        "note": ("parity asserted in-bench before timing (cache on == "
+                 "cache off, bit for bit); hit_rate is the cache's "
+                 "lifetime counter — cold-start misses included"),
+    }
+
+
 def _assert_parity(m: int) -> None:
     """Service answers == direct engine msmt, jnp and idl_probe backends."""
     eng = _build_index(m, n_files=16, genome_len=1_200)
@@ -112,6 +180,27 @@ def _assert_parity(m: int) -> None:
           "one compile per bucket")
 
 
+def _assert_cache_parity(m: int) -> None:
+    """Cache on == cache off on an overlapping stream, hits observed."""
+    eng = _build_index(m, n_files=16, genome_len=1_200)
+    archive = genome.synth_archive(n_files=16, genome_len=1_200, seed=42)
+    pool = [f.reads(230, 2)[0] for f in archive]
+    stream = overlapping_stream(pool, 24, seed=11)
+    plain = GeneSearchService(eng, ServiceConfig(max_batch=4))
+    cached = GeneSearchService(
+        eng, ServiceConfig(max_batch=4,
+                           kmer_cache=KmerCacheConfig(capacity=1 << 14)))
+    for _ in range(2):                 # pass 2 answers from cached rows
+        for a, b in zip(plain.search(stream), cached.search(stream)):
+            np.testing.assert_array_equal(np.asarray(a.matches),
+                                          np.asarray(b.matches))
+    st = cached.cache_stats()
+    assert st["hits"] > 0 and st["hit_rate"] > 0, st
+    assert all(c == 1 for c in cached.compile_counts().values())
+    print(f"cache parity: membership cache on == off (bit-identical); "
+          f"hit_rate={st['hit_rate']:.2f} > 0; one compile per bucket")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -120,17 +209,21 @@ def main() -> None:
 
     if args.smoke:
         _assert_parity(m=1 << 18)
+        _assert_cache_parity(m=1 << 18)
         res = run(m=1 << 18, n_files=16, n_requests=24, iters=2,
                   backend="jnp")
         print("smoke:", json.dumps(res["latency_ms"]))
         return
 
     _assert_parity(m=1 << 20)
+    _assert_cache_parity(m=1 << 20)
     res = {
         backend: run(m=1 << 21, n_files=64, n_requests=96, iters=3,
                      backend=backend)
         for backend in ("jnp", "idl_probe")
     }
+    res["kmer_cache"] = run_cache(m=1 << 21, n_files=256, n_requests=192,
+                                  iters=3)
     res["host"] = bench_metadata()
     out_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
     out_path.write_text(json.dumps(res, indent=2) + "\n")

@@ -256,7 +256,13 @@ class InsertPlan:
         )
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded like query.PLAN_CACHE_SIZE (same argument: plans are frozen
+# value objects, jitted executors key on plan hash/eq, so eviction never
+# costs a recompile — asserted in tests/test_query_dedup.py).
+PLAN_CACHE_SIZE = 512
+
+
+@functools.lru_cache(maxsize=PLAN_CACHE_SIZE)
 def plan_insert(
     cfg: idl_mod.IDLConfig,
     scheme: str,
@@ -303,9 +309,9 @@ def plan_insert(
     )
 
 
-def plan_cache_info():
-    """LRU stats of the plan cache (hits prove plans are built once)."""
-    return plan_insert.cache_info()
+def plan_cache_info() -> "query.PlanCacheInfo":
+    """Stats of the (bounded) insert-plan cache, incl. eviction count."""
+    return query._with_evictions(plan_insert.cache_info())
 
 
 def clear_plan_cache() -> None:
@@ -330,7 +336,9 @@ def _execute_jnp(matrix, reads, aux, *, plan: InsertPlan):
     return packed.scatter_or_matrix(mat, row, wc, bit).reshape(shape)
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded; eviction HERE drops a compiled closure (cold re-entry
+# recompiles) — 128 keeps realistic working sets hot (see query.py).
+@functools.lru_cache(maxsize=128)
 def _sharded_inserter(plan: InsertPlan, mesh: Mesh):
     """jit-compiled shard_map inserter for one (plan, mesh) pair.
 

@@ -39,13 +39,27 @@ matrix geometry, the run-coalescing block height — and is built once per
 
 All backends are bit-identical; ``tests/test_index_parity.py`` holds the
 parity matrix.
+
+**Probe dedup** (``execute(..., dedup=True)``): membership of a kmer is a
+pure function of ``(kmer, matrix)`` — the same kmer appearing twice in a
+batch probes the same rows and ANDs to the same value, so factoring the
+``(B, n_kmers)`` batch into its unique kmers, probing each once, and
+inverse-permuting the per-kmer values back is an *exact* rewrite of the
+naive path (scatter-OR/AND over duplicates is idempotent). The unique
+kmers are probed in locality-sorted order — sorted by their repetition-0
+hash location, so under IDL the dedup'd gather walks adjacent rows and is
+also the DMA-minimal one. Unique counts are padded to the next power of
+two, so the derived single-kmer plans (and their compiled executors) stay
+bounded: one per ``(U_pad, k)`` shape, at most ``log2(B·n_kmers)`` of
+them. ``tests/test_query_dedup.py`` holds the dedup == naive property
+matrix across engines × schemes × backends.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +87,49 @@ def batch_locations(
     """(B, η, n_kmers) uint32 locations — jitted view of the one rolling
     location body the insert path (:mod:`repro.index.packed`) also uses."""
     return packed.batch_locations(cfg, reads, scheme, lane32=lane32)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def read_kmers(reads: np.ndarray, k: int) -> np.ndarray:
+    """(B, read_len) uint8 reads -> (B·n_kmers, k) stride-1 kmer rows.
+
+    A zero-copy sliding-window view reshaped (one small copy) — the host
+    side of every dedup/cache path keys kmers by these byte rows.
+    """
+    arr = np.asarray(reads, dtype=np.uint8)
+    if arr.ndim == 1:
+        arr = arr[None]
+    kms = np.lib.stride_tricks.sliding_window_view(arr, k, axis=1)
+    return np.ascontiguousarray(kms.reshape(-1, k))
+
+
+def factor_unique_kmers(
+    reads, k: int
+) -> tuple[np.ndarray, np.ndarray, tuple[int, int]]:
+    """Factor a read batch into its distinct kmers.
+
+    Returns ``(uniq, inverse, (b, n_kmers))``: ``uniq`` is ``(U, k)``
+    uint8 (U = the distinct kmer count, lexicographic order) and
+    ``inverse`` maps each of the ``b·n_kmers`` batch kmers to its row in
+    ``uniq``. Membership of a kmer is a pure function of its bases, so
+    probing ``uniq`` and gathering back through ``inverse`` is exact.
+    Probe-side consumers pad ``uniq`` to a power of two themselves (so
+    derived plans compile O(log) times, not per batch).
+    """
+    arr = np.asarray(reads, dtype=np.uint8)
+    if arr.ndim == 1:
+        arr = arr[None]
+    b, read_len = arr.shape
+    n_k = read_len - k + 1
+    flat = read_kmers(arr, k)
+    # unique rows via a void byte view: ONE memcmp sort, no per-column pass
+    view = flat.view(np.dtype((np.void, k))).ravel()
+    _, first, inverse = np.unique(view, return_index=True,
+                                  return_inverse=True)
+    return flat[first], inverse.reshape(-1), (b, n_k)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +216,7 @@ class QueryPlan:
         reads: jax.Array,
         *,
         backend: str = "jnp",
+        dedup: bool = False,
         interpret: Optional[bool] = None,
         use_ref: bool = False,
         mesh: Optional[Mesh] = None,
@@ -168,9 +226,19 @@ class QueryPlan:
         ``bit_probe`` plans extract the probed bit first, so values are
         {0, 1} per word slot; row plans return full AND-ed word masks.
         ``matrix`` may be 1-D when ``W == 1`` (flat packed BF).
+
+        ``dedup=True`` factors the batch into unique kmers, probes each
+        once in locality-sorted order through the same backend, and
+        inverse-permutes the per-kmer values back — bit-identical to the
+        naive path (see module docstring) but with a probe stream sized
+        by the batch's *distinct* kmers, the win for overlapping reads.
         """
         if backend == "kernel":   # pre-PR2 spelling of the planned backend
             backend = "idl_probe"
+        if dedup:
+            return self._execute_dedup(
+                matrix, reads, backend=backend, interpret=interpret,
+                use_ref=use_ref, mesh=mesh)
         if backend == "jnp":
             return _execute_jnp(matrix, reads, plan=self)
         if backend == "idl_probe":
@@ -203,6 +271,41 @@ class QueryPlan:
         fn = _sharded_executor(self, mesh)
         return fn(matrix, reads)
 
+    def _execute_dedup(self, matrix, reads, *, backend, interpret,
+                       use_ref, mesh):
+        """Unique-kmer probe path (host-factored, backend-shared).
+
+        Each unique kmer is probed as a standalone length-k read through a
+        derived ``(U_pad, k)`` plan — the rolling location of a kmer is a
+        pure function of its own bases (per-kmer sliding-window MinHash),
+        so the standalone probe is bit-identical to the in-read one.
+        """
+        k = self.cfg.k
+        uniq, inverse, (b, n_k) = factor_unique_kmers(reads, k)
+        u_pad = _next_pow2(len(uniq))
+        if u_pad > len(uniq):   # pad rows repeat the last unique kmer, so
+            uniq = np.concatenate(  # plans compile O(log) times, not per batch
+                [uniq, np.broadcast_to(uniq[-1], (u_pad - len(uniq), k))])
+        kplan = plan_query(
+            self.cfg, self.scheme, (len(uniq), k), self.matrix_shape,
+            bit_probe=self.bit_probe, lane32=self.lane32,
+            rows_per_block=self.rows_per_block,
+            probes_per_run=self.probes_per_run)
+        ukmers = jnp.asarray(uniq)
+        # locality sort: order unique kmers by their repetition-0 hash
+        # location, so under IDL the dedup'd probe stream walks adjacent
+        # matrix rows (the DMA-minimal order). One extra hash pass over
+        # the unique set — cheap next to the gather it orders.
+        locs0 = np.asarray(kplan.locations(ukmers))[:, 0, 0]
+        order = np.argsort(locs0, kind="stable")
+        rank = np.empty_like(order)
+        rank[order] = np.arange(len(order))
+        vals = kplan.execute(
+            matrix, ukmers[jnp.asarray(order)], backend=backend,
+            interpret=interpret, use_ref=use_ref, mesh=mesh)  # (U_pad, 1, W)
+        per = jnp.take(vals[:, 0], jnp.asarray(rank[inverse]), axis=0)
+        return per.reshape(b, n_k, vals.shape[-1])
+
 
 def _pow2_block(n_rows: int, target: int) -> int:
     """Largest power of two <= target that divides n_rows (floor 1)."""
@@ -212,7 +315,16 @@ def _pow2_block(n_rows: int, target: int) -> int:
     return max(blk, 1)
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded: a long-lived server planning many geometries (every (bucket,
+# unique-count) pair of the dedup path derives a plan) must not grow this
+# without bound. Eviction is cheap by design — plans are frozen VALUE
+# objects, and every jitted executor keys on the plan's hash/eq, so a
+# rebuilt equal plan hits the same compiled executable (compile-once under
+# eviction pressure is asserted in tests/test_query_dedup.py).
+PLAN_CACHE_SIZE = 512
+
+
+@functools.lru_cache(maxsize=PLAN_CACHE_SIZE)
 def plan_query(
     cfg: idl_mod.IDLConfig,
     scheme: str,
@@ -255,9 +367,31 @@ def plan_query(
     )
 
 
-def plan_cache_info():
-    """LRU stats of the plan cache (hits prove plans are built once)."""
-    return plan_query.cache_info()
+class PlanCacheInfo(NamedTuple):
+    """``lru_cache`` stats plus the eviction count a bounded cache needs.
+
+    ``evictions`` is exact: every miss inserts one entry and ``currsize``
+    counts the retained ones, so ``misses - currsize`` is how many were
+    pushed out (both reset together on ``clear_plan_cache``).
+    """
+
+    hits: int
+    misses: int
+    maxsize: Optional[int]
+    currsize: int
+    evictions: int
+
+
+def _with_evictions(info) -> PlanCacheInfo:
+    return PlanCacheInfo(
+        hits=info.hits, misses=info.misses, maxsize=info.maxsize,
+        currsize=info.currsize, evictions=info.misses - info.currsize)
+
+
+def plan_cache_info() -> PlanCacheInfo:
+    """Stats of the (bounded) plan cache — hits prove plans are built
+    once, ``evictions`` proves the bound is real under pressure."""
+    return _with_evictions(plan_query.cache_info())
 
 
 def clear_plan_cache() -> None:
@@ -292,7 +426,11 @@ def default_mesh() -> Mesh:
     return Mesh(np.asarray(jax.devices()), (MESH_AXIS,))
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded like the plan cache — but note the asymmetry: evicting an
+# EXECUTOR drops its compiled closure, so a cold re-entry recompiles
+# (jit caches key on the closure object, not the plan value). 128 keeps
+# every realistic working set hot; the bound only guards runaway variety.
+@functools.lru_cache(maxsize=128)
 def _sharded_executor(plan: QueryPlan, mesh: Mesh):
     """jit-compiled shard_map executor for one (plan, mesh) pair."""
     n_shards = int(np.prod(mesh.devices.shape))

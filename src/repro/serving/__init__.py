@@ -15,8 +15,8 @@ config + plan helpers; its removed v1 bodies are call-time ImportError
 stubs.
 """
 
-from repro.serving import autoscale, fabric, genesearch, ipc, live, router, \
-    scheduler, service
+from repro.serving import autoscale, fabric, genesearch, ipc, kmer_cache, \
+    live, router, scheduler, service
 from repro.serving.autoscale import (
     AdmissionPolicy,
     AutoscaleConfig,
@@ -24,6 +24,8 @@ from repro.serving.autoscale import (
 )
 from repro.serving.fabric import FabricConfig, FabricError, ProcessFabric, \
     WorkerLost
+from repro.serving.kmer_cache import KmerCache, KmerCacheConfig, \
+    merge_cache_stats, pack_codes
 from repro.serving.live import Compactor, LiveGeneSearchService, \
     LiveReplicaRouter
 from repro.serving.router import ReplicaRouter, RouterConfig, RoutingPolicy
@@ -48,6 +50,8 @@ __all__ = [
     "FabricError",
     "GeneSearchService",
     "InsertAck",
+    "KmerCache",
+    "KmerCacheConfig",
     "LiveGeneSearchService",
     "LiveReplicaRouter",
     "ProcessFabric",
@@ -64,7 +68,10 @@ __all__ = [
     "fabric",
     "genesearch",
     "ipc",
+    "kmer_cache",
     "live",
+    "merge_cache_stats",
+    "pack_codes",
     "router",
     "scheduler",
     "service",

@@ -66,6 +66,7 @@ import numpy as np
 from repro.index import lsm, store
 from repro.index import state as state_mod
 from repro.serving import ipc
+from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import service as service_mod
 from repro.serving.live import LiveGeneSearchService
 from repro.serving.router import RoutingPolicy
@@ -212,6 +213,7 @@ def worker_main(worker_id: int, socket_path: str, snapshot_dir: str,
                     "delta_seq": svc.live.delta_seq,
                     "requests_served": svc.requests_served(),
                     "compile_counts": sched.compile_counts(),
+                    "kmer_cache": svc.cache_stats(),
                 }))
             elif msg.kind == "shutdown":
                 sched.close()     # drains: zero dropped futures
@@ -545,6 +547,12 @@ class ProcessFabric:
 
     def requests_served(self) -> int:
         return sum(s["requests_served"] for s in self.stats().values())
+
+    def cache_stats(self) -> Optional[dict]:
+        """Fleet-wide kmer-cache view: per-worker ``KmerCache.stats()``
+        gathered over the wire and aggregated (None = caches off)."""
+        return kmer_cache_mod.merge_cache_stats(
+            s.get("kmer_cache") for s in self.stats().values())
 
     # -- admission -----------------------------------------------------------
     def _dispatch(self, req: service_mod.SearchRequest, n_kmers: int,

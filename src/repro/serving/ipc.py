@@ -87,11 +87,22 @@ class Reply:
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
-    """Read exactly ``n`` bytes or raise :class:`WireClosed` on EOF."""
+    """Read exactly ``n`` bytes or raise :class:`WireClosed` on EOF.
+
+    Short reads are the NORM on a stream socket — the kernel hands back
+    whatever is buffered, so a frame (or even its 4-byte length prefix)
+    can arrive in arbitrarily small pieces; this loop reassembles them.
+    EINTR gets an explicit retry: ``InterruptedError`` is an ``OSError``
+    subclass, so without its own clause a signal landing mid-frame would
+    be misreported as peer death (regression-tested in
+    ``tests/test_ipc.py``).
+    """
     chunks = []
     while n:
         try:
             chunk = sock.recv(min(n, 1 << 20))
+        except InterruptedError:
+            continue              # EINTR: the peer is fine, just retry
         except OSError as e:
             raise WireClosed(f"socket died mid-frame: {e}") from e
         if not chunk:
@@ -117,6 +128,9 @@ class Wire:
                 f"the index never crosses the wire — this is a protocol bug")
         with self._send_lock:
             try:
+                # sendall retries EINTR internally (PEP 475); an exception
+                # escaping it leaves the stream position unknown, so a
+                # frame-level retry could desynchronize — fail the wire
                 self._sock.sendall(_LEN.pack(len(data)) + data)
             except OSError as e:
                 raise WireClosed(f"send on a dead wire: {e}") from e

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.index import lsm, store
 from repro.index import state as state_mod
+from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import router as router_mod
 from repro.serving import service as service_mod
 
@@ -74,6 +75,17 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
                  config: Optional[service_mod.ServiceConfig] = None):
         self._live = live
         super().__init__(live.base, config, version=live.base_version)
+        # Two-store cache split (see kmer_cache module doc): the FRONT
+        # cache (the inherited ``self.kmer_cache`` — what the scheduler's
+        # per-batch attribution reads) holds MERGED base|delta rows keyed
+        # by generation (version, delta_seq), so a warm batch is ONE
+        # lookup; the base-row cache keyed by version survives writes, so
+        # a delta_seq bump (which drops every merged row) only re-probes
+        # the small delta — cached base rows backfill without touching
+        # the engine. Compaction publishes bump version and drop both.
+        self._base_cache = (
+            kmer_cache_mod.KmerCache(self.config.kmer_cache.capacity)
+            if self.config.kmer_cache is not None else None)
 
     @classmethod
     def open(cls, snapshot_dir: str,
@@ -161,7 +173,22 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
             service_mod._msmt_reduce, meta.engine, meta.n_files,
             self.config.theta)
         backend = self.config.backend
-        if backend == "jnp":
+        if self.kmer_cache is not None:
+            # cached path: merged base|delta rows from the front cache
+            # keyed (version, delta_seq); misses backfill from the
+            # version-keyed base-row cache plus a delta probe of just the
+            # missing kmers. The coordinates come from the SAME
+            # ``states()`` snapshot that supplied the pytrees, so cache
+            # entries can never cross a publish or a write.
+            post = jax.jit(reduce)
+
+            def step(base, delta, reads, valid, need, version, seq):
+                per = self._merged_per_kmer(base, delta, reads,
+                                            version, seq)
+                return post(per, valid, need)
+
+            self._runners[bucket] = (step, post)
+        elif backend == "jnp":
             @jax.jit
             def step(base, delta, reads, valid, need):
                 per = lsm.merge_kmer_hits(
@@ -189,6 +216,54 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
             self._runners[bucket] = (step, post)
         return self._runners[bucket]
 
+    def _merged_per_kmer(self, base, delta, reads, version: int,
+                         seq: int) -> np.ndarray:
+        """Merged base|delta per-kmer rows through the two-store cache.
+
+        Warm path: one front-cache lookup of the batch's packed codes —
+        the merged rows are exact for the pinned ``(version, seq)``
+        generation. Miss path: deduplicate the missing codes, pull their
+        BASE rows through the version-keyed base cache (which survives
+        writes, so after a delta_seq bump this is a pure gather), probe
+        the delta for just those kmers, OR, and promote the merged rows
+        into the front cache. Exact because membership is a pure function
+        of ``(kmer, state)`` and OR over duplicates is idempotent.
+        """
+        arr = np.asarray(reads)
+        codes = kmer_cache_mod.pack_codes(arr, self._k)
+        flat = codes.ravel()
+        front = self.kmer_cache
+        front.begin((version, seq))
+        vals, hit = front.lookup(flat)
+        if vals is not None and hit.all():
+            return vals.reshape(codes.shape + vals.shape[1:])
+        miss = (np.arange(flat.size) if vals is None
+                else np.flatnonzero(~hit))
+        uniq, first, inverse = np.unique(
+            flat[miss], return_index=True, return_inverse=True)
+        wins = np.lib.stride_tricks.sliding_window_view(
+            arr, self._k, axis=1).reshape(-1, self._k)
+        uniq_wins = wins[miss[first]]
+        merged_rows = np.bitwise_or(
+            self._rows_for_unique(self._base_cache, base, uniq,
+                                  uniq_wins, int(version)),
+            self._probe_unique(delta, uniq_wins))
+        front.insert(uniq, merged_rows)
+        if vals is None:
+            vals = np.zeros((flat.size,) + merged_rows.shape[1:],
+                            merged_rows.dtype)
+        vals[miss] = merged_rows[inverse]
+        return vals.reshape(codes.shape + vals.shape[1:])
+
+    def cache_stats(self):
+        """Combined view over the two stores: front (merged rows — what
+        answers warm batches; a write shows up as one invalidation) plus
+        the base-row cache (whose hits are the write-survival reuse)."""
+        if self.kmer_cache is None:
+            return None
+        return kmer_cache_mod.merge_cache_stats(
+            [self.kmer_cache.stats(), self._base_cache.stats()])
+
     def _execute(self, bucket: int, batch, valid, need):
         """Dispatch the two-probe step; rides the state coordinates along
         with the device output so ``_finalize`` stamps the (version,
@@ -196,8 +271,12 @@ class LiveGeneSearchService(service_mod.GeneSearchService):
         the delta while this batch is still in the completer's hands."""
         step, _ = self._runner(bucket)
         base, delta, version, seq = self._live.states()
-        out = step(base, delta, jnp.asarray(batch), jnp.asarray(valid),
-                   jnp.asarray(need))
+        if self.kmer_cache is not None:   # cache generations = this snapshot
+            # host arrays straight through (see GeneSearchService._execute)
+            out = step(base, delta, batch, valid, need, version, seq)
+        else:
+            out = step(base, delta, jnp.asarray(batch), jnp.asarray(valid),
+                       jnp.asarray(need))
         return out, version, seq
 
     def _finalize(self, take, bucket: int, out

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.index import state as state_mod
 from repro.index import store
+from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import service as service_mod
 from repro.serving.autoscale import (
     AdmissionPolicy,
@@ -221,6 +222,14 @@ class ReplicaRouter:
         with self._lock:
             reps = list(self._replicas)
         return [s for r in reps for s in list(r.scheduler.stats)]
+
+    def cache_stats(self) -> Optional[Dict[str, float]]:
+        """Fleet-wide kmer-cache view: per-replica ``KmerCache.stats()``
+        aggregated (None when no replica carries a cache)."""
+        with self._lock:
+            reps = list(self._replicas)
+        return kmer_cache_mod.merge_cache_stats(
+            r.service.cache_stats() for r in reps)
 
     def requests_served(self) -> int:
         return sum(s.n_requests for s in self.cluster_stats())

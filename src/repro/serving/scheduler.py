@@ -109,6 +109,8 @@ class ClusterStats:
     flush_reason: str    # FLUSH_FULL | FLUSH_DEADLINE | FLUSH_DRAIN
     queue_ms: float      # oldest request's wait before dispatch
     wall_ms: float       # dispatch -> results materialized
+    cache_hits: int = 0      # kmer-cache hits THIS batch (0 = cache off)
+    cache_lookups: int = 0   # kmer-cache lookups this batch
 
     @property
     def occupancy(self) -> float:
@@ -205,6 +207,10 @@ class AsyncScheduler:
 
     def compile_counts(self) -> Dict[int, int]:
         return self._svc.compile_counts()
+
+    def cache_stats(self):
+        """The wrapped service's ``KmerCache.stats()`` (None = cache off)."""
+        return self._svc.cache_stats()
 
     # -- admission ----------------------------------------------------------
     def submit(self, request: Union[service_mod.SearchRequest, np.ndarray]
@@ -469,9 +475,16 @@ class AsyncScheduler:
             try:
                 pairs = [(p.request, p.n_kmers) for p in take]
                 t0 = time.monotonic()
+                # kmer-cache counters only move on this (dispatch) thread,
+                # so a before/after snapshot is exactly THIS batch's traffic
+                cache = self._svc.kmer_cache
+                h0, l0 = ((cache.hits, cache.lookups)
+                          if cache is not None else (0, 0))
                 out = self._svc._execute(
                     bucket, *self._svc._assemble(pairs, bucket))
-                self._handoff.put((bucket, take, out, reason, t0))
+                dh, dl = ((cache.hits - h0, cache.lookups - l0)
+                          if cache is not None else (0, 0))
+                self._handoff.put((bucket, take, out, reason, t0, dh, dl))
             except Exception as e:  # noqa: BLE001 - forward to futures
                 self._fail_batch(take, e)
 
@@ -480,7 +493,7 @@ class AsyncScheduler:
             item = self._handoff.get()
             if item is None:
                 return
-            bucket, take, out, reason, t0 = item
+            bucket, take, out, reason, t0, cache_hits, cache_lookups = item
             pairs = [(p.request, p.n_kmers) for p in take]
             try:
                 results = self._svc._finalize(pairs, bucket, out)
@@ -495,7 +508,8 @@ class AsyncScheduler:
                 bucket=bucket, n_requests=len(take), batch_rows=rows,
                 flush_reason=reason,
                 queue_ms=(t0 - min(p.t_enq for p in take)) * 1e3,
-                wall_ms=wall_ms)
+                wall_ms=wall_ms,
+                cache_hits=cache_hits, cache_lookups=cache_lookups)
             self.stats.append(stats)
             self._svc.batch_stats.append(service_mod.BatchStats(
                 bucket=bucket, n_requests=len(take), batch_rows=rows,

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.index import packed, query, store
 from repro.index import state as state_mod
+from repro.serving import kmer_cache as kmer_cache_mod
 
 BACKENDS = ("jnp", "idl_probe", "sharded")
 
@@ -131,6 +132,10 @@ class ServiceConfig:
     min_bucket_kmers: int = 32    # floor of the pow2 kmer buckets
     auto_flush: bool = True       # flush a bucket once max_batch are waiting
     stats_window: int = 4096      # batches of telemetry kept (bounded)
+    # cross-batch membership cache (None = off): per-kmer probe results are
+    # memoized under the served state's version — exact by construction
+    # (see repro.serving.kmer_cache); the win for overlapping read streams
+    kmer_cache: Optional[kmer_cache_mod.KmerCacheConfig] = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -196,6 +201,13 @@ class GeneSearchService:
         self._results: Dict[int, SearchResult] = {}
         self._inflight: set = set()
         self._runners: Dict[int, Tuple] = {}
+        self.kmer_cache: Optional[kmer_cache_mod.KmerCache] = (
+            kmer_cache_mod.KmerCache(self.config.kmer_cache.capacity)
+            if self.config.kmer_cache is not None else None)
+        if self.kmer_cache is not None and self._k > 32:
+            raise ValueError(
+                f"kmer_cache packs kmers into uint64 keys, so k <= 32 "
+                f"(index has k={self._k})")
         # bounded: a long-running service must not leak telemetry
         self.batch_stats: Deque[BatchStats] = collections.deque(
             maxlen=self.config.stats_window)
@@ -318,7 +330,19 @@ class GeneSearchService:
         reduce = functools.partial(
             _msmt_reduce, meta.engine, meta.n_files, self.config.theta)
         backend = self.config.backend
-        if backend == "jnp":
+        if self.kmer_cache is not None:
+            # cached path (any backend): the per-kmer probe runs host-side
+            # through the membership cache, and only the coverage postlude
+            # is jitted — one compile per bucket, same as planned backends
+            post = jax.jit(reduce)
+
+            def step(state, reads, valid, need):
+                per = self._cached_per_kmer(
+                    state, reads, generation=self._version)
+                return post(per, valid, need)
+
+            self._runners[bucket] = (step, post)
+        elif backend == "jnp":
             @jax.jit
             def step(state, reads, valid, need):
                 per = state_mod.to_engine(state).query_batch(
@@ -328,12 +352,7 @@ class GeneSearchService:
             self._runners[bucket] = (step, step)
         else:
             post = jax.jit(reduce)
-            # no Mosaic target on CPU: execute the planned backend with the
-            # kernel's fused jnp oracle instead of the (python-stepped)
-            # Pallas interpreter — same plan, bit-identical results
-            kw = ({"use_ref": True}
-                  if backend == "idl_probe" and
-                  jax.default_backend() == "cpu" else {})
+            kw = self._probe_kw()
 
             def step(state, reads, valid, need):
                 per = state_mod.to_engine(state).query_batch(
@@ -342,6 +361,100 @@ class GeneSearchService:
 
             self._runners[bucket] = (step, post)
         return self._runners[bucket]
+
+    def _probe_kw(self) -> Dict[str, bool]:
+        """Backend kwargs for ``query_batch``: no Mosaic target on CPU, so
+        ``idl_probe`` executes the planned backend with the kernel's fused
+        jnp oracle instead of the (python-stepped) Pallas interpreter —
+        same plan, bit-identical results."""
+        if self.config.backend == "idl_probe" and \
+                jax.default_backend() == "cpu":
+            return {"use_ref": True}
+        return {}
+
+    def _probe_unique(self, state, kmers: np.ndarray) -> np.ndarray:
+        """Probe ``(M, k)`` distinct kmers -> ``(M, ...)`` engine rows.
+
+        Each kmer is a standalone length-k read through the dedup'd probe
+        path (``query.execute(..., dedup=True)``): already-unique input
+        means the dedup layer contributes only its pow2 padding (bounded
+        compile shapes) and locality sort (DMA-minimal gather order).
+        Small miss-sets are padded up to one floor size first — a warm
+        cache yields a trickle of tiny, varied miss counts, and without
+        the floor each distinct pow2 size would trigger its own XLA
+        compile (seconds) to probe a handful of kmers (microseconds).
+        """
+        m = kmers.shape[0]
+        floor = 128
+        if m < floor:
+            kmers = np.concatenate(
+                [kmers, np.repeat(kmers[:1], floor - m, axis=0)])
+        out = state_mod.to_engine(state).query_batch(
+            jnp.asarray(kmers), backend=self.config.backend,
+            dedup=True, **self._probe_kw())
+        return np.asarray(out)[:m, 0]
+
+    def _rows_via_cache(self, cache, state, arr, flat, generation
+                        ) -> np.ndarray:
+        """Per-kmer rows for ``flat`` packed codes, memoized in ``cache``.
+
+        Warm path is pure vectorized numpy (one searchsorted + one row
+        gather per tier — see ``kmer_cache``); only MISS codes are
+        deduplicated and probed through the dedup'd compiled path, then
+        inserted for the next batch. Returns a fresh ``(n, ...)`` row
+        matrix the caller may mutate.
+        """
+        cache.begin(generation)
+        vals, hit = cache.lookup(flat)
+        if vals is None or not hit.all():
+            miss = np.flatnonzero(~hit)
+            uniq, first, inverse = np.unique(
+                flat[miss], return_index=True, return_inverse=True)
+            wins = np.lib.stride_tricks.sliding_window_view(
+                arr, self._k, axis=1).reshape(-1, self._k)
+            probed = self._probe_unique(state, wins[miss[first]])
+            if vals is None:
+                vals = np.zeros((flat.size,) + probed.shape[1:],
+                                probed.dtype)
+            vals[miss] = probed[inverse]
+            cache.insert(uniq, probed)
+        return vals
+
+    def _rows_for_unique(self, cache, state, codes, wins, generation
+                         ) -> np.ndarray:
+        """Like ``_rows_via_cache`` for SORTED-UNIQUE codes with their
+        aligned ``(M, k)`` windows — the live service's base-backfill
+        entry point, where the (deduplicated) merged-cache misses are
+        already known. Returns a fresh row matrix."""
+        cache.begin(generation)
+        vals, hit = cache.lookup(codes)
+        if vals is None or not hit.all():
+            miss = np.flatnonzero(~hit)
+            probed = self._probe_unique(state, wins[miss])
+            if vals is None:
+                vals = np.zeros((codes.size,) + probed.shape[1:],
+                                probed.dtype)
+            vals[miss] = probed
+            cache.insert(codes[miss], probed)
+        return vals
+
+    def _cached_per_kmer(self, state, reads, *, generation: int):
+        """The cache-mediated probe: reads -> per-kmer membership rows.
+
+        Packs the batch's kmers into uint64 codes and serves per-kmer
+        rows from :class:`~repro.serving.kmer_cache.KmerCache`, probing
+        only misses. Exact: membership is a pure function of ``(kmer,
+        state)``. The live service overrides the runner with its merged
+        base|delta variant (see ``LiveGeneSearchService._runner``).
+        """
+        arr = np.asarray(reads)
+        codes = kmer_cache_mod.pack_codes(arr, self._k)
+        flat = codes.ravel()
+        vals = self._rows_via_cache(self.kmer_cache, state, arr, flat,
+                                    int(generation))
+        # host array straight out: the jitted postlude converts on entry,
+        # which is cheaper than an explicit jnp.asarray round-trip here
+        return vals.reshape(codes.shape + vals.shape[1:])
 
     # The flush pipeline, split into its three stages so the async
     # scheduler (repro.serving.scheduler) can overlap them across batches:
@@ -368,6 +481,11 @@ class GeneSearchService:
     def _execute(self, bucket: int, batch, valid, need):
         """Dispatch the bucket's compiled step; returns the on-device out."""
         step, _ = self._runner(bucket)         # pad results are discarded
+        if self.kmer_cache is not None:
+            # host arrays straight through: the cached step packs and
+            # looks up on the host anyway (a jnp round-trip of the batch
+            # would be copied right back), and jit converts valid/need
+            return step(self._state, batch, valid, need)
         return step(self._state, jnp.asarray(batch), jnp.asarray(valid),
                     jnp.asarray(need))
 
@@ -416,6 +534,11 @@ class GeneSearchService:
         """
         return {b: counter._cache_size()
                 for b, (_, counter) in sorted(self._runners.items())}
+
+    def cache_stats(self) -> Optional[Dict[str, float]]:
+        """``KmerCache.stats()`` of this service (None when cache is off)."""
+        return (self.kmer_cache.stats()
+                if self.kmer_cache is not None else None)
 
     def requests_served(self) -> int:
         return sum(s.n_requests for s in self.batch_stats)

@@ -23,6 +23,7 @@ from repro.index.engines import BitSlicedIndex
 from repro.serving import (
     FabricConfig,
     FabricError,
+    KmerCacheConfig,
     ProcessFabric,
     ServiceConfig,
 )
@@ -212,3 +213,48 @@ class TestFaultPaths:
             assert all(r.delta_seq == 1 for r in results)
         finally:
             reborn.close()
+
+
+class TestKmerCacheAcrossTheFleet:
+    """Per-worker membership caches through the process boundary: the
+    pickled ``ServiceConfig.kmer_cache`` fans out to every worker, the
+    gateway aggregates their hit rates, a fanned write flips cached
+    negatives fleet-wide, and the caches survive a zero-drop rolling
+    restart (replacements boot cold, replay the WAL, and re-warm)."""
+
+    def test_cache_survives_zero_drop_rolling_restart(
+            self, snap, base_engine, oracle, reads, queries, tmp_path):
+        fab = ProcessFabric(
+            snap, _fab_cfg(service=ServiceConfig(
+                max_batch=4, kmer_cache=KmerCacheConfig(capacity=1 << 14))),
+            journal_path=str(tmp_path / "wal.idlj"))
+        try:
+            stream = [queries[i % len(queries)] for i in range(18)]
+            # pass 1 warms every worker; pass 2 must reuse
+            _assert_matches(fab.search(stream), base_engine, stream)
+            _assert_matches(fab.search(stream), base_engine, stream)
+            cs = fab.cache_stats()
+            assert cs is not None and cs["hits"] > 0
+            assert 0.0 < cs["hit_rate"] <= 1.0
+            # a fanned write flips cached negatives on EVERY worker
+            # (base rows stay cached; the delta is probed fresh)
+            fab.insert(reads[3:5], DELTA_FIDS).result(timeout=120)
+            _assert_matches(fab.search(stream), oracle, stream)
+            # zero-drop rolling swap with caches on: requests in flight
+            # before and after all resolve exactly; replacements boot
+            # with cold caches and replay the WAL tail
+            before = [fab.submit(q) for q in stream]
+            version = fab.rolling_restart()
+            after = [fab.submit(q) for q in stream]
+            _assert_matches([f.result(timeout=120) for f in before],
+                            oracle, stream)
+            results = [f.result(timeout=120) for f in after]
+            _assert_matches(results, oracle, stream)
+            assert all(r.version == version for r in results)
+            assert fab.n_workers == 2
+            # the re-warmed fleet reuses again and still aggregates
+            _assert_matches(fab.search(stream), oracle, stream)
+            cs2 = fab.cache_stats()
+            assert cs2 is not None and cs2["hits"] > 0
+        finally:
+            fab.close()

@@ -1,0 +1,159 @@
+"""Wire framing under hostile kernels: short reads, EINTR, EOF.
+
+A stream socket owes ``recv`` nothing but >= 1 byte — the 4-byte length
+prefix itself can arrive one byte at a time, and a signal can interrupt
+any read with EINTR. ``Wire.recv`` must reassemble frames byte-exactly
+through both (EINTR is an ``OSError`` subclass, so a naive
+``except OSError`` turns a live peer into a false ``WireClosed`` — the
+gateway would declare a healthy worker dead). The fakes below drive
+those schedules deterministically; a real-socketpair test keeps the
+fakes honest.
+"""
+
+import pickle
+import socket
+import threading
+
+import pytest
+
+from repro.serving import ipc
+
+
+class _ScriptedSocket:
+    """Duck-typed socket whose recv follows a byte-exact script.
+
+    The script is a list of items: ``bytes`` (returned AT MOST one item
+    per recv call, truncated to the requested size with the remainder
+    pushed back — the short-read schedule is the test's to choose) or an
+    exception instance to raise (EINTR injection).
+    """
+
+    def __init__(self, script):
+        self._script = list(script)
+        self.recv_calls = 0
+
+    def recv(self, size):
+        self.recv_calls += 1
+        if not self._script:
+            return b""                     # EOF
+        item = self._script.pop(0)
+        if isinstance(item, BaseException):
+            raise item
+        if len(item) > size:
+            self._script.insert(0, item[size:])
+            item = item[:size]
+        return item
+
+    def sendall(self, data):
+        raise AssertionError("recv-only fake")
+
+    def shutdown(self, how):
+        pass
+
+    def close(self):
+        pass
+
+
+def _frame(obj) -> bytes:
+    data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return ipc._LEN.pack(len(data)) + data
+
+
+class TestShortReads:
+    def test_byte_at_a_time(self):
+        """The worst legal kernel: every recv returns ONE byte — the
+        length prefix itself fragments across four reads."""
+        msg = ipc.Request(7, "query", (3, b"ACGT"))
+        raw = _frame(msg)
+        sock = _ScriptedSocket([raw[i:i + 1] for i in range(len(raw))])
+        assert ipc.Wire(sock).recv() == msg
+        assert sock.recv_calls == len(raw)
+
+    def test_split_inside_length_prefix(self):
+        """2+2 bytes of prefix, then the body in two jagged pieces."""
+        msg = ipc.Reply(42, payload={"hits": 17})
+        raw = _frame(msg)
+        sock = _ScriptedSocket([raw[:2], raw[2:4], raw[4:9], raw[9:]])
+        assert ipc.Wire(sock).recv() == msg
+
+    def test_two_frames_back_to_back(self):
+        """One recv's overshoot must not eat into the next frame."""
+        a, b = ipc.Request(1, "stats"), ipc.Request(2, "shutdown")
+        sock = _ScriptedSocket([_frame(a) + _frame(b)])
+        wire = ipc.Wire(sock)
+        assert wire.recv() == a
+        assert wire.recv() == b
+
+    def test_eof_mid_prefix_raises_wire_closed(self):
+        sock = _ScriptedSocket([b"\x10\x00"])       # 2 of 4 prefix bytes
+        with pytest.raises(ipc.WireClosed):
+            ipc.Wire(sock).recv()
+
+    def test_eof_mid_body_raises_wire_closed(self):
+        raw = _frame(ipc.Request(1, "stats"))
+        sock = _ScriptedSocket([raw[:-3]])           # body truncated
+        with pytest.raises(ipc.WireClosed):
+            ipc.Wire(sock).recv()
+
+
+class TestEintr:
+    def test_eintr_mid_prefix_is_retried(self):
+        """A signal between prefix bytes must NOT look like peer death."""
+        msg = ipc.Request(9, "insert", None)
+        raw = _frame(msg)
+        sock = _ScriptedSocket([
+            raw[:1], InterruptedError(4, "Interrupted system call"),
+            raw[1:4], InterruptedError(4, "Interrupted system call"),
+            raw[4:]])
+        assert ipc.Wire(sock).recv() == msg
+
+    def test_eintr_storm_is_survived(self):
+        msg = ipc.Reply(3, payload="ready")
+        raw = _frame(msg)
+        script = []
+        for i in range(len(raw)):
+            script += [InterruptedError(4, "Interrupted system call"),
+                       raw[i:i + 1]]
+        assert ipc.Wire(_ScriptedSocket(script)).recv() == msg
+
+    def test_real_errors_still_raise_wire_closed(self):
+        """EINTR is the ONLY retried errno — a reset is still death."""
+        sock = _ScriptedSocket([
+            ConnectionResetError(104, "Connection reset by peer")])
+        with pytest.raises(ipc.WireClosed):
+            ipc.Wire(sock).recv()
+
+
+class TestRealSocketpair:
+    """The fakes above encode assumptions; one real kernel pass keeps
+    them honest (dribbled writes force genuine short reads)."""
+
+    def test_dribbled_frame_reassembles(self):
+        a, b = socket.socketpair()
+        try:
+            msg = ipc.Request(11, "query", (0, b"x" * 4096))
+            raw = _frame(msg)
+
+            def _dribble():
+                for i in range(0, len(raw), 7):
+                    a.sendall(raw[i:i + 7])
+
+            t = threading.Thread(target=_dribble)
+            t.start()
+            got = ipc.Wire(b).recv()
+            t.join()
+            assert got == msg
+        finally:
+            a.close()
+            b.close()
+
+    def test_peer_close_mid_frame(self):
+        a, b = socket.socketpair()
+        try:
+            raw = _frame(ipc.Reply(1, payload="partial"))
+            a.sendall(raw[:len(raw) // 2])
+            a.close()
+            with pytest.raises(ipc.WireClosed):
+                ipc.Wire(b).recv()
+        finally:
+            b.close()

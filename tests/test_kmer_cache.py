@@ -1,0 +1,340 @@
+"""Versioned membership cache (``serving.kmer_cache``) acceptance.
+
+The invalidation contract under test, end to end:
+
+* cache on == cache off, bit for bit (static and live services);
+* a **base swap** (``swap_state`` / compaction publish) changes the
+  generation and drops every entry;
+* a **live write** drops no BASE entry — base rows are keyed by version
+  only, delta rows live in a separate memo keyed ``(version,
+  delta_seq)``, so a kmer whose cached base row says "miss" flips
+  positive the moment ``router.insert`` lands it in the delta (the
+  fine-grained half of the contract);
+* per-batch attribution reaches ``ClusterStats.cache_hits`` /
+  ``cache_lookups`` and fleet aggregation via ``merge_cache_stats``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import idl
+from repro.index import lsm
+from repro.index.engines import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+)
+from repro.serving import (
+    AsyncScheduler,
+    GeneSearchService,
+    KmerCache,
+    KmerCacheConfig,
+    LiveGeneSearchService,
+    LiveReplicaRouter,
+    RouterConfig,
+    SchedulerConfig,
+    ServiceConfig,
+    merge_cache_stats,
+    pack_codes,
+)
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+CACHE = KmerCacheConfig(capacity=1 << 14)
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(6, 120), dtype=np.uint8))
+
+
+@pytest.fixture(scope="module")
+def queries(reads):
+    lens = [120, 100, 77, 120, 61, 99]
+    return [np.asarray(reads[i][:n]) for i, n in enumerate(lens)]
+
+
+def _build_base(name: str, reads, scheme: str = "idl"):
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme).insert_batch(reads[:3])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads[:3], np.arange(3))
+    if name == "rambo":
+        return RamboIndex.build(
+            5, _cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads[:3], np.arange(3))
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads[:3], np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+def _assert_matches(results, oracle, queries, theta=None):
+    kw = {} if theta is None else {"theta": theta}
+    for q, res in zip(queries, results):
+        want = np.asarray(oracle.msmt(jnp.asarray(q)[None], **kw))[0]
+        np.testing.assert_array_equal(np.asarray(res.matches), want)
+
+
+# ---------------------------------------------------------------------------
+# The data structure itself.
+# ---------------------------------------------------------------------------
+
+class TestKmerCacheUnit:
+    def _keys(self, *vals) -> np.ndarray:
+        return np.asarray(vals, dtype=np.uint64)
+
+    def _rows(self, *vals) -> np.ndarray:
+        return np.asarray([[v, v, v] for v in vals], dtype=np.uint32)
+
+    def test_least_recently_hit_is_evicted(self):
+        c = KmerCache(2)
+        c.begin(0)
+        rows, hit = c.lookup(self._keys(10, 20))
+        assert rows is None and not hit.any()
+        c.insert(self._keys(10, 20), self._rows(1, 2))
+        rows, hit = c.lookup(self._keys(10))     # refresh: 20 is now LRU
+        assert hit.all() and rows[0, 0] == 1
+        c.insert(self._keys(30), self._rows(3))  # past capacity -> evict 20
+        rows, hit = c.lookup(self._keys(10, 20, 30))
+        assert list(hit) == [True, False, True]
+        np.testing.assert_array_equal(rows[0], self._rows(1)[0])
+        np.testing.assert_array_equal(rows[2], self._rows(3)[0])
+        assert not rows[1].any()                 # miss rows zero-filled
+        assert c.evictions == 1 and len(c) == 2
+
+    def test_generation_change_drops_everything(self):
+        c = KmerCache(8)
+        c.begin(0)
+        c.insert(self._keys(1, 2), self._rows(1, 2))
+        c.begin(0)                               # same generation: no-op
+        assert len(c) == 2 and c.invalidations == 0
+        c.begin(1)                               # base swapped: flush
+        assert len(c) == 0 and c.invalidations == 1
+        c.begin(2)                               # empty flush is not counted
+        assert c.invalidations == 1
+
+    def test_counters_and_stats_shape(self):
+        c = KmerCache(8)
+        c.begin(0)
+        rows, hit = c.lookup(self._keys(7, 8))   # two misses
+        assert rows is None and not hit.any()
+        c.insert(self._keys(7), self._rows(1))
+        rows, hit = c.lookup(self._keys(7, 8))   # one hit, one miss
+        assert list(hit) == [True, False]
+        st = c.stats()
+        assert st["hits"] == 1 and st["misses"] == 3
+        assert st["lookups"] == 4 and st["hit_rate"] == 0.25
+        assert st["entries"] == 1 and st["capacity"] == 8
+        assert c.lookups == c.hits + c.misses
+
+    def test_nursery_folds_into_main_tier(self):
+        """Entries stay findable across the nursery -> main merge and the
+        store never exceeds capacity."""
+        c = KmerCache(16)
+        c.begin(0)
+        for start in range(0, 64, 8):            # 8 inserts of 8 keys each
+            keys = np.arange(start, start + 8, dtype=np.uint64)
+            c.lookup(keys)
+            c.insert(keys, self._rows(*range(start, start + 8)))
+            assert len(c) <= 16
+        rows, hit = c.lookup(np.arange(56, 64, dtype=np.uint64))
+        assert hit.all()                         # newest insert survives
+        assert rows[0, 0] == 56
+        assert c.evictions == 64 - 16
+
+    def test_pack_codes_is_exact_2bit_packing(self):
+        rng = np.random.default_rng(0)
+        reads = rng.integers(0, 4, size=(5, 47), dtype=np.uint8)
+        for k in (1, 2, 5, 31, 32):
+            codes = pack_codes(reads, k)
+            wins = np.lib.stride_tricks.sliding_window_view(reads, k, axis=1)
+            weights = (np.uint64(1)
+                       << (np.uint64(2) * np.arange(k, dtype=np.uint64)))
+            ref = (wins.astype(np.uint64) * weights).sum(
+                -1, dtype=np.uint64)
+            np.testing.assert_array_equal(codes, ref)
+        # injective: every distinct kmer gets a distinct code
+        all3 = np.stack(np.meshgrid(*[np.arange(4, dtype=np.uint8)] * 3),
+                        axis=-1).reshape(-1, 3)
+        assert len(np.unique(pack_codes(all3, 3))) == len(all3)
+        with pytest.raises(ValueError):
+            pack_codes(reads, 33)
+
+    def test_capacity_is_validated(self):
+        with pytest.raises(ValueError):
+            KmerCache(0)
+        with pytest.raises(ValueError):
+            KmerCacheConfig(capacity=0)
+
+    def test_merge_cache_stats(self):
+        assert merge_cache_stats([]) is None
+        assert merge_cache_stats([None, None]) is None
+        c = KmerCache(4)
+        c.begin(0)
+        c.lookup(self._keys(9))                  # miss
+        c.insert(self._keys(9), self._rows(1))
+        c.lookup(self._keys(9))                  # hit
+        merged = merge_cache_stats([c.stats(), None, c.stats()])
+        assert merged["hits"] == 2 and merged["lookups"] == 4
+        assert merged["hit_rate"] == 0.5
+        assert merged["entries"] == 2            # summed, per-member view
+
+
+# ---------------------------------------------------------------------------
+# Static serving: parity, reuse, swap invalidation.
+# ---------------------------------------------------------------------------
+
+class TestStaticServiceCache:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_cache_on_equals_cache_off(self, reads, queries, engine):
+        eng = _build_base(engine, reads)
+        plain = GeneSearchService(eng, ServiceConfig(max_batch=4))
+        cached = GeneSearchService(
+            eng, ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        for _ in range(2):                       # pass 2 re-probes pass 1
+            for a, b in zip(plain.search(queries), cached.search(queries)):
+                np.testing.assert_array_equal(np.asarray(a.matches),
+                                              np.asarray(b.matches))
+        st = cached.cache_stats()
+        assert st["hits"] > 0
+        assert st["lookups"] == st["hits"] + st["misses"]
+        assert plain.cache_stats() is None
+        # one compile per bucket, cache or no cache
+        assert all(c == 1 for c in cached.compile_counts().values())
+
+    def test_rh_scheme_parity(self, reads, queries):
+        eng = _build_base("bitsliced", reads, scheme="rh")
+        plain = GeneSearchService(eng, ServiceConfig(max_batch=4))
+        cached = GeneSearchService(
+            eng, ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        for a, b in zip(plain.search(queries), cached.search(queries)):
+            np.testing.assert_array_equal(np.asarray(a.matches),
+                                          np.asarray(b.matches))
+
+    def test_swap_state_invalidates_by_generation(self, reads, queries):
+        base = _build_base("bitsliced", reads)
+        grown = base.insert_batch(jnp.asarray(reads[3:5]),
+                                  np.asarray([5, 17]), donate=False)
+        svc = GeneSearchService(
+            base, ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        _assert_matches(svc.search(queries), base, queries)      # warm v0
+        assert svc.cache_stats()["invalidations"] == 0
+        svc.swap_state(grown)
+        # stale rows MUST NOT answer for the new base
+        _assert_matches(svc.search(queries), grown, queries)
+        assert svc.cache_stats()["invalidations"] >= 1
+        # ...and the cache re-warms under the new generation
+        _assert_matches(svc.search(queries), grown, queries)
+        assert svc.cache_stats()["hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Live serving: writes flip cached answers WITHOUT invalidation;
+# compaction invalidates by generation.
+# ---------------------------------------------------------------------------
+
+class TestLiveCacheSemantics:
+    def test_write_flips_cached_base_miss(self, reads):
+        """The fine-grained half of the contract: a kmer whose cached
+        BASE row is a miss goes positive the instant a write lands it in
+        the delta — the write drops only the front cache's merged rows;
+        the base-row cache supplies the base half without re-probing and
+        a delta probe of just those kmers supplies the flip."""
+        base = _build_base("bitsliced", reads)
+        svc = LiveGeneSearchService(
+            lsm.LiveIndex(base),
+            ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        probe = np.asarray(reads[3])             # absent from the base
+        pre = svc.search([probe])[0]
+        assert not np.asarray(pre.matches)[5]    # file 5 untouched in base
+        svc.search([probe])                      # warm merged front rows
+        hits_before = svc.kmer_cache.hits
+        assert hits_before > 0
+        svc.apply_insert(np.asarray(reads[3:5]), [5, 17])
+        post = svc.search([probe])[0]
+        assert np.asarray(post.matches)[5]       # the flip
+        assert post.delta_seq == 1
+        # the write dropped merged rows ONLY: the base cache kept every
+        # entry and served the base half of the re-merge as pure hits
+        assert svc.kmer_cache.invalidations == 1
+        assert svc._base_cache.invalidations == 0
+        assert svc._base_cache.hits > 0
+        union = base.insert_batch(jnp.asarray(reads[3:5]),
+                                  np.asarray([5, 17]), donate=False)
+        _assert_matches(svc.search([probe]), union, [probe])
+
+    def test_router_insert_flips_on_every_replica(self, reads, queries):
+        """Same flip through ``LiveReplicaRouter``: both replicas hold a
+        cached negative, the fanned write flips both, and the merged
+        fleet stats still show reuse — each replica paid exactly one
+        front-cache drop for the write, never a base-row drop."""
+        base = _build_base("bitsliced", reads)
+        rt = LiveReplicaRouter(
+            base, ServiceConfig(max_batch=4, kmer_cache=CACHE),
+            RouterConfig(n_replicas=2, policy="round_robin"))
+        with rt:
+            probe = np.asarray(reads[3])
+            for res in rt.search([probe, probe]):    # one per replica
+                assert not np.asarray(res.matches)[5]
+            for f in rt.insert(np.asarray(reads[3:5]),
+                               np.asarray([5, 17])):
+                f.result(timeout=60)
+            for res in rt.search([probe, probe]):
+                assert np.asarray(res.matches)[5]
+            union = base.insert_batch(jnp.asarray(reads[3:5]),
+                                      np.asarray([5, 17]), donate=False)
+            _assert_matches(rt.search(queries * 2), union, queries * 2)
+            cs = rt.cache_stats()
+            assert cs is not None and cs["hits"] > 0
+            # one front-cache drop per replica for the fanned write; the
+            # per-replica base caches never invalidate
+            assert cs["invalidations"] == 2
+            for svc in rt._replicas:
+                assert svc.service._base_cache.invalidations == 0
+
+    def test_compaction_publish_invalidates(self, reads, queries):
+        base = _build_base("bitsliced", reads)
+        svc = LiveGeneSearchService(
+            lsm.LiveIndex(base),
+            ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        svc.apply_insert(np.asarray(reads[3:5]), [5, 17])
+        union = base.insert_batch(jnp.asarray(reads[3:5]),
+                                  np.asarray([5, 17]), donate=False)
+        _assert_matches(svc.search(queries), union, queries)     # warm
+        svc.compact()                            # folds delta into the base
+        # rows cached against the OLD base are gone; answers stay exact
+        _assert_matches(svc.search(queries), union, queries)
+        st = svc.cache_stats()
+        assert st["invalidations"] >= 1
+        _assert_matches(svc.search(queries), union, queries)     # re-warm
+        assert st["hits"] < svc.cache_stats()["hits"]
+
+    def test_scheduler_batches_carry_cache_counters(self, reads, queries):
+        svc = GeneSearchService(
+            _build_base("bitsliced", reads),
+            ServiceConfig(max_batch=4, kmer_cache=CACHE))
+        sched = AsyncScheduler(svc, SchedulerConfig(max_delay_ms=0.0))
+        try:
+            futs = [sched.submit(q) for q in queries * 3]
+            for f in futs:
+                f.result(timeout=60)
+            recs = list(sched.stats)
+            assert sum(r.cache_lookups for r in recs) > 0
+            assert sum(r.cache_hits for r in recs) > 0
+            assert all(r.cache_hits <= r.cache_lookups for r in recs)
+            # all lookups happen on the flusher thread inside _execute,
+            # so per-batch attribution sums to the cache's own totals
+            st = sched.cache_stats()
+            assert st["lookups"] == sum(r.cache_lookups for r in recs)
+            assert st["hits"] == sum(r.cache_hits for r in recs)
+        finally:
+            sched.close()

@@ -1,0 +1,211 @@
+"""Exact intra-batch probe dedup (``QueryPlan.execute(dedup=True)``).
+
+The correctness backbone: a kmer's hash locations are a pure function of
+its own bases (each kmer's window-min runs over ITS w sub-kmers; DOPH
+densification rolls along the η axis only), so probing each distinct
+kmer once as a standalone length-k read and gathering membership back
+through the inverse map is bit-identical to the naive per-position probe
+— across every engine, scheme and backend. Also pins the bounded plan
+caches: eviction is observable via ``plan_cache_info().evictions`` and
+costs zero recompiles (the jitted executor keys on plan VALUE equality,
+and an evicted plan rebuilds equal).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import idl
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    ingest,
+    query,
+)
+
+ENGINES = ["bloom", "cobs", "rambo", "bitsliced"]
+K = 31
+
+
+def _cfg(m: int = 1 << 16) -> idl.IDLConfig:
+    return idl.IDLConfig(k=K, t=16, L=1 << 10, eta=2, m=m)
+
+
+@pytest.fixture(scope="module")
+def reads(rng):
+    return jnp.asarray(rng.integers(0, 4, size=(3, 160), dtype=np.uint8))
+
+
+@pytest.fixture(scope="module")
+def overlapping(reads):
+    """Sliding windows over the indexed reads — every adjacent pair of
+    queries shares most of its kmers (the dedup win regime), and the
+    batch also repeats one window verbatim (exact-duplicate rows)."""
+    wins = [np.asarray(reads[i % 3])[s:s + 90]
+            for i, s in enumerate([0, 10, 20, 30, 0, 45])]
+    wins.append(wins[0])
+    return np.stack(wins)
+
+
+def _build(name: str, reads, scheme: str = "idl"):
+    fids = np.arange(reads.shape[0])
+    if name == "bloom":
+        return PackedBloomIndex.build(_cfg(), scheme).insert_batch(reads[:2])
+    if name == "cobs":
+        return CobsIndex.build(
+            [100, 200, 150], _cfg(), scheme=scheme, n_groups=2
+        ).insert_batch(reads, fids)
+    if name == "rambo":
+        return RamboIndex.build(
+            5, _cfg(1 << 14), scheme=scheme, B=2, R=2
+        ).insert_batch(reads, fids)
+    if name == "bitsliced":
+        return BitSlicedIndex.build(
+            _cfg(), scheme, n_files=40
+        ).insert_batch(reads, np.asarray([0, 9, 39]))
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# The host-side factoring.
+# ---------------------------------------------------------------------------
+
+class TestFactorUniqueKmers:
+    def test_reconstruction_is_exact(self, overlapping):
+        uniq, inverse, (b, n_k) = query.factor_unique_kmers(overlapping, K)
+        np.testing.assert_array_equal(
+            uniq[inverse].reshape(b, n_k, K),
+            np.asarray(query.read_kmers(overlapping, K)).reshape(b, n_k, K))
+
+    def test_rows_are_distinct_and_deduped(self, overlapping):
+        uniq, _, _ = query.factor_unique_kmers(overlapping, K)
+        total = overlapping.shape[0] * (overlapping.shape[1] - K + 1)
+        assert len(np.unique(uniq, axis=0)) == len(uniq)
+        assert len(uniq) < total          # the overlap actually deduped
+
+    def test_single_read_1d(self, reads):
+        one = np.asarray(reads[0])
+        uniq, inverse, (b, n_k) = query.factor_unique_kmers(one, K)
+        assert (b, n_k) == (1, one.shape[0] - K + 1)
+        assert inverse.shape == (n_k,)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across the whole matrix.
+# ---------------------------------------------------------------------------
+
+class TestDedupParity:
+    @pytest.mark.parametrize("scheme", ["idl", "rh"])
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_engines_by_scheme(self, reads, overlapping, engine, scheme):
+        eng = _build(engine, reads, scheme)
+        naive = np.asarray(eng.query_batch(jnp.asarray(overlapping)))
+        dedup = np.asarray(
+            eng.query_batch(jnp.asarray(overlapping), dedup=True))
+        np.testing.assert_array_equal(dedup, naive)
+
+    @pytest.mark.parametrize("backend,kw", [
+        ("jnp", {}),
+        ("idl_probe", {"use_ref": True}),
+        ("sharded", {}),
+    ])
+    def test_backends(self, reads, overlapping, backend, kw):
+        eng = _build("bitsliced", reads)
+        naive = np.asarray(eng.query_batch(jnp.asarray(overlapping)))
+        dedup = np.asarray(eng.query_batch(
+            jnp.asarray(overlapping), backend=backend, dedup=True, **kw))
+        np.testing.assert_array_equal(dedup, naive)
+
+    def test_msmt_end_to_end(self, reads, overlapping):
+        for engine in ENGINES:
+            eng = _build(engine, reads)
+            want = np.asarray(eng.msmt(jnp.asarray(overlapping), theta=0.7))
+            got = np.asarray(eng.msmt(
+                jnp.asarray(overlapping), theta=0.7, dedup=True))
+            np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestDedupProperty:
+    """Random batches (duplicate rows included by construction: the
+    strategy tiles a small alphabet of windows) stay bit-identical."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5),
+           st.integers(K, K + 33))
+    def test_dedup_equals_naive(self, seed, b, read_len):
+        prng = np.random.default_rng(seed)
+        base = prng.integers(0, 4, size=read_len + 8, dtype=np.uint8)
+        starts = prng.integers(0, 9, size=b)
+        batch = np.stack([base[s:s + read_len] for s in starts])
+        eng = _BLOOM_FOR_PROPERTY
+        naive = np.asarray(eng.query_batch(jnp.asarray(batch)))
+        dedup = np.asarray(eng.query_batch(jnp.asarray(batch), dedup=True))
+        np.testing.assert_array_equal(dedup, naive)
+        uniq, inverse, (bb, n_k) = query.factor_unique_kmers(batch, K)
+        np.testing.assert_array_equal(
+            uniq[inverse].reshape(bb, n_k, K),
+            np.asarray(query.read_kmers(batch, K)).reshape(bb, n_k, K))
+
+
+_BLOOM_FOR_PROPERTY = PackedBloomIndex.build(
+    idl.IDLConfig(k=K, t=16, L=1 << 8, eta=2, m=1 << 12), "idl"
+).insert_batch(jnp.asarray(
+    np.random.default_rng(7).integers(0, 4, size=(2, 80), dtype=np.uint8)))
+
+
+# ---------------------------------------------------------------------------
+# Bounded plan caches: evictions are counted and cost no recompiles.
+# ---------------------------------------------------------------------------
+
+class TestBoundedPlanCache:
+    def test_caches_have_a_real_bound(self):
+        assert query.plan_query.cache_info().maxsize == \
+            query.PLAN_CACHE_SIZE
+        assert ingest.plan_insert.cache_info().maxsize == \
+            ingest.PLAN_CACHE_SIZE
+        assert query._sharded_executor.cache_info().maxsize is not None
+
+    def test_eviction_count_is_exact(self):
+        query.clear_plan_cache()
+        cfg = _cfg()
+        n = query.PLAN_CACHE_SIZE + 40
+        for b in range(1, n + 1):       # n distinct read shapes
+            query.plan_query(cfg, "idl", (b, K), (cfg.m // 32, 1),
+                             bit_probe=True)
+        info = query.plan_cache_info()
+        assert info.currsize == query.PLAN_CACHE_SIZE
+        assert info.evictions == n - query.PLAN_CACHE_SIZE
+        assert info.misses == n
+
+    def test_compile_once_survives_eviction(self, reads, overlapping):
+        """Plan eviction must be FREE: plans are value objects, the jit
+        cache keys on their hash/eq, and a rebuilt plan compares equal —
+        so flooding the plan cache cannot trigger a recompile."""
+        query.clear_plan_cache()
+        eng = _build("bloom", reads)
+        eng.query_batch(jnp.asarray(overlapping))
+        compiled0 = query._execute_jnp._cache_size()
+        cfg = _cfg()
+        for b in range(1, query.PLAN_CACHE_SIZE + 20):   # flood: evict all
+            query.plan_query(cfg, "idl", (b, K), (cfg.m // 32, 1),
+                             bit_probe=True)
+        assert query.plan_cache_info().evictions > 0
+        eng.query_batch(jnp.asarray(overlapping))        # plan rebuilds...
+        assert query._execute_jnp._cache_size() == compiled0  # ...no compile
+
+    def test_insert_plan_cache_bounded(self, rng):
+        ingest.clear_plan_cache()
+        cfg = _cfg()
+        n = ingest.PLAN_CACHE_SIZE + 16
+        for b in range(1, n + 1):
+            ingest.plan_insert(cfg, "idl", (b, 64), (cfg.m // 32, 1),
+                               kind="bits")
+        info = ingest.plan_cache_info()
+        assert info.currsize == ingest.PLAN_CACHE_SIZE
+        assert info.evictions == n - ingest.PLAN_CACHE_SIZE
