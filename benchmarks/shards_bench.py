@@ -1,0 +1,319 @@
+"""Sharded-archive benchmark: parallel distributed build + scatter-gather.
+
+Exercises the PR-9 subsystem end-to-end and records the evidence for its
+claims ledger rows:
+
+* **parity sweep** (smoke + full): for every engine x scheme x theta in
+  {bit-sliced, cobs, flat BF, rambo} x {idl, rh} x {1.0, 0.6}, a
+  2-shard archive is built with :func:`ingest.build_sharded_archive`
+  (thread-per-shard over the donated insert planner) and served through
+  an in-process :class:`ScatterGatherRouter`; every answer is asserted
+  bit-identical to one :class:`GeneSearchService` over the joined
+  (unsharded) index BEFORE anything is recorded. 16 combos, all exact.
+* **proc parity** (smoke + full): the same check through REAL shard
+  worker processes (2 mmap-booted shards behind one gateway), one
+  engine per partition axis.
+* **shard kill** (smoke + full): kill -9 one shard process mid-stream.
+  Row-probe (bit-sliced): every future resolves, late answers name the
+  dead shard's files in ``missing_files`` and stay exact on the
+  surviving files. Bit-probe (rambo): affected futures raise
+  ``ShardDeadError`` — loud, never a silently-inflated answer. The
+  recorded ``shard_kill.dropped`` counts futures that neither resolved
+  nor raised: it must be 0.
+* **build scaling** (full only): wall-clock of the parallel sharded
+  build vs the serial ``build_archive`` over the same files. Read the
+  curve with ``host.cpu_count`` in hand — shard builds contend for one
+  XLA:CPU device on this box, so the honest expectation here is ~flat;
+  the mechanism (independent per-shard insert streams) is what the
+  number validates, the scaling needs real parallel hardware.
+* **scatter throughput** (full only): closed-loop requests/sec of the
+  in-process router at 1 vs 2 shards, same caveat.
+
+    PYTHONPATH=src python -m benchmarks.shards_bench [--smoke]
+
+Writes ``BENCH_shards.json`` next to the repo root (in ``--smoke`` too —
+CI uploads it; the smoke record is marked ``"smoke": true``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_metadata, timeit
+from repro.core import idl
+from repro.data import genome
+from repro.index import (
+    BitSlicedIndex,
+    CobsIndex,
+    PackedBloomIndex,
+    RamboIndex,
+    ingest,
+    shards,
+)
+from repro.serving import (
+    GeneSearchService,
+    ScatterConfig,
+    ScatterGatherRouter,
+    ServiceConfig,
+    ShardDeadError,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+ENGINES = ("bitsliced", "cobs", "bloom", "rambo")
+SCHEMES = ("idl", "rh")
+THETAS = (1.0, 0.6)
+N_FILES = 70
+
+
+def _cfg(m: int = 1 << 14) -> idl.IDLConfig:
+    return idl.IDLConfig(k=31, t=16, L=1 << 10, eta=2, m=m)
+
+
+def _fresh_index(engine: str, scheme: str, file_sizes):
+    if engine == "bitsliced":
+        return BitSlicedIndex.build(_cfg(), scheme=scheme,
+                                    n_files=len(file_sizes))
+    if engine == "cobs":
+        return CobsIndex.build(list(file_sizes), _cfg(), scheme=scheme,
+                               n_groups=3)
+    if engine == "rambo":
+        return RamboIndex.build(len(file_sizes), _cfg(), scheme=scheme)
+    return PackedBloomIndex.build(_cfg(), scheme=scheme)
+
+
+def _corpus(seed: int = 9, n_files: int = N_FILES):
+    rng = np.random.default_rng(seed)
+    files = [rng.integers(0, 4, size=720, dtype=np.uint8)
+             for _ in range(n_files)]
+    queries = [rng.integers(0, 4, size=int(n), dtype=np.uint8)
+               for n in rng.integers(40, 110, size=8)]
+    queries[0] = files[3][40:120].copy()          # true positives on both
+    queries[1] = files[n_files - 5][100:170].copy()   # sides of the cut
+    return files, queries
+
+
+def _items(engine: str, files):
+    if engine == "bloom":
+        return [(0, np.concatenate(files[:4]))]
+    return list(enumerate(files))
+
+
+def _assert_results_equal(want, got, label: str) -> None:
+    for w, g in zip(want, got):
+        assert np.array_equal(np.asarray(w.matches),
+                              np.asarray(g.matches)), (
+            f"{label}: sharded answer drifted from the unsharded oracle")
+        assert w.file_ids == g.file_ids, label
+        assert g.missing_files == (), label
+
+
+def parity_sweep(files, queries, tmp: str) -> dict:
+    """Build sharded, serve scattered, assert bit-identity. 16 combos."""
+    combos = 0
+    for engine in ENGINES:
+        for scheme in SCHEMES:
+            set_dir = f"{tmp}/{engine}-{scheme}"
+            spec, states = ingest.build_sharded_archive(
+                _fresh_index(engine, scheme, [f.size for f in files]),
+                _items(engine, files), n_shards=2, out_dir=set_dir,
+                read_len=240, chunk_reads=8)
+            full = shards.join_states(spec, states)
+            for theta in THETAS:
+                svc_cfg = ServiceConfig(theta=theta, max_batch=4)
+                want = GeneSearchService(full, svc_cfg).search(queries)
+                with ScatterGatherRouter(
+                        set_dir,
+                        ScatterConfig(service=svc_cfg)) as router:
+                    got = router.search(queries)
+                _assert_results_equal(
+                    want, got, f"{engine}/{scheme} theta={theta}")
+                combos += 1
+                print(f"  parity {engine}/{scheme} theta={theta} OK")
+    return {"combos": combos, "all_equal": True,
+            "engines": list(ENGINES), "schemes": list(SCHEMES),
+            "thetas": list(THETAS), "n_shards": 2}
+
+
+def proc_parity(files, queries, tmp: str) -> dict:
+    """The same answers through real shard worker processes."""
+    out = {}
+    for engine, theta in (("bitsliced", 1.0), ("rambo", 0.6)):
+        set_dir = f"{tmp}/{engine}-idl"        # reuse the sweep's set
+        _, states = shards.load_shard_set(set_dir)
+        sm = shards.read_set_meta(set_dir)
+        full = shards.join_states(sm.spec, states)
+        svc_cfg = ServiceConfig(theta=theta, max_batch=4)
+        want = GeneSearchService(full, svc_cfg).search(queries)
+        with ScatterGatherRouter(set_dir, ScatterConfig(
+                procs=True, service=svc_cfg)) as router:
+            got = router.search(queries)
+            _assert_results_equal(want, got, f"procs {engine}")
+        out[engine] = {"n_shards": sm.spec.n_shards, "axis": sm.spec.axis,
+                       "equal": True, "theta": theta}
+        print(f"  proc parity {engine} (axis={sm.spec.axis}) OK")
+    return out
+
+
+def shard_kill(files, queries, tmp: str) -> dict:
+    """kill -9 one shard process mid-stream on each partition axis and
+    account for EVERY submitted future: resolved exactly, resolved with
+    named missing files, or raised ShardDeadError. dropped must be 0."""
+    stream = [queries[i % len(queries)] for i in range(24)]
+    out = {"submitted": 0, "resolved": 0, "loud_errors": 0, "dropped": 0}
+
+    # row-probe axis: partial truth, honestly labeled
+    set_dir = f"{tmp}/bitsliced-idl"
+    sm = shards.read_set_meta(set_dir)
+    lost = shards.shard_files(sm.spec, 1)
+    kept = sorted(set(range(sm.spec.meta.n_files)) - set(lost))
+    _, states = shards.load_shard_set(set_dir)
+    oracle = GeneSearchService(
+        shards.join_states(sm.spec, states),
+        ServiceConfig(max_batch=4))
+    want = oracle.search(stream)
+    row = {"with_missing_files": 0}
+    with ScatterGatherRouter(set_dir, ScatterConfig(
+            procs=True, service=ServiceConfig(max_batch=4))) as router:
+        router.search(queries[:2])             # warm both shards
+        futures = [router.submit(q) for q in stream]
+        router.kill_shard(1)
+        for w, f in zip(want, futures):
+            res = f.result(timeout=120)        # raises if dropped
+            out["resolved"] += 1
+            if res.missing_files:
+                assert res.missing_files == lost
+                row["with_missing_files"] += 1
+            gm = np.asarray(res.matches)
+            assert np.array_equal(gm[kept], np.asarray(w.matches)[kept])
+        out["submitted"] += len(futures)
+    row["lost_files"] = len(lost)
+    print(f"  row-probe kill: {row['with_missing_files']}/"
+          f"{len(stream)} answers carried missing_files, 0 dropped")
+
+    # bit-probe axis: fail loud, never inflate the FPR
+    set_dir = f"{tmp}/rambo-idl"
+    bit = {"loud_errors": 0}
+    with ScatterGatherRouter(set_dir, ScatterConfig(
+            procs=True, service=ServiceConfig(max_batch=4))) as router:
+        router.search(queries[:2])
+        futures = [router.submit(q) for q in stream]
+        router.kill_shard(0)
+        for f in futures:
+            try:
+                f.result(timeout=120)
+                out["resolved"] += 1
+            except ShardDeadError:
+                out["loud_errors"] += 1
+                bit["loud_errors"] += 1
+        out["submitted"] += len(futures)
+    assert bit["loud_errors"] > 0, \
+        "kill landed after the whole stream resolved; nothing asserted"
+    print(f"  bit-probe kill: {bit['loud_errors']}/{len(stream)} "
+          f"futures failed loud, 0 dropped")
+
+    out["dropped"] = out["submitted"] - out["resolved"] \
+        - out["loud_errors"]
+    assert out["dropped"] == 0, out
+    out["row_probe"] = row
+    out["bit_probe"] = bit
+    return out
+
+
+def build_scaling(repeats: int) -> dict:
+    """Parallel sharded build vs serial build_archive, same files."""
+    n_files = 128
+    archive = genome.synth_archive(n_files=n_files, genome_len=2_000,
+                                   seed=42)
+    cfg = _cfg(1 << 16)
+
+    def serial():
+        ingest.build_archive(
+            BitSlicedIndex.build(cfg, "idl", n_files=n_files), archive,
+            read_len=230, chunk_reads=32)
+
+    def sharded(n):
+        ingest.build_sharded_archive(
+            BitSlicedIndex.build(cfg, "idl", n_files=n_files), archive,
+            n_shards=n, read_len=230, chunk_reads=32)
+
+    out = {"n_files": n_files,
+           "serial_s": timeit(serial, repeats=repeats, warmup=1)}
+    for n in (2, 4):
+        out[f"sharded_{n}_s"] = timeit(lambda: sharded(n),
+                                       repeats=repeats, warmup=1)
+    out["speedup_2_shards"] = out["serial_s"] / out["sharded_2_s"]
+    print(f"  build: serial {out['serial_s']:.2f}s, "
+          f"2 shards {out['sharded_2_s']:.2f}s, "
+          f"4 shards {out['sharded_4_s']:.2f}s")
+    return out
+
+
+def scatter_throughput(files, queries, tmp: str, repeats: int) -> dict:
+    """Closed-loop rps of the in-process router at 1 vs 2 shards."""
+    stream = [queries[i % len(queries)] for i in range(64)]
+    out = {"n_requests": len(stream)}
+    for n in (1, 2):
+        set_dir = f"{tmp}/tp-{n}"
+        ingest.build_sharded_archive(
+            _fresh_index("bitsliced", "idl", [f.size for f in files]),
+            _items("bitsliced", files), n_shards=n, out_dir=set_dir,
+            read_len=240, chunk_reads=8)
+        with ScatterGatherRouter(set_dir, ScatterConfig(
+                service=ServiceConfig(max_batch=8))) as router:
+            router.search(stream[:8])          # warm compiles
+            s = timeit(lambda: router.search(stream), repeats=repeats,
+                       warmup=1)
+            out[f"shards_{n}_rps"] = len(stream) / s
+    print(f"  scatter: {out['shards_1_rps']:.0f} rps unsharded, "
+          f"{out['shards_2_rps']:.0f} rps at 2 shards")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: parity + proc parity + shard-kill "
+                         "asserts only (still rewrites BENCH_shards.json, "
+                         'marked "smoke": true)')
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    files, queries = _corpus()
+    res = {"host": bench_metadata(), "smoke": bool(args.smoke)}
+    with tempfile.TemporaryDirectory(prefix="shards_bench_") as tmp:
+        print("parity sweep (sharded build + scatter-gather vs oracle):")
+        res["parity"] = parity_sweep(files, queries, tmp)
+        print("proc-mode parity (real shard worker processes):")
+        res["proc_parity"] = proc_parity(files, queries, tmp)
+        print("shard kill -9 mid-stream:")
+        res["shard_kill"] = shard_kill(files, queries, tmp)
+        if not args.smoke:
+            print("build scaling:")
+            res["build"] = build_scaling(args.repeats)
+            print("scatter throughput:")
+            res["throughput"] = scatter_throughput(files, queries, tmp,
+                                                   args.repeats)
+    res["notes"] = [
+        "parity/proc_parity/shard_kill are exactness gates asserted "
+        "before this record is written — the numbers that matter are "
+        "the counts (combos, dropped), not wall-clock",
+        "build and throughput wall-clock run on host.cpu_count cores "
+        "with ONE in-order XLA:CPU device: shard threads contend for "
+        "it, so ~flat curves here are honest — the per-shard scaling "
+        "the partition exists for needs one device per shard",
+        "wall-clock on this box swings 2-3x run-to-run; recorded "
+        "values are medians over --repeats runs",
+    ]
+    out_path = ROOT / "BENCH_shards.json"
+    out_path.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

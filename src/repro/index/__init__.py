@@ -15,18 +15,21 @@ for the full API and migration notes from the deprecated
 classes.
 """
 
-from repro.index import ingest, lsm, packed, query, registry, state, store
+from repro.index import ingest, lsm, packed, query, registry, shards, state, \
+    store
 from repro.index.engines import (
     BitSlicedIndex,
     CobsIndex,
     PackedBloomIndex,
     RamboIndex,
 )
-from repro.index.ingest import InsertPlan, build_archive, plan_insert
+from repro.index.ingest import InsertPlan, build_archive, \
+    build_sharded_archive, plan_insert
 from repro.index.lsm import DeltaJournal, LiveIndex
 from repro.index.protocol import GeneIndex
 from repro.index.query import QueryPlan, plan_query
 from repro.index.registry import HashScheme
+from repro.index.shards import ShardSetError, ShardSetMeta, ShardSpec
 from repro.index.state import IndexState, StaleIndexError, StateMeta
 from repro.index.store import SnapshotError
 
@@ -42,10 +45,14 @@ __all__ = [
     "PackedBloomIndex",
     "QueryPlan",
     "RamboIndex",
+    "ShardSetError",
+    "ShardSetMeta",
+    "ShardSpec",
     "SnapshotError",
     "StaleIndexError",
     "StateMeta",
     "build_archive",
+    "build_sharded_archive",
     "ingest",
     "lsm",
     "packed",
@@ -53,6 +60,7 @@ __all__ = [
     "plan_query",
     "query",
     "registry",
+    "shards",
     "state",
     "store",
 ]

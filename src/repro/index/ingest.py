@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Iterable, Optional
 
 import jax
@@ -482,3 +483,85 @@ def build_archive(
     for length in sorted(pending):
         flush(length, force=True)
     return index
+
+
+def build_sharded_archive(
+    index,
+    files: Iterable,
+    *,
+    n_shards: int,
+    out_dir: Optional[str] = None,
+    read_len: int = 230,
+    chunk_reads: int = 64,
+    backend: str = "jnp",
+    window_min: Optional[int] = None,
+    pad_final: bool = True,
+    set_version: int = 0,
+):
+    """Partition an empty engine/state and stream the archive into every
+    shard in parallel — one thread per shard over the same donated insert
+    planner :func:`build_archive` uses (each shard compiles its plan
+    once; under jax the scatters release the GIL, so shard builds overlap
+    wherever the host has cores).
+
+    Row-probe shards (bit-sliced / cobs) each ingest only their own file
+    range — bit-sliced file ids are renumbered into the shard-local
+    column space. Bit-probe shards (flat BF / rambo) each ingest EVERY
+    read through a :class:`repro.index.shards.ShardBuilder`, which keeps
+    only the targets in the shard's word range (scatter-OR commutes and
+    is idempotent, so dropping foreign targets is exact). Joining the
+    result is bit-identical to the unsharded ``build_archive`` — asserted
+    in tests/test_shards.py.
+
+    Returns ``(spec, [IndexState, ...])``; with ``out_dir`` also writes
+    the shard-set snapshot (``shards.save_shard_set``) stamped
+    ``set_version``.
+    """
+    from repro.index import shards as shards_mod
+    from repro.index import state as state_mod
+
+    spec, parts = shards_mod.partition_state(index, n_shards)
+    items = []
+    for pos, item in enumerate(files):
+        fid, seqs = _file_sequences(item, pos)
+        items.extend((fid, codes) for codes in seqs)
+    build_kw = dict(read_len=read_len, chunk_reads=chunk_reads,
+                    window_min=window_min, pad_final=pad_final)
+    results: list = [None] * n_shards
+    errors: list = []
+
+    def run(s: int) -> None:
+        try:
+            if spec.row_probe:
+                owned = shards_mod.shard_files(spec, s)
+                base = owned[0] if (
+                    owned and spec.meta.engine == "bitsliced") else 0
+                own = set(owned)
+                mine = [(fid - base, codes)
+                        for fid, codes in items if fid in own]
+                built = build_archive(
+                    state_mod.to_engine(parts[s]), mine,
+                    backend=backend, **build_kw)
+                results[s] = state_mod.from_engine(built)
+            else:
+                builder = shards_mod.ShardBuilder(spec, s, parts[s])
+                built = build_archive(builder, items,
+                                      backend=backend, **build_kw)
+                results[s] = built.state
+        except Exception as e:  # noqa: BLE001 - surfaced to the caller
+            errors.append((s, e))
+
+    threads = [threading.Thread(target=run, args=(s,),
+                                name=f"idl-shard-build-{s}")
+               for s in range(n_shards)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        s, e = min(errors)
+        raise RuntimeError(f"shard {s} build failed: {e!r}") from e
+    if out_dir is not None:
+        shards_mod.save_shard_set(spec, results, out_dir,
+                                  version=set_version)
+    return spec, results

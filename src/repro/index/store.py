@@ -157,6 +157,13 @@ def save(index: Union[state_mod.IndexState, object], directory: str) -> str:
 def _read_manifest(directory: str) -> dict:
     path = os.path.join(directory, MANIFEST)
     if not os.path.exists(path):
+        from repro.index import shards as shards_mod
+
+        if shards_mod.is_shard_set(directory):
+            raise SnapshotError(
+                f"{directory!r} is a SHARD-SET snapshot, not a single-index "
+                f"snapshot — load it with repro.index.shards.load_shard_set "
+                f"(or read its meta with store.read_meta)")
         raise SnapshotError(f"no {MANIFEST} in {directory!r} — not a snapshot")
     try:
         with open(path) as f:
@@ -240,7 +247,14 @@ def check_verified(directory: str, *, wait: bool = True) -> bool:
 def read_meta(directory: str) -> state_mod.StateMeta:
     """Read just the snapshot's :class:`StateMeta` — O(manifest), no array
     bytes touched. The fabric gateway uses this to learn kmer size and
-    bucket geometry without ever holding the index itself."""
+    bucket geometry without ever holding the index itself. Shard-set
+    snapshots (see :mod:`repro.index.shards`) answer with the FULL
+    unsharded meta from their CRC-checked set manifest."""
+    if not os.path.exists(os.path.join(directory, MANIFEST)):
+        from repro.index import shards as shards_mod
+
+        if shards_mod.is_shard_set(directory):
+            return shards_mod.read_set_meta(directory).spec.meta
     return meta_from_json(_read_manifest(directory)["meta"])
 
 

@@ -4,7 +4,11 @@ Builds a gene-search index over a synthetic archive and serves batched MSMT
 queries through the v2 engine + service path — the runnable counterpart of
 the serve cell the dry-run lowers. ``--procs N`` serves the same traffic
 through a :class:`ProcessFabric` instead: the index is snapshotted once
-and N worker processes mmap it behind one gateway.
+and N worker processes mmap it behind one gateway. ``--shards N``
+partitions the index into N shard states, saves the shard-set snapshot,
+and serves through a :class:`ScatterGatherRouter` — each shard a worker
+process when ``--procs`` is also set — then runs the same recall check
+against the merged answers.
 """
 
 from __future__ import annotations
@@ -30,6 +34,10 @@ def main() -> None:
     ap.add_argument("--procs", type=int, default=0, metavar="N",
                     help="serve through a ProcessFabric of N mmap-booted "
                          "worker processes instead of in-process")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="partition the index into N shards and serve "
+                         "through a scatter-gather router (with --procs, "
+                         "each shard runs in its own worker process)")
     args = ap.parse_args()
 
     spec = configs.get(args.arch)
@@ -39,6 +47,10 @@ def main() -> None:
     cfg = spec.make_smoke_config()
     import dataclasses
     args.files = max(32, -(-args.files // 32) * 32)  # bit-sliced: 32/word
+    if args.shards:
+        # file shards split on 32-file word columns: one column per shard
+        # is the floor
+        args.files = max(args.files, 32 * args.shards)
     cfg = dataclasses.replace(cfg, n_files=args.files)
 
     archive = genome.synth_archive(n_files=args.files, genome_len=2_000,
@@ -51,7 +63,21 @@ def main() -> None:
           f"{eng.state.nbytes / 1e6:.1f} MB bit-sliced IndexState")
 
     svc_cfg = ServiceConfig(theta=cfg.theta, max_batch=args.batch)
-    if args.procs:
+    if args.shards:
+        from repro.index import shards as shards_mod
+        from repro.serving import ScatterConfig, ScatterGatherRouter
+        tmp = tempfile.TemporaryDirectory(prefix="serve_shards_")
+        spec, parts = shards_mod.partition_state(eng, args.shards)
+        shards_mod.save_shard_set(spec, parts, f"{tmp.name}/set")
+        router = ScatterGatherRouter(f"{tmp.name}/set", ScatterConfig(
+            procs=bool(args.procs), service=svc_cfg))
+        mode = ("worker processes" if args.procs
+                else "in-process schedulers")
+        print(f"shards: {spec.n_shards} shards over the {spec.axis!r} "
+              f"axis, served by {mode} (set version "
+              f"{router.set_version})")
+        search = router.search
+    elif args.procs:
         from repro.index import store
         from repro.serving import FabricConfig, ProcessFabric
         tmp = tempfile.TemporaryDirectory(prefix="serve_fabric_")
@@ -80,7 +106,10 @@ def main() -> None:
     print(f"recall {correct}/{total}; "
           f"p50 latency {1e3 * float(np.median(lat)):.1f} ms "
           f"(batch={args.batch})")
-    if args.procs:
+    if args.shards:
+        router.close()
+        tmp.cleanup()
+    elif args.procs:
         fab.close()
         tmp.cleanup()
 

@@ -16,7 +16,7 @@ stubs.
 """
 
 from repro.serving import autoscale, fabric, genesearch, ipc, kmer_cache, \
-    live, router, scheduler, service
+    live, router, scatter, scheduler, service
 from repro.serving.autoscale import (
     AdmissionPolicy,
     AutoscaleConfig,
@@ -29,6 +29,8 @@ from repro.serving.kmer_cache import KmerCache, KmerCacheConfig, \
 from repro.serving.live import Compactor, LiveGeneSearchService, \
     LiveReplicaRouter
 from repro.serving.router import ReplicaRouter, RouterConfig, RoutingPolicy
+from repro.serving.scatter import ScatterConfig, ScatterError, \
+    ScatterGatherRouter, ShardDeadError, ShardSearchService
 from repro.serving.scheduler import AsyncScheduler, ClusterStats, InsertAck, \
     SchedulerConfig
 from repro.serving.service import (
@@ -59,10 +61,15 @@ __all__ = [
     "ReplicaRouter",
     "RouterConfig",
     "RoutingPolicy",
+    "ScatterConfig",
+    "ScatterError",
+    "ScatterGatherRouter",
     "SchedulerConfig",
     "SearchRequest",
     "SearchResult",
     "ServiceConfig",
+    "ShardDeadError",
+    "ShardSearchService",
     "WorkerLost",
     "autoscale",
     "fabric",
@@ -73,6 +80,7 @@ __all__ = [
     "merge_cache_stats",
     "pack_codes",
     "router",
+    "scatter",
     "scheduler",
     "service",
 ]

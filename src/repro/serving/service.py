@@ -96,6 +96,10 @@ class SearchResult:
     delta_seq: int = 0   # live-index write watermark that served it (0 =
     #                      static index / empty delta) — with `version` this
     #                      makes staleness observable per result
+    missing_files: Tuple[int, ...] = ()  # file ids whose row-probe shard was
+    #                      down when a scatter-gather answer was assembled —
+    #                      those entries of `matches` are vacuously False
+    #                      (see repro.serving.scatter); always () elsewhere
 
 
 def normalize_request(request: Union[SearchRequest, np.ndarray], k: int

@@ -169,6 +169,29 @@ class TestKmerCacheUnit:
         with pytest.raises(ValueError):
             pack_codes(reads, 33)
 
+    def test_pack_codes_k32_fills_the_key_exactly(self):
+        # k=32 is the boundary: 64 of 64 key bits carry bases, zero to
+        # spare — all-T reads must produce the all-ones key, and codes
+        # must stay injective with the mask wide open
+        allT = np.full((1, 40), 3, dtype=np.uint8)
+        codes = pack_codes(allT, 32)
+        assert codes.shape == (1, 9)
+        assert (codes == np.uint64(0xFFFFFFFFFFFFFFFF)).all()
+        rng = np.random.default_rng(3)
+        reads = rng.integers(0, 4, size=(1, 64), dtype=np.uint8)
+        assert len(np.unique(pack_codes(reads, 32))) == 64 - 32 + 1
+
+    def test_pack_codes_rejects_k_over_32_by_name(self):
+        reads = np.zeros((2, 40), dtype=np.uint8)
+        with pytest.raises(ValueError, match=r"k <= 32 \(got k=33\)"):
+            pack_codes(reads, 33)
+        # the overflow guard fires before any length math
+        with pytest.raises(ValueError, match="k <= 32"):
+            pack_codes(np.zeros((2, 4), dtype=np.uint8), 64)
+        # in-range k but reads too short fails on the length, by name
+        with pytest.raises(ValueError, match="no 32-mers"):
+            pack_codes(np.zeros((2, 20), dtype=np.uint8), 32)
+
     def test_capacity_is_validated(self):
         with pytest.raises(ValueError):
             KmerCache(0)
@@ -187,6 +210,22 @@ class TestKmerCacheUnit:
         assert merged["hits"] == 2 and merged["lookups"] == 4
         assert merged["hit_rate"] == 0.5
         assert merged["entries"] == 2            # summed, per-member view
+
+    def test_merge_cache_stats_edge_cases(self):
+        # an idle fleet has a 0.0 hit rate, not a ZeroDivisionError
+        idle = KmerCache(4).stats()
+        merged = merge_cache_stats([idle, idle])
+        assert merged["lookups"] == 0 and merged["hit_rate"] == 0.0
+        # short dicts (older workers) contribute 0 for absent counters,
+        # and the merged view is a copy — mutating it can't corrupt a
+        # member's live stats
+        part = {"hits": 3, "misses": 1, "lookups": 4, "entries": 2,
+                "capacity": 8, "evictions": 0, "invalidations": 0}
+        merged = merge_cache_stats([part, {"hits": 1, "lookups": 1}])
+        assert merged["hits"] == 4 and merged["lookups"] == 5
+        assert merged["hit_rate"] == 0.8
+        merged["hits"] = 999
+        assert part["hits"] == 3
 
 
 # ---------------------------------------------------------------------------

@@ -38,3 +38,12 @@ def test_serve_launcher():
               "--requests", "2"])
     assert p.returncode == 0, p.stderr[-1500:]
     assert "recall 8/8" in p.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher_sharded():
+    p = _run(["repro.launch.serve", "--files", "64", "--shards", "2",
+              "--batch", "4", "--requests", "2"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "2 shards over the 'files' axis" in p.stdout
+    assert "recall 8/8" in p.stdout

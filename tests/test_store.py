@@ -117,6 +117,27 @@ class TestRejection:
         with pytest.raises(SnapshotError, match="not a snapshot"):
             store.load(str(tmp_path / "nowhere"))
 
+    def test_shard_set_dir_points_at_the_right_loader(self, tmp_path,
+                                                      reads):
+        """A shard-set snapshot is NOT a single-index snapshot: loading
+        one here names the real loader instead of claiming 'not a
+        snapshot', and ``read_meta`` still answers — with the FULL
+        unsharded meta, the geometry the set serves."""
+        from repro.index import shards
+
+        eng = _build("rambo", "idl", reads)
+        spec, parts = shards.partition_state(eng, 2)
+        d = str(tmp_path / "set")
+        shards.save_shard_set(spec, parts, d)
+        with pytest.raises(SnapshotError, match="SHARD-SET snapshot"):
+            store.load(d)
+        with pytest.raises(SnapshotError, match="load_shard_set"):
+            store.load(d)
+        assert store.read_meta(d) == eng.state.meta
+        # an empty dir is still just "not a snapshot"
+        with pytest.raises(SnapshotError, match="not a snapshot"):
+            store.load(str(tmp_path / "nowhere"))
+
     def test_foreign_format_tag(self, snap):
         m = self._manifest(snap)
         m["format"] = "some-other-store"
