@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Obs discipline lint: the metrics registry (repro.obs.metrics) is the
+# ONLY mutable stats store in the serving stack. Serving modules read
+# registry snapshots and bind handles; they do not grow parallel
+# hand-rolled stat dicts or attribute counters again. Grep-based and
+# deliberately blunt — it gates the *pattern*, reviewers gate the
+# semantics.
+#
+# Usage: scripts/check_obs_discipline.sh   (run from the repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+SCOPE=(src/repro/serving src/repro/index/query.py)
+fail=0
+
+check() {
+    local label="$1" pattern="$2"
+    shift 2
+    if out=$(grep -rnE "$@" "$pattern" "${SCOPE[@]}" 2>/dev/null); then
+        echo "FAIL: $label"
+        echo "$out" | sed 's/^/    /'
+        fail=1
+    fi
+}
+
+# 1. No mutable stats-dict entries: counters live in the registry, not
+#    in dicts patched per event (stats dicts returned to callers are
+#    built in one shot from registry snapshots).
+check "stats dict mutated in place (use a registry counter)" \
+    "stats\[[\"'][a-z_]+[\"']\][[:space:]]*(\+=|-=|=[^=])"
+
+# 2. No ad-hoc attribute counters shadowing registry series.
+check "hand-rolled attribute counter (bind a registry handle)" \
+    "self\._[a-z_]*(hits|misses|requests_served|n_batches|evictions|invalidations)[a-z_]*[[:space:]]*\+="
+
+# 3. One canonical cache-stats fold: ``merge_cache_stats`` is defined in
+#    kmer_cache.py and nowhere else; fleet-wide rollups go through
+#    repro.obs.export.cache_stats_view over merged snapshots.
+check "second stats-merge implementation (use the canonical one)" \
+    "def[[:space:]]+merge_[a-z_]*stats" --exclude=kmer_cache.py
+
+# 4. Serving code must not reach into registry internals — snapshots and
+#    handles are the whole API surface.
+check "registry internals poked from serving code" \
+    "DEFAULT\._(counters|gauges|hists)\b"
+
+if [ "$fail" -ne 0 ]; then
+    echo
+    echo "Serving tiers must route stats through repro.obs (see"
+    echo "docs/API.md, 'Observability plane')."
+    exit 1
+fi
+echo "obs discipline: clean (${SCOPE[*]})"

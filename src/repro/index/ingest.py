@@ -252,6 +252,12 @@ class InsertPlan:
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
         rplan = self.plan_runs(reads, aux)
+        if rplan is not None:
+            query.record_locality(
+                scheme=self.scheme, op="insert",
+                tile_bytes=self.run_dma_bytes(rplan),
+                n_runs=rplan.n_runs, n_probes=int(rplan.n_locs),
+                run_lengths=rplan.run_lengths)
         return ins_ops.insert_planned(
             matrix, rplan, interpret=interpret, use_ref=use_ref,
         )

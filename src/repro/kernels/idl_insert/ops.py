@@ -89,6 +89,9 @@ class InsertRunPlan:
     block_ids: np.ndarray    # (R_pad,) int32 row-block per run, nondecreasing
     slot_ids: np.ndarray     # (R_pad,) int32 output tile slot, nondecreasing
     offsets: np.ndarray      # (R_pad, C) int32 tile bit offsets, -1 padded
+    run_lengths: np.ndarray  # (n_runs,) int32 inserts per true run
+                             # (precomputed at plan time so telemetry never
+                             # re-reduces the (R_pad, C) offset matrix)
     uniq_blocks: np.ndarray  # (S_pad,) int32 touched blocks, sorted unique,
                              # padded with _PAD_BLOCK (dropped at write-back)
     n_locs: int              # deduplicated insert count
@@ -158,6 +161,7 @@ def plan_insert_runs(
 
     return InsertRunPlan(
         block_ids=bids, slot_ids=sids, offsets=offs, uniq_blocks=uniq,
+        run_lengths=np.bincount(run, minlength=n_runs).astype(np.int32),
         n_locs=n, n_runs=n_runs, n_tiles=n_tiles,
         block_bits=block_bits, inserts_per_run=c,
     )

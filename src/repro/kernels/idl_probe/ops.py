@@ -23,6 +23,10 @@ from repro.kernels.idl_probe import kernel, ref
 class ProbePlan:
     block_ids: np.ndarray    # (R,) int32
     offsets: np.ndarray      # (R, C) int32, -1 padded
+    run_lengths: np.ndarray  # (R,) int32 probes per run (== row-wise count
+                             # of valid offsets, precomputed at plan time
+                             # so telemetry never re-reduces the (R, C)
+                             # offset matrix)
     probe_index: np.ndarray  # (R, C) int32 position in flattened (η·n) stream
     gather_index: np.ndarray # (n_probes,) int32 flat (run, lane) per probe —
                              # the inverse of probe_index, so executors can
@@ -87,6 +91,7 @@ def plan_probe_runs(
     return ProbePlan(
         block_ids=bids,
         offsets=offs,
+        run_lengths=np.bincount(seg, minlength=n_runs).astype(np.int32),
         probe_index=pidx,
         gather_index=(seg * c + pos).astype(np.int32),
         n_probes=p * n,

@@ -38,6 +38,10 @@ def main() -> None:
                     help="partition the index into N shards and serve "
                          "through a scatter-gather router (with --procs, "
                          "each shard runs in its own worker process)")
+    ap.add_argument("--obs-dump", default=None, metavar="PATH",
+                    help="after serving, write the merged observability "
+                         "snapshot (metrics + traces, JSON) to PATH and "
+                         "a Chrome trace_event file next to it")
     args = ap.parse_args()
 
     spec = configs.get(args.arch)
@@ -106,6 +110,18 @@ def main() -> None:
     print(f"recall {correct}/{total}; "
           f"p50 latency {1e3 * float(np.median(lat)):.1f} ms "
           f"(batch={args.batch})")
+    if args.obs_dump:
+        from repro.obs import export as obs_export
+        if args.shards:
+            snap = router.obs_snapshot()   # fleet merge over shard procs
+        elif args.procs:
+            snap = fab.obs_snapshot()      # fleet merge over workers
+        else:
+            snap = obs_export.snapshot()   # one process = one registry
+        paths = obs_export.dump(snap, args.obs_dump)
+        print(f"obs: {len(snap.get('spans', ()))} spans, "
+              f"{len(snap['metrics'].get('counters', {}))} counter "
+              f"series -> {paths[0]} (+ {paths[1]})")
     if args.shards:
         router.close()
         tmp.cleanup()

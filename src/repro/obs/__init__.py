@@ -1,0 +1,65 @@
+"""Observability plane: metrics registry, request tracing, fleet export.
+
+Three modules threaded through every serving tier:
+
+- :mod:`repro.obs.metrics` — process-local thread-safe registry
+  (counters / gauges / fixed-bucket log2 histograms) with pre-bound
+  handles so the hot path allocates nothing; ``snapshot()`` → plain dict,
+  ``merge()`` for cross-process aggregation.
+- :mod:`repro.obs.trace` — per-request spans minted at admission, riding
+  IPC frames across process boundaries, finished records in a bounded
+  ring, exported as JSON or Chrome ``trace_event``.
+- :mod:`repro.obs.export` — the one snapshot/merge/dump path shared by
+  the fabric gateway, scatter router and ``launch/serve.py --obs-dump``,
+  plus registry-backed views (``cache_stats_view``) that replace the
+  per-tier stats-dict merging.
+
+``set_enabled(False)`` flips both metrics and tracing to cheap no-ops —
+the obs overhead bench's off-switch (contract: obs-on is bit-identical to
+obs-off and within 5% of its throughput; ``BENCH_serve.json:obs_overhead``
+records the measurement).
+"""
+
+from repro.obs import export, metrics, trace
+from repro.obs.export import cache_stats_view, chrome_events, dump, \
+    snapshot, traces_of
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry, \
+    counter_total, gauge_total
+from repro.obs.trace import Span, TraceContext, Tracer
+
+
+def set_enabled(enabled: bool) -> None:
+    """Master switch for the process-local default registry + tracer."""
+    metrics.set_enabled(enabled)
+    trace.set_enabled(enabled)
+
+
+def reset() -> None:
+    """Zero the default registry and clear the default tracer's ring —
+    test isolation and per-stream deltas in the benches."""
+    metrics.reset()
+    trace.DEFAULT.clear()
+    trace.DEFAULT.close_open_spans(status="error", error="obs_reset")
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "Span",
+    "TraceContext",
+    "Tracer",
+    "cache_stats_view",
+    "chrome_events",
+    "counter_total",
+    "dump",
+    "export",
+    "gauge_total",
+    "metrics",
+    "reset",
+    "set_enabled",
+    "snapshot",
+    "trace",
+    "traces_of",
+]

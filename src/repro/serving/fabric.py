@@ -65,8 +65,9 @@ import numpy as np
 
 from repro.index import lsm, store
 from repro.index import state as state_mod
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serving import ipc
-from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import service as service_mod
 from repro.serving.live import LiveGeneSearchService
 from repro.serving.router import RoutingPolicy
@@ -195,12 +196,16 @@ def worker_main(worker_id: int, socket_path: str, snapshot_dir: str,
         try:
             if msg.kind == "query":
                 rid, read = msg.payload
+                # msg.trace = the gateway's dispatch-span context: the
+                # request/queue_wait/... spans this worker emits become
+                # its children, so the gateway stitches ONE tree
                 _reply_when_done(msg.id, sched.submit(
-                    service_mod.SearchRequest(read=read, request_id=rid)))
+                    service_mod.SearchRequest(read=read, request_id=rid),
+                    trace=msg.trace))
             elif msg.kind == "insert":
                 seq, reads, fids = msg.payload
                 _reply_when_done(msg.id, sched.submit_insert(
-                    reads, fids, seq=seq))
+                    reads, fids, seq=seq, trace=msg.trace))
             elif msg.kind == "compact":
                 threading.Thread(
                     target=_compact_to, args=(msg.id, msg.payload),
@@ -214,6 +219,10 @@ def worker_main(worker_id: int, socket_path: str, snapshot_dir: str,
                     "requests_served": svc.requests_served(),
                     "compile_counts": sched.compile_counts(),
                     "kmer_cache": svc.cache_stats(),
+                    # the whole process-local obs state rides the same
+                    # reply: metrics for the fleet merge, finished span
+                    # records for cross-process trace stitching
+                    "obs": obs_export.snapshot(),
                 }))
             elif msg.kind == "shutdown":
                 sched.close()     # drains: zero dropped futures
@@ -256,6 +265,10 @@ class _PendingMsg:
     kind: str
     future: Future
     ctx: object = None        # query: (SearchRequest, n_kmers)
+    # the OPEN gateway-side dispatch span: closed ok by the receiver when
+    # the worker replies, closed with error status by _on_worker_death —
+    # this is how a kill -9 shows up in the trace instead of leaking
+    span: Optional[obs_trace.Span] = None
 
 
 class _FleetAck:
@@ -441,6 +454,9 @@ class ProcessFabric:
                 self._idle.notify_all()
             if entry is None:
                 continue
+            if entry.span is not None:
+                entry.span.end(
+                    status="ok" if msg.error is None else "error")
             if entry.kind == "insert":
                 fleet = entry.ctx
                 if fleet is None:
@@ -477,17 +493,28 @@ class ProcessFabric:
             # a retiring worker's EOF is expected — resolve anything still
             # pending (its shutdown ack) instead of stranding the caller
             for _, p in orphaned:
+                if p.span is not None:
+                    p.span.end(status="ok", retired=True)
                 if not p.future.done():
                     p.future.set_result(None)
             return
+        # orphaned dispatch spans close with ERROR status — the worker
+        # died (crash / kill -9) with this work in flight, and the trace
+        # must say so instead of leaking an open span
+        for _, p in orphaned:
+            if p.span is not None:
+                p.span.end(status="error",
+                           error=f"worker {w.id} died")
         # re-route: the dead worker never replied, so every orphaned
         # query is safe to re-dispatch; orphaned inserts are journaled —
         # the replacement worker replays them, which is the ack contract
         for _, p in orphaned:
             if p.kind == "query":
                 req, n_kmers = p.ctx
+                trace = (None if p.span is None
+                         else (p.span.trace_id, p.span.parent_id))
                 try:
-                    self._dispatch(req, n_kmers, p.future)
+                    self._dispatch(req, n_kmers, p.future, trace=trace)
                 except FabricError as e:
                     p.future.set_exception(WorkerLost(
                         f"worker {w.id} died and no survivor could take "
@@ -548,17 +575,34 @@ class ProcessFabric:
     def requests_served(self) -> int:
         return sum(s["requests_served"] for s in self.stats().values())
 
+    def obs_snapshot(self) -> dict:
+        """Fleet obs view: the gateway's own process snapshot merged with
+        every serving worker's (each worker ships its full obs state on
+        the ``stats`` reply). The span concatenation in the merge is
+        where gateway dispatch spans and worker pipeline spans stitch
+        into one tree per trace id."""
+        per = self.stats()
+        return obs_export.merge(
+            [obs_export.snapshot()]
+            + [s["obs"] for s in per.values()
+               if isinstance(s, dict) and s.get("obs")])
+
     def cache_stats(self) -> Optional[dict]:
-        """Fleet-wide kmer-cache view: per-worker ``KmerCache.stats()``
-        gathered over the wire and aggregated (None = caches off)."""
-        return kmer_cache_mod.merge_cache_stats(
-            s.get("kmer_cache") for s in self.stats().values())
+        """Fleet-wide kmer-cache view, derived from the merged registry
+        snapshot (None = caches off everywhere) — same shape the
+        per-worker ``KmerCache.stats()`` merge used to produce."""
+        snap = self.obs_snapshot()
+        if "kmer_cache.capacity" not in snap["metrics"].get("gauges", {}):
+            return None
+        return obs_export.cache_stats_view(snap)
 
     # -- admission -----------------------------------------------------------
     def _dispatch(self, req: service_mod.SearchRequest, n_kmers: int,
-                  fut: Future) -> None:
+                  fut: Future, *,
+                  trace: Optional[obs_trace.TraceContext] = None) -> None:
         bucket = service_mod.bucket_for(
             n_kmers, self.config.service.min_bucket_kmers)
+        trc = obs_trace.DEFAULT
         with self._lock:
             if self._closed:
                 raise FabricError("fabric is closed")
@@ -567,25 +611,47 @@ class ProcessFabric:
                 raise FabricError("fabric has no serving workers")
             w = self._policy.pick(serving, bucket,
                                   lambda x: x.outstanding)
+            # an OPEN span per dispatch: the worker's spans parent under
+            # it via the wire's trace context; the receiver closes it ok,
+            # a worker death closes it with error status
+            span = (trc.start("worker_exec", trace=trace, worker=w.id,
+                              rid=req.request_id)
+                    if trc.enabled and trace is not None else None)
             mid = next(self._mid)
             self._pending[mid] = _PendingMsg(
-                w.id, "query", fut, (req, n_kmers))
+                w.id, "query", fut, (req, n_kmers), span=span)
             w.outstanding += 1
         try:
             w.wire.send(ipc.Request(
-                mid, "query", (req.request_id, req.read)))
+                mid, "query", (req.request_id, req.read),
+                trace=None if span is None else span.context()))
         except ipc.WireClosed:
             self._on_worker_death(w)      # re-routes this very request
 
     def submit(self, request) -> Future:
-        """Route one read to a worker; returns a Future[SearchResult]."""
+        """Route one read to a worker; returns a Future[SearchResult].
+
+        Admission mints the trace id HERE: the gateway's root span covers
+        the whole request lifetime (closed when the future resolves), the
+        per-dispatch ``worker_exec`` child rides the wire, and the
+        worker's pipeline spans stitch under it — one trace id across
+        processes.
+        """
         req, n_kmers = service_mod.normalize_request(request, self._k)
         rid = req.request_id
         if rid is None:
             rid = next(self._next_rid)
         req = service_mod.SearchRequest(read=req.read, request_id=rid)
         fut: Future = Future()
-        self._dispatch(req, n_kmers, fut)
+        trc = obs_trace.DEFAULT
+        ctx = None
+        if trc.enabled:
+            root = trc.start("request", tier="gateway", rid=rid)
+            ctx = root.context()
+            fut.add_done_callback(lambda f: root.end(
+                status="error" if (f.cancelled() or f.exception())
+                else "ok"))
+        self._dispatch(req, n_kmers, fut, trace=ctx)
         return fut
 
     def search(self, reads) -> List[service_mod.SearchResult]:
@@ -594,16 +660,25 @@ class ProcessFabric:
 
     # -- the write path ------------------------------------------------------
     def _send_insert_locked(self, w: _Worker, seq: int, reads, fids,
-                            fleet: Optional[_FleetAck]) -> List[_Worker]:
+                            fleet: Optional[_FleetAck], *,
+                            trace: Optional[obs_trace.TraceContext] = None
+                            ) -> List[_Worker]:
         """Register + send one insert to one worker (caller holds the
         lock — sends stay inside it so every worker sees one total write
         order). Returns the workers whose wires died (death handling
         needs the lock, so the caller runs it after releasing)."""
+        trc = obs_trace.DEFAULT
+        span = (trc.start("worker_insert", trace=trace, worker=w.id,
+                          seq=seq)
+                if trc.enabled and trace is not None else None)
         mid = next(self._mid)
-        self._pending[mid] = _PendingMsg(w.id, "insert", Future(), fleet)
+        self._pending[mid] = _PendingMsg(w.id, "insert", Future(), fleet,
+                                         span=span)
         w.outstanding += 1
         try:
-            w.wire.send(ipc.Request(mid, "insert", (seq, reads, fids)))
+            w.wire.send(ipc.Request(
+                mid, "insert", (seq, reads, fids),
+                trace=None if span is None else span.context()))
             return []
         except ipc.WireClosed:
             return [w]
@@ -626,6 +701,14 @@ class ProcessFabric:
                 else np.asarray(file_ids, dtype=np.int32).reshape(-1))
         fut: Future = Future()
         dead: List[_Worker] = []
+        trc = obs_trace.DEFAULT
+        root = (trc.start("insert", tier="gateway", n_reads=len(reads))
+                if trc.enabled else None)
+        ctx = root.context() if root is not None else None
+        if root is not None:
+            fut.add_done_callback(lambda f: root.end(
+                status="error" if (f.cancelled() or f.exception())
+                else "ok"))
         with self._lock:
             if self._closed:
                 raise FabricError("fabric is closed")
@@ -633,17 +716,27 @@ class ProcessFabric:
             if not serving:
                 raise FabricError("fabric has no serving workers")
             seq = self._wal_seq + 1
+            t_j = time.monotonic()
             if self._journal is not None:
                 self._journal.append(seq, reads, fids)
+            if ctx is not None:
+                trc.emit("journal_append", ctx[0], ctx[1], t_j,
+                         time.monotonic(),
+                         attrs={"seq": seq,
+                                "durable": self._journal is not None})
             self._wal_seq = seq
             self._tail.append(lsm.JournalRecord(
                 seq=seq, reads=reads, file_ids=fids))
             fleet = _FleetAck(fut, len(serving), InsertAck(
                 base_version=self._version, delta_seq=seq,
                 n_reads=int(reads.shape[0])))
+            t_f = time.monotonic()
             for w in serving:
                 dead.extend(self._send_insert_locked(
-                    w, seq, reads, fids, fleet))
+                    w, seq, reads, fids, fleet, trace=ctx))
+            if ctx is not None:
+                trc.emit("fanout", ctx[0], ctx[1], t_f, time.monotonic(),
+                         attrs={"seq": seq, "n_workers": len(serving)})
         for w in dead:
             self._on_worker_death(w)
         return fut

@@ -70,11 +70,19 @@ class Hello:
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """Gateway -> worker. ``id`` correlates the eventual :class:`Reply`."""
+    """Gateway -> worker. ``id`` correlates the eventual :class:`Reply`.
+
+    ``trace`` carries the observability trace context —
+    ``(trace_id, parent_span_id)`` minted at the gateway — so spans the
+    worker opens stitch as children of the gateway's dispatch span
+    (:mod:`repro.obs.trace`). Defaulted for wire compatibility with
+    frames from code that predates the field.
+    """
 
     id: int
     kind: str
     payload: object = None
+    trace: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,12 +60,21 @@ threads (stats scraping) see monotone ints.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 __all__ = ["KmerCacheConfig", "KmerCache", "pack_codes",
            "merge_cache_stats"]
+
+# distinguishes each cache instance's gauge series in the process
+# registry (two live-service caches per replica must not overwrite each
+# other's ``entries``); counters with the same labels would merge fine,
+# but one vocabulary for both is simpler to read in a snapshot
+_CACHE_IDS = itertools.count()
 
 # nursery merges into the sorted main tier past this many fresh entries —
 # bounds per-insert cost (the nursery's own merge sort stays tiny) while
@@ -131,6 +140,18 @@ class KmerCache:
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = int(capacity)
+        # obs: every counter bump below mirrors into the process registry
+        # (pre-bound handles; one inc per batched op, not per kmer)
+        labels = {"tier": "kmer_cache", "cache": next(_CACHE_IDS)}
+        reg = obs_metrics.DEFAULT
+        self._obs_hits = reg.counter("kmer_cache.hits", **labels)
+        self._obs_misses = reg.counter("kmer_cache.misses", **labels)
+        self._obs_evictions = reg.counter("kmer_cache.evictions", **labels)
+        self._obs_invalidations = reg.counter(
+            "kmer_cache.invalidations", **labels)
+        self._obs_entries = reg.gauge("kmer_cache.entries", **labels)
+        self._obs_capacity = reg.gauge("kmer_cache.capacity", **labels)
+        self._obs_capacity.set(self.capacity)
         # main tier: key-sorted parallel arrays (keys / row matrix / last-
         # hit tick); nursery: same shape, absorbs inserts between merges
         self._keys: Optional[np.ndarray] = None
@@ -167,9 +188,11 @@ class KmerCache:
         if generation != self._generation:
             if len(self):
                 self.invalidations += 1
+                self._obs_invalidations.inc()
                 self._keys = self._vals = self._stamp = None
                 self._table = None
                 self._nkeys = self._nvals = self._nstamp = None
+                self._obs_entries.set(0)
             self._generation = generation
 
     # -- lookup / fill -------------------------------------------------------
@@ -195,6 +218,7 @@ class KmerCache:
         n = int(codes.size)
         if self._keys is None:
             self.misses += n
+            self._obs_misses.inc(n)
             return None, np.zeros(n, dtype=bool)
         keys = self._keys
         cand = self._table[(codes * _HASH_MULT) >> self._table_shift]
@@ -205,6 +229,7 @@ class KmerCache:
         if hit.all():
             self._stamp[pos] = self._tick
             self.hits += n
+            self._obs_hits.inc(n)
             return rows, hit
         miss = np.flatnonzero(~hit)
         rows[miss] = 0
@@ -232,6 +257,8 @@ class KmerCache:
         n_hit = int(hit.sum())
         self.hits += n_hit
         self.misses += n - n_hit
+        self._obs_hits.inc(n_hit)
+        self._obs_misses.inc(n - n_hit)
         return rows, hit
 
     def insert(self, codes: np.ndarray, rows: np.ndarray) -> None:
@@ -257,6 +284,7 @@ class KmerCache:
         if self._keys is None or len(self) > self.capacity \
                 or len(self._nkeys) > _NURSERY_MAX:
             self._compact_store()
+        self._obs_entries.set(len(self))
 
     def _compact_store(self) -> None:
         """Fold nursery into main; evict least-recently-hit past capacity."""
@@ -273,6 +301,7 @@ class KmerCache:
             n_evict = len(keys) - self.capacity
             keep = np.argpartition(stamp, n_evict)[n_evict:]
             self.evictions += n_evict
+            self._obs_evictions.inc(n_evict)
             keys, vals, stamp = keys[keep], vals[keep], stamp[keep]
         order = np.argsort(keys, kind="stable")
         self._keys = keys[order]

@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from concurrent.futures import Future
 from typing import List, Optional
 
@@ -54,6 +55,7 @@ import numpy as np
 
 from repro.index import lsm, store
 from repro.index import state as state_mod
+from repro.obs import trace as obs_trace
 from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import router as router_mod
 from repro.serving import service as service_mod
@@ -335,13 +337,25 @@ class LiveReplicaRouter(router_mod.ReplicaRouter):
             reads = reads[None]
         fids = (None if file_ids is None
                 else np.asarray(file_ids, dtype=np.int32).reshape(-1))
+        trc = obs_trace.DEFAULT
+        span = (trc.start("insert", tier="router", n_reads=len(reads))
+                if trc.enabled else None)
+        ctx = span.context() if span is not None else None
         with self._lock:
             serving = [r for r in self._replicas if r.serving]
             if not serving:
+                if span is not None:
+                    span.end(status="error", error="no serving replicas")
                 raise RuntimeError("router has no serving replicas")
             seq = self._wal_seq + 1
+            t_j = time.monotonic()
             if self._journal is not None:
                 self._journal.append(seq, reads, fids)
+            if ctx is not None:
+                trc.emit("journal_append", ctx[0], ctx[1], t_j,
+                         time.monotonic(),
+                         attrs={"seq": seq,
+                                "durable": self._journal is not None})
             self._wal_seq = seq
             self._tail.append(lsm.JournalRecord(
                 seq=seq, reads=reads, file_ids=fids))
@@ -349,8 +363,15 @@ class LiveReplicaRouter(router_mod.ReplicaRouter):
             # at this exact journal coordinate, so (version, delta_seq)
             # watermarks can never drift replica-to-replica — a laggard
             # that publishes first simply no-ops the re-delivery later
-            return [r.scheduler.submit_insert(reads, fids, seq=seq)
+            t_f = time.monotonic()
+            futs = [r.scheduler.submit_insert(reads, fids, seq=seq,
+                                              trace=ctx)
                     for r in serving]
+            if ctx is not None:
+                trc.emit("fanout", ctx[0], ctx[1], t_f, time.monotonic(),
+                         attrs={"seq": seq, "n_replicas": len(futs)})
+        router_mod._close_span_on_acks(span, futs)
+        return futs
 
     def delta_batches(self) -> int:
         with self._lock:

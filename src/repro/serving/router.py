@@ -47,6 +47,8 @@ import numpy as np
 
 from repro.index import state as state_mod
 from repro.index import store
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serving import kmer_cache as kmer_cache_mod
 from repro.serving import service as service_mod
 from repro.serving.autoscale import (
@@ -60,6 +62,29 @@ from repro.serving.scheduler import AsyncScheduler, ClusterStats, \
 __all__ = ["RouterConfig", "ReplicaRouter", "RoutingPolicy", "POLICIES"]
 
 POLICIES = ("round_robin", "least_outstanding", "bucket_affinity")
+
+
+def _close_span_on_acks(span, futures: Sequence[Future]) -> None:
+    """End a write's root span when every replica ack resolves — the ack
+    leg of the insert → journal-append → fan-out → ack chain. Any errored
+    or cancelled ack closes the root with error status."""
+    if span is None:
+        return
+    lock = threading.Lock()
+    state = {"remaining": len(futures), "failed": False}
+
+    def _done(f: Future) -> None:
+        with lock:
+            if f.cancelled() or f.exception() is not None:
+                state["failed"] = True
+            state["remaining"] -= 1
+            last = state["remaining"] == 0
+        if last:
+            span.end(status="error" if state["failed"] else "ok",
+                     n_replicas=len(futures))
+
+    for f in futures:
+        f.add_done_callback(_done)
 
 
 class RoutingPolicy:
@@ -232,12 +257,28 @@ class ReplicaRouter:
             r.service.cache_stats() for r in reps)
 
     def requests_served(self) -> int:
-        return sum(s.n_requests for s in self.cluster_stats())
+        """Lifetime fleet total — a view over each replica's registry-
+        backed service counter (not the windowed stats ring)."""
+        with self._lock:
+            reps = list(self._replicas)
+        return sum(r.service.requests_served() for r in reps)
 
     def occupancy(self) -> float:
-        stats = self.cluster_stats()
-        rows = sum(s.batch_rows for s in stats)
-        return sum(s.n_requests for s in stats) / rows if rows else 0.0
+        """Fleet rows-served-per-row-dispatched, from the same registry
+        counters the per-service view reads."""
+        with self._lock:
+            reps = list(self._replicas)
+        rows = sum(r.service._obs_batch_rows.value for r in reps)
+        reqs = sum(r.service._obs_requests.value for r in reps)
+        return reqs / rows if rows else 0.0
+
+    def obs_snapshot(self) -> dict:
+        """Full process-local obs snapshot (metrics + finished spans).
+        For the in-process fleet every replica already feeds the one
+        process registry, so no per-replica merge is needed; the
+        cross-process tiers (fabric, scatter) ship this same shape over
+        IPC and fold with :func:`repro.obs.export.merge`."""
+        return obs_export.snapshot()
 
     # -- routing ------------------------------------------------------------
     def _route(self, bucket: int) -> _Replica:
@@ -285,12 +326,23 @@ class ReplicaRouter:
         (:class:`~repro.serving.live.LiveReplicaRouter`); static replicas
         raise ``TypeError`` on the first fan-out.
         """
+        trc = obs_trace.DEFAULT
+        span = (trc.start("insert", tier="router") if trc.enabled else None)
+        ctx = span.context() if span is not None else None
         with self._lock:
             serving = [r for r in self._replicas if r.serving]
             if not serving:
+                if span is not None:
+                    span.end(status="error", error="no serving replicas")
                 raise RuntimeError("router has no serving replicas")
-            return [r.scheduler.submit_insert(reads, file_ids)
+            t0 = time.monotonic()
+            futs = [r.scheduler.submit_insert(reads, file_ids, trace=ctx)
                     for r in serving]
+            if ctx is not None:
+                trc.emit("fanout", ctx[0], ctx[1], t0, time.monotonic(),
+                         attrs={"n_replicas": len(futs)})
+        _close_span_on_acks(span, futs)
+        return futs
 
     # -- hot snapshot swap --------------------------------------------------
     def swap_snapshot(self, directory: str, *,

@@ -57,6 +57,8 @@ import numpy as np
 
 from repro.index import query, shards as shards_mod
 from repro.index import state as state_mod
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serving import ipc
 from repro.serving import service as service_mod
 from repro.serving.scheduler import AsyncScheduler, SchedulerConfig
@@ -213,14 +215,18 @@ def shard_worker_main(shard_id: int, socket_path: str, set_dir: str,
         try:
             if msg.kind == "query":
                 rid, read = msg.payload
+                # msg.trace parents this shard's pipeline spans under the
+                # router's dispatch span — same stitching as the fabric
                 _reply_when_done(msg.id, sched.submit(
-                    service_mod.SearchRequest(read=read, request_id=rid)))
+                    service_mod.SearchRequest(read=read, request_id=rid),
+                    trace=msg.trace))
             elif msg.kind == "stats":
                 wire.send(ipc.Reply(msg.id, payload={
                     "pid": os.getpid(),
                     "shard_id": shard_id,
                     "version": svc.version,
                     "compile_counts": sched.compile_counts(),
+                    "obs": obs_export.snapshot(),
                 }))
             elif msg.kind == "shutdown":
                 sched.close()     # drains: zero dropped futures
@@ -334,7 +340,8 @@ class ScatterGatherRouter:
         self._idle = threading.Condition(self._lock)
         self._next_rid = itertools.count()
         self._mid = itertools.count()
-        self._pending: Dict[int, Tuple[int, str, object]] = {}
+        # mid -> (shard_id, kind, ctx, open dispatch Span | None)
+        self._pending: Dict[int, Tuple[int, str, object, object]] = {}
         self._shards: List[_Shard] = []
         self._closed = False
         self._test_flags: dict = {}
@@ -460,7 +467,7 @@ class ScatterGatherRouter:
                     continue
                 fut: Future = Future()
                 mid = next(self._mid)
-                self._pending[mid] = (sh.id, "stats", fut)
+                self._pending[mid] = (sh.id, "stats", fut, None)
                 futures.append((sh.id, fut))
                 try:
                     sh.wire.send(ipc.Request(mid, "stats"))
@@ -474,15 +481,43 @@ class ScatterGatherRouter:
                 pass
         return out
 
+    def obs_snapshot(self) -> dict:
+        """Fleet obs view. In-process shard members already feed this
+        process's registry, so the local snapshot is the whole story;
+        proc members ship their snapshots on the ``stats`` reply and the
+        merge stitches their spans under the router's dispatch spans."""
+        local = obs_export.snapshot()
+        if not self.config.procs:
+            return local
+        per = self.stats()
+        return obs_export.merge(
+            [local] + [s["obs"] for s in per.values()
+                       if isinstance(s, dict) and s.get("obs")])
+
     # -- admission -----------------------------------------------------------
     def submit(self, request) -> Future:
-        """Fan one read to every live shard; Future[SearchResult]."""
+        """Fan one read to every live shard; Future[SearchResult].
+
+        Admission mints the trace id: the router's root span covers the
+        whole scatter-gather (closed when the gathered future resolves),
+        one ``shard_exec`` child per dispatch, and — for proc shards —
+        the shard's own pipeline spans stitch under that child across the
+        process boundary.
+        """
         req, n_kmers = service_mod.normalize_request(request, self._k)
         rid = req.request_id
         if rid is None:
             rid = next(self._next_rid)
         req = service_mod.SearchRequest(read=req.read, request_id=rid)
         g = _Gather(self, rid, n_kmers)
+        trc = obs_trace.DEFAULT
+        ctx = None
+        if trc.enabled:
+            root = trc.start("request", tier="scatter", rid=rid)
+            ctx = root.context()
+            g.future.add_done_callback(lambda f: root.end(
+                status="error" if (f.cancelled() or f.exception())
+                else "ok"))
         with self._lock:
             if self._closed:
                 raise ScatterError("scatter router is closed")
@@ -493,9 +528,9 @@ class ScatterGatherRouter:
             if not sh.alive:
                 g.shard_lost(sh.id)
             elif sh.sched is not None:
-                self._dispatch_local(sh, g, req)
+                self._dispatch_local(sh, g, req, trace=ctx)
             else:
-                self._dispatch_proc(sh, g, req)
+                self._dispatch_proc(sh, g, req, trace=ctx)
         return g.future
 
     def search(self, reads) -> List[service_mod.SearchResult]:
@@ -503,7 +538,8 @@ class ScatterGatherRouter:
         return [f.result() for f in [self.submit(r) for r in reads]]
 
     def _dispatch_local(self, sh: _Shard, g: _Gather,
-                        req: service_mod.SearchRequest) -> None:
+                        req: service_mod.SearchRequest, *,
+                        trace=None) -> None:
         def _cb(f: Future) -> None:
             err = f.exception()
             if err is not None:
@@ -511,25 +547,35 @@ class ScatterGatherRouter:
             else:
                 g.shard_done(sh.id, f.result())
         try:
-            sh.sched.submit(req).add_done_callback(_cb)
+            sh.sched.submit(req, trace=trace).add_done_callback(_cb)
         except Exception as e:  # noqa: BLE001 - closed scheduler = dead
             g.shard_lost(sh.id) if isinstance(e, RuntimeError) \
                 else g.shard_failed(sh.id, e)
 
     def _dispatch_proc(self, sh: _Shard, g: _Gather,
-                       req: service_mod.SearchRequest) -> None:
+                       req: service_mod.SearchRequest, *,
+                       trace=None) -> None:
+        trc = obs_trace.DEFAULT
+        span = (trc.start("shard_exec", trace=trace, shard=sh.id,
+                          rid=req.request_id)
+                if trc.enabled and trace is not None else None)
         with self._lock:
             if not sh.alive:
+                if span is not None:
+                    span.end(status="error", error="shard dead")
                 g.shard_lost(sh.id)
                 return
             mid = next(self._mid)
-            self._pending[mid] = (sh.id, "query", g)
+            self._pending[mid] = (sh.id, "query", g, span)
         try:
             sh.wire.send(ipc.Request(
-                mid, "query", (req.request_id, req.read)))
+                mid, "query", (req.request_id, req.read),
+                trace=None if span is None else span.context()))
         except ipc.WireClosed:
             with self._lock:
                 self._pending.pop(mid, None)
+            if span is not None:
+                span.end(status="error", error=f"shard {sh.id} died")
             self._on_shard_death(sh)
             g.shard_lost(sh.id)
 
@@ -549,7 +595,9 @@ class ScatterGatherRouter:
                 self._idle.notify_all()
             if entry is None:
                 continue
-            _, kind, ctx = entry
+            _, kind, ctx, span = entry
+            if span is not None:
+                span.end(status="ok" if msg.error is None else "error")
             if kind == "query":
                 if msg.error is not None:
                     ctx.shard_failed(sh.id, msg.error)
@@ -577,7 +625,12 @@ class ScatterGatherRouter:
             pass
         if sh.proc is not None and not sh.proc.is_alive():
             sh.proc.join(timeout=1)   # reap, don't leave a zombie
-        for _, (_, kind, ctx) in orphaned:
+        # orphaned dispatch spans close with ERROR — a kill -9'd shard's
+        # in-flight work must show up in the trace, not leak open
+        for _, (_, _, _, span) in orphaned:
+            if span is not None:
+                span.end(status="error", error=f"shard {sh.id} died")
+        for _, (_, kind, ctx, _) in orphaned:
             if kind == "query":
                 # no re-route exists: this shard held the ONLY copy of
                 # its partition. The gather decides what its death means
@@ -675,7 +728,7 @@ class ScatterGatherRouter:
         fut: Future = Future()
         with self._lock:
             mid = next(self._mid)
-            self._pending[mid] = (sh.id, "shutdown", fut)
+            self._pending[mid] = (sh.id, "shutdown", fut, None)
         try:
             sh.wire.send(ipc.Request(mid, "shutdown"))
             fut.result(timeout=60)

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import queue as queue_mod
 import threading
 import time
@@ -53,8 +54,14 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import service as service_mod
 from repro.serving.autoscale import AdmissionPolicy
+
+# unique per-scheduler label (replica ids repeat across independent
+# schedulers in one process; the registry series must not)
+_SCHED_IDS = itertools.count()
 
 __all__ = [
     "SchedulerConfig",
@@ -135,6 +142,9 @@ class _Pending:
     n_kmers: int
     future: Future
     t_enq: float
+    # (trace_id, parent_span_id) minted at admission — locally, or in the
+    # gateway process when the request came over an IPC frame
+    trace: Optional[Tuple[str, Optional[str]]] = None
 
 
 @dataclasses.dataclass
@@ -144,6 +154,7 @@ class _PendingWrite:
     future: Future
     t_enq: float
     seq: Optional[int] = None    # router-assigned fleet sequence number
+    trace: Optional[Tuple[str, Optional[str]]] = None
 
 
 class AsyncScheduler:
@@ -180,6 +191,18 @@ class AsyncScheduler:
                                      # (alternation vs overdue queries)
         self.stats: Deque[ClusterStats] = collections.deque(
             maxlen=self.config.stats_window)
+        labels = {"tier": "scheduler", "replica": replica_id,
+                  "sched": next(_SCHED_IDS)}
+        reg = obs_metrics.DEFAULT
+        self._obs_flushes = {
+            reason: reg.counter("scheduler.flushes", reason=reason,
+                                **labels)
+            for reason in (FLUSH_FULL, FLUSH_DEADLINE, FLUSH_DRAIN)}
+        self._obs_queue_ms = reg.histogram("scheduler.queue_ms", **labels)
+        self._obs_wall_ms = reg.histogram("scheduler.wall_ms", **labels)
+        self._obs_writes = reg.counter("scheduler.write_batches", **labels)
+        self._obs_write_reads = reg.counter("scheduler.write_reads",
+                                            **labels)
         # the double buffer: flusher blocks here once `pipeline_depth`
         # batches are dispatched but not yet materialized
         self._handoff: queue_mod.Queue = queue_mod.Queue(
@@ -213,18 +236,27 @@ class AsyncScheduler:
         return self._svc.cache_stats()
 
     # -- admission ----------------------------------------------------------
-    def submit(self, request: Union[service_mod.SearchRequest, np.ndarray]
+    def submit(self, request: Union[service_mod.SearchRequest, np.ndarray],
+               *, trace: Optional[Tuple[str, Optional[str]]] = None
                ) -> Future:
-        """Enqueue one read; returns a Future resolving to SearchResult."""
-        req, n_kmers = self._svc._normalize(request)
-        return self._enqueue(req, n_kmers)
+        """Enqueue one read; returns a Future resolving to SearchResult.
 
-    def _enqueue(self, req: service_mod.SearchRequest,
-                 n_kmers: int) -> Future:
+        ``trace`` parents this request's spans under an admission span
+        minted elsewhere (the fabric gateway / scatter router); None
+        mints a fresh trace id here.
+        """
+        req, n_kmers = self._svc._normalize(request)
+        return self._enqueue(req, n_kmers, trace=trace)
+
+    def _enqueue(self, req: service_mod.SearchRequest, n_kmers: int, *,
+                 trace: Optional[Tuple[str, Optional[str]]] = None
+                 ) -> Future:
         """Admission for an already-normalized request (router fast path)."""
         bucket = self._svc.bucket_for(n_kmers)
         fut: Future = Future()
         now = time.monotonic()
+        if trace is None and obs_trace.DEFAULT.enabled:
+            trace = (obs_trace.DEFAULT.mint_trace(), None)
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
@@ -242,7 +274,7 @@ class AsyncScheduler:
             pending = _Pending(
                 request=service_mod.SearchRequest(read=req.read,
                                                   request_id=rid),
-                n_kmers=n_kmers, future=fut, t_enq=now)
+                n_kmers=n_kmers, future=fut, t_enq=now, trace=trace)
             self._queues.setdefault(bucket, collections.deque()
                                     ).append(pending)
             self._outstanding += 1
@@ -252,7 +284,9 @@ class AsyncScheduler:
         return fut
 
     def submit_insert(self, reads, file_ids=None, *,
-                      seq: Optional[int] = None) -> Future:
+                      seq: Optional[int] = None,
+                      trace: Optional[Tuple[str, Optional[str]]] = None
+                      ) -> Future:
         """Admit one write batch; returns a Future[InsertAck].
 
         Requires a live-index service (one exposing ``apply_insert`` —
@@ -284,10 +318,12 @@ class AsyncScheduler:
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            if trace is None and obs_trace.DEFAULT.enabled:
+                trace = (obs_trace.DEFAULT.mint_trace(), None)
             self._writes.append(_PendingWrite(
                 reads=reads, file_ids=fids, future=fut,
                 t_enq=time.monotonic(),
-                seq=None if seq is None else int(seq)))
+                seq=None if seq is None else int(seq), trace=trace))
             self._outstanding += 1
             self._work.notify_all()
         return fut
@@ -403,16 +439,29 @@ class AsyncScheduler:
 
     def _apply_writes(self, writes: List[_PendingWrite]) -> None:
         """Apply a write burst (flusher thread, outside the lock)."""
+        trc = obs_trace.DEFAULT
         for w in writes:
+            t0 = time.monotonic()
             try:
                 version, seq = self._svc.apply_insert(
                     w.reads, w.file_ids, seq=w.seq)
                 w.future.set_result(InsertAck(
                     base_version=version, delta_seq=seq,
                     n_reads=int(w.reads.shape[0])))
+                status = "ok"
             except Exception as e:  # noqa: BLE001 - forward to futures
                 if not w.future.done():
                     w.future.set_exception(e)
+                status = "error"
+            if w.trace is not None and trc.enabled:
+                trc.emit("replica_apply", w.trace[0], w.trace[1],
+                         t0, time.monotonic(), status=status,
+                         attrs={"replica": self.replica_id,
+                                "n_reads": int(w.reads.shape[0]),
+                                "queue_ms": (t0 - w.t_enq) * 1e3})
+        self._obs_writes.inc(len(writes))
+        self._obs_write_reads.inc(sum(int(w.reads.shape[0])
+                                      for w in writes))
         with self._lock:
             self._inflight -= 1
             self._outstanding -= len(writes)
@@ -480,11 +529,14 @@ class AsyncScheduler:
                 cache = self._svc.kmer_cache
                 h0, l0 = ((cache.hits, cache.lookups)
                           if cache is not None else (0, 0))
-                out = self._svc._execute(
-                    bucket, *self._svc._assemble(pairs, bucket))
+                batch_args = self._svc._assemble(pairs, bucket)
+                t_asm = time.monotonic()
+                out = self._svc._execute(bucket, *batch_args)
+                t_exec = time.monotonic()
                 dh, dl = ((cache.hits - h0, cache.lookups - l0)
                           if cache is not None else (0, 0))
-                self._handoff.put((bucket, take, out, reason, t0, dh, dl))
+                self._handoff.put((bucket, take, out, reason, t0, t_asm,
+                                   t_exec, dh, dl))
             except Exception as e:  # noqa: BLE001 - forward to futures
                 self._fail_batch(take, e)
 
@@ -493,7 +545,8 @@ class AsyncScheduler:
             item = self._handoff.get()
             if item is None:
                 return
-            bucket, take, out, reason, t0, cache_hits, cache_lookups = item
+            bucket, take, out, reason, t0, t_asm, t_exec, cache_hits, \
+                cache_lookups = item
             pairs = [(p.request, p.n_kmers) for p in take]
             try:
                 results = self._svc._finalize(pairs, bucket, out)
@@ -511,11 +564,19 @@ class AsyncScheduler:
                 wall_ms=wall_ms,
                 cache_hits=cache_hits, cache_lookups=cache_lookups)
             self.stats.append(stats)
-            self._svc.batch_stats.append(service_mod.BatchStats(
+            self._obs_flushes[reason].inc()
+            self._obs_queue_ms.observe(stats.queue_ms)
+            self._obs_wall_ms.observe(wall_ms)
+            self._svc._record_batch(service_mod.BatchStats(
                 bucket=bucket, n_requests=len(take), batch_rows=rows,
                 pad_rows=rows - len(take),
                 pad_kmers=rows * bucket - sum(p.n_kmers for p in take),
                 wall_ms=wall_ms))
+            service_mod.emit_request_spans(
+                [(p.trace, p.t_enq, p.request.request_id) for p in take],
+                bucket=bucket, t0=t0, t_asm=t_asm, t_exec=t_exec,
+                t_done=now, replica=self.replica_id,
+                version=self._svc.version)
             if self.admission is not None:
                 self.admission.observe_batch(stats, now)
             if self._on_batch is not None:

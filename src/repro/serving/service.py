@@ -37,6 +37,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -46,9 +47,16 @@ import numpy as np
 
 from repro.index import packed, query, store
 from repro.index import state as state_mod
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import kmer_cache as kmer_cache_mod
 
 BACKENDS = ("jnp", "idl_probe", "sharded")
+
+# distinguishes each service instance's counter series in the process
+# registry (a router's replicas must not share one series, or the
+# router-level sum would double-count)
+_SERVICE_IDS = itertools.count()
 
 
 def next_pow2(n: int) -> int:
@@ -162,6 +170,35 @@ class BatchStats:
     wall_ms: float
 
 
+def emit_request_spans(entries, *, bucket: int, t0: float, t_asm: float,
+                       t_exec: float, t_done: float, replica: int = 0,
+                       version: int = 0, status: str = "ok") -> None:
+    """Emit the per-request span chain for one finalized batch.
+
+    ``entries`` is ``[(trace_ctx, t_enq, request_id), ...]`` where
+    ``trace_ctx`` is ``(trace_id, parent_span_id_or_None)`` minted at
+    admission (possibly in another process — the fabric gateway's ctx
+    rides the IPC frame). Each request gets a root ``request`` span with
+    ``queue_wait → assemble → execute → finalize`` children; the batch
+    stages share their (batch-level) boundaries, the queue wait is the
+    request's own. The whole batch is ONE
+    :meth:`~repro.obs.trace.Tracer.emit_request_chains` call (batch-
+    invariant work hoisted out of the per-request loop), entirely off the
+    submit hot path — the pipeline only stamps monotonic times it mostly
+    takes anyway."""
+    trc = obs_trace.DEFAULT
+    if not trc.enabled:
+        return
+    stages = (("assemble", t0, t_asm), ("execute", t_asm, t_exec),
+              ("finalize", t_exec, t_done))
+    trc.emit_request_chains(
+        [(ctx[0], ctx[1], t_enq, rid)
+         for ctx, t_enq, rid in entries if ctx is not None],
+        t0, stages, t_done, status=status,
+        shared_attrs={"bucket": bucket, "replica": replica,
+                      "version": version})
+
+
 # ---------------------------------------------------------------------------
 # The per-(engine-kind) MSMT postlude — ONE threshold path (query.py).
 # ---------------------------------------------------------------------------
@@ -212,9 +249,29 @@ class GeneSearchService:
             raise ValueError(
                 f"kmer_cache packs kmers into uint64 keys, so k <= 32 "
                 f"(index has k={self._k})")
-        # bounded: a long-running service must not leak telemetry
+        # bounded: a long-running service must not leak telemetry. The
+        # deque keeps the last-N per-batch records (request_latencies_ms
+        # needs individual batches); the aggregate views below read the
+        # registry counters fed by _record_batch — the single feed point
+        # for the sync flush AND the async scheduler's completer.
         self.batch_stats: Deque[BatchStats] = collections.deque(
             maxlen=self.config.stats_window)
+        meta = self._state.meta
+        labels = {"tier": "service", "engine": meta.engine,
+                  "scheme": meta.scheme, "backend": self.config.backend,
+                  "service": next(_SERVICE_IDS)}
+        reg = obs_metrics.DEFAULT
+        self._obs_requests = reg.counter("serving.requests", **labels)
+        self._obs_batches = reg.counter("serving.batches", **labels)
+        self._obs_batch_rows = reg.counter("serving.batch_rows", **labels)
+        self._obs_pad_rows = reg.counter("serving.pad_rows", **labels)
+        self._obs_pad_kmers = reg.counter("serving.pad_kmers", **labels)
+        self._obs_wall_ms = reg.histogram("serving.batch_wall_ms", **labels)
+        # sync-path trace bookkeeping: request id -> (trace ctx, t_enq).
+        # The async scheduler keeps its own (_Pending.trace) and never
+        # routes through submit(), so the two never mix.
+        self._admitted: Dict[int, Tuple[Tuple[str, Optional[str]], float]] \
+            = {}
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -291,6 +348,11 @@ class GeneSearchService:
                 f"unclaimed result)")
         self._next_id = max(self._next_id, rid) + 1
         self._inflight.add(rid)
+        if obs_trace.DEFAULT.enabled:
+            # trace id minted at admission; the span chain is emitted in
+            # one pass when the batch finalizes (_flush_bucket)
+            self._admitted[rid] = ((obs_trace.DEFAULT.mint_trace(), None),
+                                   time.monotonic())
         req = SearchRequest(read=request.read, request_id=rid)
         bucket = self.bucket_for(n_kmers)
         self._pending.setdefault(bucket, []).append((req, n_kmers))
@@ -515,20 +577,44 @@ class GeneSearchService:
             queue[:self.config.max_batch], queue[self.config.max_batch:]
         if not take:
             return
-        t0 = time.perf_counter()
-        out = self._execute(bucket, *self._assemble(take, bucket))
+        t0 = time.monotonic()
+        batch, valid, need = self._assemble(take, bucket)
+        t_asm = time.monotonic()
+        out = self._execute(bucket, batch, valid, need)
+        t_exec = time.monotonic()
         for res in self._finalize(take, bucket, out):
             self._results[res.request_id] = res
-        wall_ms = (time.perf_counter() - t0) * 1e3
-        self.batch_stats.append(BatchStats(
+        t_done = time.monotonic()
+        self._record_batch(BatchStats(
             bucket=bucket, n_requests=len(take),
             batch_rows=self.config.max_batch,
             pad_rows=self.config.max_batch - len(take),
             pad_kmers=self.config.max_batch * bucket
             - sum(n_k for _, n_k in take),
-            wall_ms=wall_ms))
+            wall_ms=(t_done - t0) * 1e3))
+        entries = []
+        for req, _ in take:
+            ctx, t_enq = self._admitted.pop(req.request_id, (None, t0))
+            entries.append((ctx, t_enq, req.request_id))
+        emit_request_spans(entries, bucket=bucket, t0=t0, t_asm=t_asm,
+                           t_exec=t_exec, t_done=t_done,
+                           version=self._version)
 
     # -- observability ------------------------------------------------------
+    def _record_batch(self, bs: BatchStats) -> None:
+        """The single batch-telemetry feed: window the record (the deque
+        keeps per-batch detail for ``request_latencies_ms``) and mirror
+        the aggregates into the process registry — both the sync flush
+        and the async scheduler's completer land here, so the aggregate
+        views below hold for either path."""
+        self.batch_stats.append(bs)
+        self._obs_requests.inc(bs.n_requests)
+        self._obs_batches.inc()
+        self._obs_batch_rows.inc(bs.batch_rows)
+        self._obs_pad_rows.inc(bs.pad_rows)
+        self._obs_pad_kmers.inc(bs.pad_kmers)
+        self._obs_wall_ms.observe(bs.wall_ms)
+
     def compile_counts(self) -> Dict[int, int]:
         """Compiled-executable count per bucket (the compile-once proof).
 
@@ -545,12 +631,15 @@ class GeneSearchService:
                 if self.kmer_cache is not None else None)
 
     def requests_served(self) -> int:
-        return sum(s.n_requests for s in self.batch_stats)
+        """Lifetime requests served — a view over the registry counter
+        (the deque is a bounded window; the counter never forgets)."""
+        return int(self._obs_requests.value)
 
     def occupancy(self) -> float:
-        """Fraction of batch rows that carried real requests."""
-        rows = sum(s.batch_rows for s in self.batch_stats)
-        return self.requests_served() / rows if rows else 0.0
+        """Fraction of batch rows that carried real requests (lifetime,
+        registry-backed)."""
+        rows = self._obs_batch_rows.value
+        return self._obs_requests.value / rows if rows else 0.0
 
     def request_latencies_ms(self) -> List[float]:
         """Per-request latency: each request is charged its batch's wall."""

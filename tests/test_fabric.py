@@ -17,8 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import idl
 from repro.index import store
+from repro.obs import export as obs_export
 from repro.index.engines import BitSlicedIndex
 from repro.serving import (
     FabricConfig,
@@ -256,5 +258,102 @@ class TestKmerCacheAcrossTheFleet:
             _assert_matches(fab.search(stream), oracle, stream)
             cs2 = fab.cache_stats()
             assert cs2 is not None and cs2["hits"] > 0
+        finally:
+            fab.close()
+
+class TestObservabilityAcrossTheFleet:
+    """End-to-end tracing through real process boundaries: the gateway's
+    trace context rides the IPC frame, the worker opens child spans under
+    it, and ``obs_snapshot()`` stitches one tree out of many pids. A
+    kill -9 must error-close the dead worker's dispatch spans instead of
+    leaking them, while the requests themselves still resolve."""
+
+    def _stitched_traces(self, fab):
+        """Traces in the fleet snapshot whose records span >1 process."""
+        snap = fab.obs_snapshot()
+        return {tid: recs
+                for tid, recs in obs_export.traces_of(snap).items()
+                if len({r["pid"] for r in recs}) > 1}
+
+    def test_trace_stitches_across_processes(self, snap, base_engine,
+                                             queries, tmp_path):
+        obs.reset()
+        fab = ProcessFabric(snap, _fab_cfg(),
+                            journal_path=str(tmp_path / "wal.idlj"))
+        try:
+            _assert_matches(fab.search(queries), base_engine, queries)
+            # root-closure callbacks and worker finalize can trail the
+            # future resolution by a beat; poll the fleet snapshot
+            deadline = time.monotonic() + 30
+            stitched = self._stitched_traces(fab)
+            while time.monotonic() < deadline and \
+                    len(stitched) < len(queries):
+                time.sleep(0.05)
+                stitched = self._stitched_traces(fab)
+            assert len(stitched) >= len(queries)
+            gw_pid = os.getpid()
+            for recs in stitched.values():
+                by_name = {}
+                for r in recs:
+                    by_name.setdefault(r["name"], []).append(r)
+                # gateway root, opened at submit, closed on the future
+                (root,) = [r for r in by_name["request"]
+                           if r["pid"] == gw_pid]
+                assert root["parent"] is None
+                assert root["status"] == "ok"
+                assert root["attrs"]["tier"] == "gateway"
+                # gateway-side dispatch span, child of the root
+                (hop,) = by_name["worker_exec"]
+                assert hop["pid"] == gw_pid
+                assert hop["parent"] == root["span"]
+                assert hop["status"] == "ok"
+                # worker-side service chain, parented UNDER the dispatch
+                # span minted in the gateway process
+                (wreq,) = [r for r in by_name["request"]
+                           if r["pid"] != gw_pid]
+                assert wreq["parent"] == hop["span"]
+                for stage in ("queue_wait", "assemble", "execute",
+                              "finalize"):
+                    (srec,) = by_name[stage]
+                    assert srec["pid"] == wreq["pid"]
+                    assert srec["parent"] == wreq["span"]
+                # one trace id end to end — every record agrees
+                assert len({r["trace"] for r in recs}) == 1
+        finally:
+            fab.close()
+
+    def test_kill9_error_closes_orphaned_spans(self, snap, oracle, reads,
+                                               queries, tmp_path):
+        obs.reset()
+        fab = ProcessFabric(snap, _fab_cfg(policy="round_robin"),
+                            journal_path=str(tmp_path / "wal.idlj"))
+        try:
+            fab.insert(reads[3:5], DELTA_FIDS).result(timeout=120)
+            fab.search(queries)                    # warm both workers
+            stream = [queries[i % len(queries)] for i in range(24)]
+            futures = [fab.submit(q) for q in stream]
+            victim_id, victim_pid = sorted(fab.worker_pids().items())[0]
+            os.kill(victim_pid, signal.SIGKILL)
+            results = [f.result(timeout=120) for f in futures]
+            _assert_matches(results, oracle, stream)
+
+            def error_closed():
+                return [r for r in obs_export.snapshot()["spans"]
+                        if r["name"] == "worker_exec"
+                        and r["status"] == "error"
+                        and r.get("attrs", {}).get("error")
+                        == f"worker {victim_id} died"]
+
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline and not error_closed():
+                time.sleep(0.05)
+            orphans = error_closed()
+            assert orphans, "kill -9 left dispatch spans open"
+            # the re-dispatched requests stayed on their original traces:
+            # each orphaned span's trace also has an ok worker_exec hop
+            ok_hops = {r["trace"] for r in obs_export.snapshot()["spans"]
+                       if r["name"] == "worker_exec"
+                       and r["status"] == "ok"}
+            assert any(r["trace"] in ok_hops for r in orphans)
         finally:
             fab.close()
